@@ -1,0 +1,90 @@
+"""Framework microbenchmarks: scan-queue ops, device-queue steps, kernels."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _time_us(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_scan_queue():
+    from repro.core.scan_queue import QueueState, queue_scan
+    rows = []
+    for n in (1024, 16384, 262144):
+        rng = np.random.default_rng(0)
+        e = jnp.array(rng.random(n) < 0.6)
+        v = jnp.ones((n,), bool)
+        st = QueueState.empty()
+        f = jax.jit(lambda a, b: queue_scan(a, QueueState.empty(), valid=b))
+        us = _time_us(f, e, v)
+        rows.append((f"scan_queue_n{n}", us, f"{n/us:.1f} ops/us"))
+    return rows
+
+
+def bench_segscan_kernel():
+    from repro.kernels.segscan import queue_scan_pallas
+    rows = []
+    n = 4096
+    rng = np.random.default_rng(1)
+    e = jnp.array(rng.random(n) < 0.5)
+    v = jnp.ones((n,), bool)
+    us = _time_us(lambda a, b: queue_scan_pallas(a, b, jnp.int32(0),
+                                                 jnp.int32(-1)), e, v,
+                  iters=5)
+    rows.append((f"segscan_pallas_interp_n{n}", us,
+                 "interpret-mode (correctness path)"))
+    return rows
+
+
+def bench_device_queue():
+    from repro.dqueue import DeviceQueue
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(n_data=len(jax.devices()))
+    dq = DeviceQueue(mesh, "data", cap=1024, payload_width=4,
+                     ops_per_shard=256)
+    state = dq.init_state()
+    n = dq.n_shards * dq.L
+    rng = np.random.default_rng(2)
+    is_enq = jnp.array(rng.random(n) < 0.6)
+    valid = jnp.ones((n,), bool)
+    payload = jnp.array(rng.integers(0, 100, (n, 4)), jnp.int32)
+
+    def step(s):
+        out = dq.step(s, is_enq, valid, payload)
+        return out[0]
+
+    us = _time_us(step, state, iters=10)
+    return [(f"device_queue_step_{n}ops", us, f"{n/us:.2f} ops/us")]
+
+
+def bench_attention():
+    from repro.kernels.flash_attention import attention_ref
+    rows = []
+    rng = np.random.default_rng(3)
+    B, H, L, D = 1, 8, 1024, 64
+    q = jnp.array(rng.standard_normal((B * H, L, D)), jnp.bfloat16)
+    f = jax.jit(lambda q: attention_ref(q, q, q))
+    us = _time_us(f, q, iters=5)
+    flops = 4 * B * H * L * L * D
+    rows.append((f"attention_ref_L{L}", us, f"{flops/us/1e3:.1f} GF/s"))
+    return rows
+
+
+def run_all():
+    rows = []
+    for fn in (bench_scan_queue, bench_segscan_kernel, bench_device_queue,
+               bench_attention):
+        rows += fn()
+    return rows

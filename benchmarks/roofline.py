@@ -1,0 +1,145 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute_s    = HLO_flops_per_device / 197e12        (bf16 peak per chip)
+  memory_s     = HLO_bytes_per_device / 819e9         (HBM bw)
+  collective_s = collective_bytes_per_device / 50e9   (per-link ICI, 1-link
+                                                       conservative)
+dominant term = the bottleneck; MODEL_FLOPS = 6·N·D (train) or 2·N_active·D
+(inference); useful-compute ratio = MODEL_FLOPS_per_dev / HLO_flops; the
+roofline fraction (the §Perf score) = compute_s / dominant_s.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+_PARAM_CACHE = {}
+
+
+def _param_counts(arch: str):
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config(arch)
+    p, _ = build_model(cfg).abstract_params()
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+    n_active = n
+    if cfg.n_experts:
+        dead = (cfg.n_layers * (cfg.n_experts - cfg.top_k)
+                * 3 * cfg.d_model * cfg.d_ff)
+        n_active = n - dead
+    _PARAM_CACHE[arch] = (n, n_active)
+    return n, n_active
+
+
+def model_flops(rec) -> float:
+    """Global useful model flops for the lowered step."""
+    n, n_active = _param_counts(rec["arch"])
+    seq, gb, kind = rec["seq"], rec["global_batch"], rec["kind"]
+    if kind == "train":
+        return 6.0 * n_active * seq * gb
+    if kind == "prefill":
+        return 2.0 * n_active * seq * gb
+    return 2.0 * n_active * gb  # decode: one token per sequence
+
+
+COSTING_DIR = Path(__file__).resolve().parents[1] / "experiments" / "costing"
+
+
+def _costing(arch, shape):
+    p = COSTING_DIR / f"{arch}__{shape}.json"
+    if p.exists():
+        rec = json.load(open(p))
+        if not rec.get("skipped"):
+            return rec
+    return None
+
+
+def analyze_cell(rec) -> dict:
+    chips = rec["chips"]
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    coll_dev = rec["collectives"].get("total", 0)
+    # loop-corrected costs (launch.costrun: unrolled reduced-depth lowering,
+    # exact affine extrapolation in layer count)
+    cost = _costing(rec["arch"], rec["shape"])
+    corrected = cost is not None
+    if corrected:
+        scale = 1.0
+        if rec["mesh"].get("pod"):
+            scale = 0.5  # pod2 splits the same global batch over 2x chips
+        flops_dev = cost["flops"] * scale
+        bytes_dev = cost["bytes"] * scale
+        coll_dev = max(coll_dev, cost["coll"] * scale)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    dominant_s = max(compute_s, memory_s, coll_s)
+    dom = {compute_s: "compute", memory_s: "memory",
+           coll_s: "collective"}[dominant_s]
+    mf = model_flops(rec)
+    useful_ratio = mf / chips / max(flops_dev, 1)
+    mfu_proxy = (mf / chips / PEAK_FLOPS) / max(dominant_s, 1e-30)
+    return {
+        "cell": rec["cell"], "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["mesh"].get("pod") else "16x16",
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dom,
+        "model_flops": mf, "useful_ratio": useful_ratio,
+        "mfu_proxy": mfu_proxy, "loop_corrected": corrected,
+        "peak_gib": rec["memory"]["peak_bytes_per_device"] / 2**30,
+        "peak_gib_tpu": rec["memory"]["peak_bytes_tpu_corrected"] / 2**30,
+    }
+
+
+def load_all(pattern="*.json"):
+    out = []
+    for f in sorted(glob.glob(str(DRYRUN_DIR / pattern))):
+        rec = json.load(open(f))
+        if "skipped" in rec:
+            continue
+        out.append(analyze_cell(rec))
+    return out
+
+
+def markdown_table(rows, only_mesh=None) -> str:
+    hdr = ("| cell | compute s | memory s | collective s | dominant | "
+           "useful flops ratio | MFU proxy | peak GiB (tpu-corr) |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if only_mesh and r["mesh"] != only_mesh:
+            continue
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_proxy']:.3f} | {r['peak_gib']:.1f} "
+            f"({r['peak_gib_tpu']:.1f}) |")
+    return hdr + "\n".join(lines)
+
+
+def bench_rows():
+    """CSV rows for benchmarks.run (one line per dry-run cell)."""
+    rows = []
+    for r in load_all():
+        rows.append((f"roofline_{r['cell']}", r["dominant"],
+                     f"mfu_proxy={r['mfu_proxy']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print(markdown_table(rows, only_mesh="16x16"))

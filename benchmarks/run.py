@@ -1,0 +1,39 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow)")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    from . import paper_figs
+    for fig in (paper_figs.fig2_queue, paper_figs.fig3_stack,
+                paper_figs.fig4_rate):
+        for name, n, p, mean_rounds, cnt in fig(full=args.full):
+            # "us_per_call" column carries the figure's y-value
+            print(f"{name}_n{n}_p{p},{mean_rounds:.2f},"
+                  f"avg_rounds_per_request({cnt} reqs)")
+            sys.stdout.flush()
+
+    from . import micro
+    for name, us, derived in micro.run_all():
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    if not args.skip_roofline:
+        from . import roofline
+        try:
+            for name, dom, derived in roofline.bench_rows():
+                print(f"{name},0,{dom} {derived}")
+        except Exception as e:  # dry-run artifacts missing
+            print(f"roofline,0,unavailable: {e}")
+
+
+if __name__ == '__main__':
+    main()

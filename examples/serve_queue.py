@@ -1,0 +1,16 @@
+"""End-to-end serving driver: a small LM served with batched requests that
+flow through the SKUEUE distributed request queue (continuous batching).
+
+This is the paper's use case as a production feature: cross-host FIFO
+admission is the queue's sequential consistency, not a scheduler heuristic.
+
+Run:  PYTHONPATH=src python examples/serve_queue.py [--arch llama3_8b]
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "llama3_8b",
+                                             "--requests", "10"])
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

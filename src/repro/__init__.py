@@ -1,0 +1,3 @@
+"""SKUEUE on TPU: a sequentially-consistent distributed queue as a JAX
+framework substrate.  See README.md / DESIGN.md."""
+__version__ = "1.0.0"

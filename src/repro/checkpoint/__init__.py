@@ -1,0 +1,5 @@
+from .checkpointer import (latest_step, load_checkpoint, restore_sharded,
+                           save_checkpoint)
+
+__all__ = ["latest_step", "load_checkpoint", "restore_sharded",
+           "save_checkpoint"]

@@ -1,0 +1,116 @@
+"""Sharded checkpointing with atomic commit and elastic restore.
+
+Layout:  <dir>/step_<N>/manifest.json + one .npy per leaf (keypath-named).
+Writes go to ``step_<N>.tmp`` and are renamed on completion — a crash
+mid-save never corrupts the latest checkpoint (restart-safe).
+
+``restore_sharded`` places each leaf with the shardings of the *current*
+mesh, which may differ from the mesh that saved it — that is the elastic
+JOIN/LEAVE path at the training level: consistent hashing moves the DHT's
+keys, checkpoint-reshard moves the model's (DESIGN.md §6).  At fleet scale
+each host writes its own shard files; on this single-host container the
+full arrays are written once (the manifest format is host-count agnostic).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flat(tree):
+    leaves, treedef = jax.tree.flatten_with_path(tree), None
+    return leaves
+
+
+def _key_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "__".join(out) or "root"
+
+
+def save_checkpoint(ckpt_dir, step: int, tree, meta: Optional[dict] = None,
+                    blocking: bool = True):
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    final = ckpt_dir / f"step_{step}"
+    if final.exists():
+        return final
+    tmp.mkdir(parents=True, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {"step": step, "meta": meta or {}, "leaves": []}
+    host_arrays = []
+    for path, leaf in leaves:
+        name = _key_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["leaves"].append(
+            {"key": name, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        host_arrays.append((name, arr))
+
+    def _write():
+        for name, arr in host_arrays:
+            # raw-byte storage: np.save cannot roundtrip ml_dtypes (bf16);
+            # dtype/shape live in the manifest
+            raw = np.ascontiguousarray(arr).view(np.uint8)
+            np.save(tmp / f"{name}.npy", raw)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        os.replace(tmp, final)  # atomic commit
+
+    if blocking:
+        _write()
+    else:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    return final
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+             if not p.name.endswith(".tmp") and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir, step: Optional[int], like_tree):
+    """Load into the structure of ``like_tree`` (host numpy arrays)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    meta = {m["key"]: m for m in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    out = []
+    for path, leaf in flat:
+        name = _key_str(path)
+        raw = np.load(d / f"{name}.npy")
+        info = meta[name]
+        arr = raw.view(np.dtype(info["dtype"])).reshape(info["shape"])
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out), manifest
+
+
+def restore_sharded(ckpt_dir, step, like_tree, shardings):
+    """Load + device_put with the current mesh's shardings — the elastic
+    reshard path (works across different device counts / mesh shapes)."""
+    host, manifest = load_checkpoint(ckpt_dir, step, like_tree)
+    placed = jax.tree.map(
+        lambda arr, sh: jax.device_put(arr, sh), host, shardings)
+    return placed, manifest

@@ -1,0 +1,36 @@
+"""Deterministic pseudorandom hashing used across SKUEUE.
+
+The paper assumes "a publicly known pseudorandom hash function" both for node
+labels (LDB middle-node positions) and for the consistent-hashing DHT keys
+``k(p)``.  We use splitmix64: cheap, stateless, vectorizable in numpy and in
+JAX (uint32-pair variant for TPU, where uint64 is unavailable).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+_MASK = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def splitmix64(x) -> np.ndarray:
+    """Vectorized splitmix64 finalizer. Accepts int or uint64 array."""
+    z = (np.asarray(x, dtype=np.uint64) + _GOLDEN) & _MASK
+    z = ((z ^ (z >> np.uint64(30))) * _M1) & _MASK
+    z = ((z ^ (z >> np.uint64(27))) * _M2) & _MASK
+    return z ^ (z >> np.uint64(31))
+
+
+def hash01(x, salt: int = 0) -> np.ndarray:
+    """Hash ints to floats uniform in [0, 1).  Deterministic."""
+    with np.errstate(over="ignore"):
+        z = splitmix64(np.asarray(x, dtype=np.uint64) ^ splitmix64(np.uint64(salt)))
+    # 53-bit mantissa for an unbiased float64 in [0,1)
+    return (z >> np.uint64(11)).astype(np.float64) * (1.0 / (1 << 53))
+
+
+def position_key(pos, salt: int = 0xD47) -> np.ndarray:
+    """DHT key k(p) in [0,1) for queue position p (paper Sec. II-B)."""
+    return hash01(pos, salt=salt)

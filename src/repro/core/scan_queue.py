@@ -1,0 +1,269 @@
+"""TPU-native SKUEUE: the aggregation tree as an associative scan.
+
+The paper's Stages 1-3 (aggregate batches up the tree, assign intervals at
+the anchor, decompose down the tree) are a Blelloch exclusive prefix scan.
+Queue-state evolution under a request sequence is associative in the
+*min-plus (tropical) semiring*:
+
+    a single request acts on anchor state (f, l) = (first, last) as
+        ENQ:  f' = f,                 l' = l + 1
+        DEQ:  f' = min(f + 1, l + 1), l' = l
+    every composition stays in the 3-parameter family
+        T(A,B,C):  f' = min(f + A, l + B),  l' = l + C
+    with identity (0, +INF, 0) and composition
+        T1 ; T2 = (A1+A2, min(B1+A2, C1+B2), C1+C2).          (associative)
+
+Given the *exclusive* prefix state (f_i, l_i) of request i:
+        ENQ  ->  position l_i + 1
+        DEQ  ->  position f_i   if f_i <= l_i else ⊥
+
+The stack variant (Sec. VI) is the max-plus analogue on (last, ticket):
+        PUSH: l' = l + 1, t' = t + 1    POP: l' = max(l - 1, 0), t' = t
+        family  l' = max(l + a, b);  composition (a1+a2, max(b1+a2, b2)).
+        PUSH_i -> (pos l_i + 1, ticket t_i + 1)
+        POP_i  -> (pos l_i, bound t_i)  if l_i >= 1 else ⊥
+
+Consequences for TPU (DESIGN.md §2): the anchor is *virtual* (the carry is
+replicated, no hot node), a batch of requests costs one O(log) scan instead
+of O(log n) protocol rounds, and sequential consistency holds by
+construction because the scan order IS the total order ≺.
+
+Two distribution strategies are provided:
+  * ``*_scan`` — ``jax.lax.associative_scan`` over the flat request array
+    (GSPMD chooses the schedule; fine under pjit).
+  * ``sharded_queue_scan`` — explicit shard_map: local scan per device +
+    ``lax.ppermute`` hypercube scan over the device axis for the carries.
+    This is the literal ICI analogue of the paper's O(log n) aggregation
+    tree: ⌈log2 p⌉ permute rounds, constant bytes per round (Theorem 18's
+    O(log n)-size batches collapse to an (A,B,C) carry).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+INF = jnp.int32(2 ** 30)  # +infinity in the tropical semiring (no overflow:
+#                           compositions add at most O(batch) to it once)
+BOTTOM = jnp.int32(-1)
+
+
+class QueueState(NamedTuple):
+    """Replicated anchor state: occupied positions are [first, last]."""
+    first: jax.Array  # int32 scalar
+    last: jax.Array
+
+    @staticmethod
+    def empty() -> "QueueState":
+        return QueueState(jnp.int32(0), jnp.int32(-1))
+
+    @property
+    def size(self) -> jax.Array:
+        return self.last - self.first + 1
+
+
+class StackState(NamedTuple):
+    last: jax.Array    # top of stack; positions start at 1
+    ticket: jax.Array  # monotone push counter
+
+    @staticmethod
+    def empty() -> "StackState":
+        return StackState(jnp.int32(0), jnp.int32(0))
+
+
+# ------------------------------------------------------------ queue scan ---
+def queue_op_transforms(is_enq: jax.Array):
+    """Per-request (A, B, C) transforms. is_enq: bool/int array."""
+    e = is_enq.astype(jnp.int32)
+    A = 1 - e                      # ENQ: 0, DEQ: 1
+    B = jnp.where(e > 0, INF, 1)   # ENQ: inf, DEQ: 1
+    C = e                          # ENQ: 1, DEQ: 0
+    return A, B, C
+
+
+def queue_compose(t1, t2):
+    """(t1 then t2), elementwise; associative (used by associative_scan)."""
+    A1, B1, C1 = t1
+    A2, B2, C2 = t2
+    return (A1 + A2,
+            jnp.minimum(jnp.minimum(B1 + A2, C1 + B2), INF),
+            C1 + C2)
+
+
+def _exclusive(tr, fills=(0, INF, 0), axis=0):
+    """Inclusive scan results -> exclusive (shift right, identity first)."""
+    def shift(x, fill):
+        pad = jnp.full_like(lax.slice_in_dim(x, 0, 1, axis=axis), fill)
+        return lax.concatenate([pad, lax.slice_in_dim(x, 0, x.shape[axis] - 1,
+                                                      axis=axis)], axis)
+    return tuple(shift(x, f) for x, f in zip(tr, fills))
+
+
+def queue_scan(is_enq: jax.Array, state: QueueState,
+               valid: jax.Array | None = None
+               ) -> Tuple[jax.Array, jax.Array, QueueState]:
+    """Assign positions to a flat request batch (global order = array order).
+
+    Args:
+      is_enq: [n] bool — True for ENQUEUE, False for DEQUEUE.
+      state:  incoming anchor state.
+      valid:  [n] bool — padding mask (False entries are no-ops).
+    Returns:
+      positions [n] int32 (⊥ = -1 for unmatched dequeues; enqueue slots are
+      the DHT positions to PUT into), matched mask, new state.
+    """
+    if valid is not None:
+        # padded entries become identity transforms
+        e = is_enq & valid
+        tr = queue_op_transforms(e)
+        A, B, C = tr
+        A = jnp.where(valid, A, 0)
+        B = jnp.where(valid, B, INF)
+        C = jnp.where(valid, C, 0)
+        tr = (A, B, C)
+    else:
+        tr = queue_op_transforms(is_enq)
+    inc = lax.associative_scan(queue_compose, tr)
+    Ax, Bx, Cx = _exclusive(inc)
+    f_i = jnp.minimum(state.first + Ax, state.last + Bx)
+    l_i = state.last + Cx
+    pos = jnp.where(is_enq, l_i + 1, jnp.where(f_i <= l_i, f_i, BOTTOM))
+    matched = pos != BOTTOM
+    if valid is not None:
+        pos = jnp.where(valid, pos, BOTTOM)
+        matched = matched & valid
+    # total transform = last element of the inclusive scan
+    A_t, B_t, C_t = (x[-1] for x in inc)
+    new = QueueState(jnp.minimum(state.first + A_t, state.last + B_t),
+                     state.last + C_t)
+    return pos, matched, new
+
+
+# ------------------------------------------------------------ stack scan ---
+def stack_op_transforms(is_push: jax.Array):
+    p = is_push.astype(jnp.int32)
+    a = 2 * p - 1                        # PUSH: +1, POP: -1
+    b = jnp.where(p > 0, -INF, 0)        # POP clamps at 0
+    dt = p                               # ticket increment
+    return a, b, dt
+
+
+def stack_compose(t1, t2):
+    a1, b1, d1 = t1
+    a2, b2, d2 = t2
+    return (a1 + a2,
+            jnp.maximum(jnp.maximum(b1 + a2, b2), -INF),
+            d1 + d2)
+
+
+def stack_scan(is_push: jax.Array, state: StackState,
+               valid: jax.Array | None = None):
+    """Returns (positions, tickets, matched, new_state).  For pushes the
+    ticket is the element's unique ticket; for pops it is the bound t'."""
+    tr = stack_op_transforms(is_push if valid is None else (is_push & valid))
+    if valid is not None:
+        a, b, d = tr
+        a = jnp.where(valid, a, 0)
+        b = jnp.where(valid, b, -INF)
+        d = jnp.where(valid, d, 0)
+        tr = (a, b, d)
+    inc = lax.associative_scan(stack_compose, tr)
+    a_x, b_x, d_x = _exclusive(inc, fills=(0, -INF, 0))
+    l_i = jnp.maximum(state.last + a_x, b_x)
+    t_i = state.ticket + d_x
+    pos = jnp.where(is_push, l_i + 1, jnp.where(l_i >= 1, l_i, BOTTOM))
+    tick = jnp.where(is_push, t_i + 1, t_i)
+    matched = pos != BOTTOM
+    if valid is not None:
+        pos = jnp.where(valid, pos, BOTTOM)
+        matched = matched & valid
+    a_t, b_t, d_t = (x[-1] for x in inc)
+    new = StackState(jnp.maximum(state.last + a_t, b_t), state.ticket + d_t)
+    return pos, tick, matched, new
+
+
+# ------------------------------------------------- shard_map distribution ---
+def sharded_queue_scan(is_enq_local: jax.Array, state: QueueState,
+                       axis_name: str,
+                       valid_local: jax.Array | None = None):
+    """shard_map body: per-device local request arrays; returns local
+    positions + matched + the (replicated) new state.
+
+    Three phases, mirroring the paper exactly:
+      1. local "batch aggregation": an associative scan on-device,
+      2. "anchor assignment": an O(log p) ppermute hypercube scan of the
+         per-device total transforms (constant bytes per hop),
+      3. "interval decomposition": apply the device-prefix carry locally.
+    """
+    e = is_enq_local if valid_local is None else (is_enq_local & valid_local)
+    tr = queue_op_transforms(e)
+    if valid_local is not None:
+        A, B, C = tr
+        tr = (jnp.where(valid_local, A, 0),
+              jnp.where(valid_local, B, INF),
+              jnp.where(valid_local, C, 0))
+    inc = lax.associative_scan(queue_compose, tr)                    # phase 1
+    total = tuple(x[-1] for x in inc)
+
+    # phase 2: exclusive hypercube scan of device totals
+    p = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    incl = total
+    shift = 1
+    while shift < p:
+        perm = [(i, i + shift) for i in range(p - shift)]
+        moved = tuple(lax.ppermute(c, axis_name, perm) for c in incl)
+        cand = queue_compose(moved, incl)
+        use = idx >= shift
+        incl = tuple(jnp.where(use, cn, cu) for cn, cu in zip(cand, incl))
+        shift *= 2
+    # device-exclusive carry = shift by one device
+    perm1 = [(i, i + 1) for i in range(p - 1)]
+    moved1 = tuple(lax.ppermute(c, axis_name, perm1) for c in incl)
+    dev_excl = tuple(jnp.where(idx == 0, fill, m)
+                     for m, fill in zip(moved1, (0, INF, 0)))
+
+    # phase 3: local exclusive prefixes composed after the device carry
+    Ax, Bx, Cx = _exclusive(inc)
+    Ad, Bd, Cd = dev_excl
+    A, B, C = queue_compose((Ad, Bd, Cd), (Ax, Bx, Cx))
+    f_i = jnp.minimum(state.first + A, state.last + B)
+    l_i = state.last + C
+    pos = jnp.where(is_enq_local, l_i + 1,
+                    jnp.where(f_i <= l_i, f_i, BOTTOM))
+    matched = pos != BOTTOM
+    if valid_local is not None:
+        pos = jnp.where(valid_local, pos, BOTTOM)
+        matched = matched & valid_local
+    # new replicated state: all-devices total = inclusive scan at last device
+    # (broadcast via a tiny all_gather of the 3 scalar carries)
+    A_t, B_t, C_t = (
+        lax.all_gather(c, axis_name)[p - 1] if p > 1 else c for c in incl)
+    new = QueueState(jnp.minimum(state.first + A_t, state.last + B_t),
+                     state.last + C_t)
+    return pos, matched, new
+
+
+def make_sharded_queue_scan(mesh, axis_name: str = "data"):
+    """jit-compiled shard_map wrapper over ``mesh[axis_name]``."""
+    spec = P(axis_name)
+    rep = P()
+
+    @jax.jit
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(spec, rep, spec), out_specs=(spec, spec, rep),
+                       check_vma=False)  # new state is value-replicated by
+    def run(is_enq, state, valid):       # the final ppermute broadcast
+        pos, matched, new = sharded_queue_scan(
+            is_enq, QueueState(*state), axis_name, valid_local=valid)
+        return pos, matched, tuple(new)
+
+    def call(is_enq: jax.Array, state: QueueState, valid: jax.Array):
+        pos, matched, new = run(is_enq, tuple(state), valid)
+        return pos, matched, QueueState(*new)
+
+    return call

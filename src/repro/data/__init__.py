@@ -1,0 +1,3 @@
+from .pipeline import GlobalOrderPipeline, synthetic_tokens
+
+__all__ = ["GlobalOrderPipeline", "synthetic_tokens"]

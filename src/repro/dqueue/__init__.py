@@ -1,0 +1,4 @@
+from .device_queue import DeviceQueue, DeviceQueueState, DeviceStack
+from .work_queue import WorkQueue
+
+__all__ = ["DeviceQueue", "DeviceQueueState", "DeviceStack", "WorkQueue"]

@@ -1,0 +1,303 @@
+"""Device-resident distributed queue: SKUEUE Stage 4 as all_to_all dispatch.
+
+The element store is sharded across a mesh axis: position ``p`` lives on
+shard ``p % n_shards`` at slot ``(p // n_shards) % cap`` — a dense sharded
+ring buffer.  Because SKUEUE positions are *dense consecutive integers*,
+round-robin placement is **perfectly** fair (a strict improvement over the
+paper's consistent hashing, which is fair only in expectation — recorded as
+a beyond-paper adaptation in DESIGN.md §6; a hashed-owner mode computed by
+``kernels/hash_route`` exists for fidelity benchmarking).
+
+One ``step`` call = one paper "wave": position assignment via the
+associative scan (Stages 1-3) + PUT/GET dispatch via ``lax.all_to_all``
+(Stage 4).  PUTs apply before GETs inside the step, which resolves the
+paper's GET-outruns-PUT asynchrony *by construction*; FIFO consistency
+guarantees a matched GET's element is present (enqueued this step or
+earlier).
+
+Payloads are fixed-width int32 vectors (token ids / request descriptors);
+the serving engine keeps richer request metadata host-side keyed by payload.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..core.scan_queue import (BOTTOM, QueueState, StackState, queue_scan,
+                               sharded_queue_scan, stack_scan)
+
+
+class DeviceQueueState(NamedTuple):
+    first: jax.Array          # replicated int32
+    last: jax.Array           # replicated int32
+    store_vals: jax.Array     # [n_shards(sharded), cap+1, W] int32
+    store_full: jax.Array     # [n_shards(sharded), cap+1] bool
+
+    @property
+    def size(self) -> jax.Array:
+        return self.last - self.first + 1
+
+
+def _build_send(owner, col_payload, active, n_shards, sentinel):
+    """Scatter local ops into a [n_shards, L, ...] send buffer by owner row."""
+    L = owner.shape[0]
+    rows = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
+    hit = (rows == owner[None, :]) & active[None, :]
+    if col_payload.ndim == 1:
+        return jnp.where(hit, col_payload[None, :], sentinel)
+    return jnp.where(hit[..., None], col_payload[None, :, :], sentinel)
+
+
+class DeviceQueue:
+    """Distributed FIFO over one mesh axis.
+
+    Args:
+      mesh: jax Mesh; axis_name: the shard axis; cap: slots per shard;
+      payload_width: int32 words per element.
+    """
+
+    def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
+                 payload_width: int = 4, ops_per_shard: int = 64):
+        self.mesh = mesh
+        self.axis = axis_name
+        self.n_shards = mesh.shape[axis_name]
+        self.cap = cap
+        self.W = payload_width
+        self.L = ops_per_shard
+        self._step = self._build_step()
+
+    def init_state(self) -> DeviceQueueState:
+        n, cap, W = self.n_shards, self.cap, self.W
+        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
+        rep = jax.sharding.NamedSharding(self.mesh, P())
+        return DeviceQueueState(
+            first=jax.device_put(jnp.int32(0), rep),
+            last=jax.device_put(jnp.int32(-1), rep),
+            store_vals=jax.device_put(
+                jnp.zeros((n, cap + 1, W), jnp.int32), sharding),
+            store_full=jax.device_put(
+                jnp.zeros((n, cap + 1), bool), sharding),
+        )
+
+    # ------------------------------------------------------------ step -----
+    def _build_step(self):
+        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
+
+        def body(state: DeviceQueueState, is_enq, valid, payload):
+            # ---- stages 1-3: position assignment by associative scan ----
+            qs = QueueState(state.first, state.last)
+            pos, matched, new_qs = sharded_queue_scan(
+                is_enq, qs, axis, valid_local=valid)
+            owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
+            slot = jnp.where(matched, (pos // n_shards) % cap, cap)
+            slot = slot.astype(jnp.int32)
+
+            # ---- stage 4a: PUT dispatch (enqueues) ----
+            put_active = matched & is_enq
+            send_slot = _build_send(owner, slot, put_active, n_shards,
+                                    jnp.int32(cap))
+            send_vals = _build_send(owner, payload, put_active, n_shards,
+                                    jnp.int32(0))
+            recv_slot = lax.all_to_all(send_slot, axis, 0, 0, tiled=True)
+            recv_vals = lax.all_to_all(send_vals, axis, 0, 0, tiled=True)
+            flat_slot = recv_slot.reshape(-1)
+            flat_vals = recv_vals.reshape(-1, W)
+            sv = state.store_vals[0]   # local shard view inside shard_map
+            sf = state.store_full[0]
+            sv = sv.at[flat_slot].set(flat_vals)     # cap row is the junk row
+            sf = sf.at[flat_slot].set(True)
+            sf = sf.at[cap].set(False)
+
+            # ---- stage 4b: GET dispatch (dequeues) ----
+            get_active = matched & (~is_enq)
+            gsend = _build_send(owner, slot, get_active, n_shards,
+                                jnp.int32(cap))
+            grecv = lax.all_to_all(gsend, axis, 0, 0, tiled=True)
+            res_vals = sv[grecv]                      # [n_shards, L, W]
+            res_ok = sf[grecv] & (grecv < cap)
+            sf = sf.at[grecv.reshape(-1)].set(False)  # remove on read
+            sf = sf.at[cap].set(False)
+            back_vals = lax.all_to_all(res_vals, axis, 0, 0, tiled=True)
+            back_ok = lax.all_to_all(res_ok, axis, 0, 0, tiled=True)
+            # local op j's reply sits at [owner[j], j]
+            j = jnp.arange(owner.shape[0])
+            own_row = jnp.clip(owner, 0, n_shards - 1)
+            deq_vals = jnp.where(get_active[:, None],
+                                 back_vals[own_row, j], jnp.int32(0))
+            deq_ok = get_active & back_ok[own_row, j]
+
+            overflow = (new_qs.last - new_qs.first + 1) > n_shards * cap
+            return (DeviceQueueState(new_qs.first, new_qs.last,
+                                     sv[None], sf[None]),
+                    pos, matched, deq_vals, deq_ok, overflow)
+
+        state_specs = DeviceQueueState(P(), P(), P(self.axis), P(self.axis))
+
+        @jax.jit
+        @functools.partial(
+            jax.shard_map, mesh=self.mesh,
+            in_specs=(state_specs, P(self.axis), P(self.axis),
+                      P(self.axis)),
+            out_specs=(state_specs, P(self.axis), P(self.axis),
+                       P(self.axis), P(self.axis), P()),
+            check_vma=False)
+        def step(state, is_enq, valid, payload):
+            return body(state, is_enq, valid, payload)
+
+        return step
+
+    def step(self, state: DeviceQueueState, is_enq: jax.Array,
+             valid: jax.Array, payload: jax.Array):
+        """Process one global batch.
+
+        is_enq/valid: [n_shards * L] bool; payload: [n_shards * L, W] int32.
+        Returns (new_state, positions, matched, deq_vals, deq_ok, overflow).
+        """
+        return self._step(state, is_enq, valid, payload)
+
+
+class DeviceStack:
+    """Distributed LIFO (paper Sec. VI) over one mesh axis.
+
+    Positions are reused, so each store slot keeps a small (ticket, payload)
+    set of depth ``slot_depth``; the monotone ticket bound makes concurrent
+    pops conflict-free (each pop takes the unique max ticket <= its bound).
+    """
+
+    def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
+                 payload_width: int = 4, ops_per_shard: int = 64,
+                 slot_depth: int = 4):
+        self.mesh = mesh
+        self.axis = axis_name
+        self.n_shards = mesh.shape[axis_name]
+        self.cap = cap
+        self.W = payload_width
+        self.L = ops_per_shard
+        self.D = slot_depth
+        self._step = self._build_step()
+
+    def init_state(self):
+        n, cap, W, D = self.n_shards, self.cap, self.W, self.D
+        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
+        rep = jax.sharding.NamedSharding(self.mesh, P())
+        return {
+            "last": jax.device_put(jnp.int32(0), rep),
+            "ticket": jax.device_put(jnp.int32(0), rep),
+            "vals": jax.device_put(jnp.zeros((n, cap + 1, D, W), jnp.int32),
+                                   sharding),
+            "ticks": jax.device_put(jnp.full((n, cap + 1, D), -1, jnp.int32),
+                                    sharding),
+        }
+
+    def _build_step(self):
+        axis, n_shards, cap, W, D = (self.axis, self.n_shards, self.cap,
+                                     self.W, self.D)
+
+        def body(state, is_push, valid, payload):
+            ss = StackState(state["last"], state["ticket"])
+            # global order over shards: reuse the queue hypercube by running
+            # the scan on the concatenated view via all_gather of transforms.
+            # (stack_scan is cheap: carries are 3 ints)
+            is_push_g = lax.all_gather(is_push, axis, tiled=True)
+            valid_g = lax.all_gather(valid, axis, tiled=True)
+            pos_g, tick_g, matched_g, new_ss = stack_scan(
+                is_push_g, ss, valid=valid_g)
+            i0 = lax.axis_index(axis) * is_push.shape[0]
+            pos = lax.dynamic_slice_in_dim(pos_g, i0, is_push.shape[0])
+            tick = lax.dynamic_slice_in_dim(tick_g, i0, is_push.shape[0])
+            matched = lax.dynamic_slice_in_dim(matched_g, i0,
+                                               is_push.shape[0])
+
+            owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
+            slot = jnp.where(matched, (pos // n_shards) % cap,
+                             cap).astype(jnp.int32)
+
+            sv = state["vals"][0]    # [cap+1, D, W]
+            stk = state["ticks"][0]  # [cap+1, D]
+
+            # ---- PUSH dispatch ----
+            a_push = matched & is_push
+            s_slot = _build_send(owner, slot, a_push, n_shards, jnp.int32(cap))
+            s_tick = _build_send(owner, tick, a_push, n_shards, jnp.int32(-1))
+            s_vals = _build_send(owner, payload, a_push, n_shards,
+                                 jnp.int32(0))
+            r_slot = lax.all_to_all(s_slot, axis, 0, 0, tiled=True).reshape(-1)
+            r_tick = lax.all_to_all(s_tick, axis, 0, 0, tiled=True).reshape(-1)
+            r_vals = lax.all_to_all(s_vals, axis, 0, 0,
+                                    tiled=True).reshape(-1, W)
+            # insert each arriving element into the first free depth entry
+            # of its slot; arrivals to one slot in one step get distinct
+            # entries via rank-within-slot.
+            order = jnp.argsort(r_slot)  # group same-slot arrivals
+            rs, rt, rv = r_slot[order], r_tick[order], r_vals[order]
+            same = jnp.concatenate([jnp.array([False]), rs[1:] == rs[:-1]])
+            idx = jnp.arange(rs.shape[0], dtype=jnp.int32)
+            run_start = lax.associative_scan(
+                jnp.maximum, jnp.where(same, -1, idx))
+            rank = idx - run_start  # 0,1,2,... within each same-slot run
+            free = (stk[rs] < 0).astype(jnp.int32)      # [Nr, D]
+            base_free = jnp.cumsum(free, axis=1) - free  # rank of each free
+            want = rank[:, None]
+            pick = (stk[rs] < 0) & (base_free == want)
+            depth_idx = jnp.argmax(pick, axis=1)
+            ok_ins = pick.any(axis=1) & (rt >= 0) & (rs < cap)
+            stk = stk.at[jnp.where(ok_ins, rs, cap),
+                         jnp.where(ok_ins, depth_idx, D - 1)].set(
+                             jnp.where(ok_ins, rt, stk[cap, D - 1]))
+            sv = sv.at[jnp.where(ok_ins, rs, cap),
+                       jnp.where(ok_ins, depth_idx, D - 1)].set(
+                           jnp.where(ok_ins[:, None], rv, sv[cap, D - 1]))
+            slot_overflow = ((rt >= 0) & (rs < cap) & ~ok_ins).any()
+            slot_overflow = lax.pmax(slot_overflow.astype(jnp.int32),
+                                     axis) > 0  # replicated flag
+
+            # ---- POP dispatch: take max ticket <= bound at the slot ----
+            a_pop = matched & (~is_push)
+            g_slot = _build_send(owner, slot, a_pop, n_shards, jnp.int32(cap))
+            g_bound = _build_send(owner, tick, a_pop, n_shards, jnp.int32(-1))
+            q_slot = lax.all_to_all(g_slot, axis, 0, 0, tiled=True)
+            q_bound = lax.all_to_all(g_bound, axis, 0, 0, tiled=True)
+            cand = stk[q_slot]                                   # [n,L,D]
+            eligible = (cand >= 0) & (cand <= q_bound[..., None])
+            best = jnp.where(eligible, cand, -1).max(axis=-1)    # [n,L]
+            got = best >= 0
+            d_pick = jnp.argmax(jnp.where(eligible, cand, -1), axis=-1)
+            res_vals = sv[q_slot, d_pick]
+            # remove the picked entries (unique per pop: tickets are unique)
+            stk = stk.at[jnp.where(got, q_slot, cap),
+                         jnp.where(got, d_pick, D - 1)].set(
+                             jnp.where(got, -1, stk[cap, D - 1]))
+            back_vals = lax.all_to_all(res_vals, axis, 0, 0, tiled=True)
+            back_ok = lax.all_to_all(got, axis, 0, 0, tiled=True)
+            j = jnp.arange(owner.shape[0])
+            own_row = jnp.clip(owner, 0, n_shards - 1)
+            pop_vals = jnp.where(a_pop[:, None],
+                                 back_vals[own_row, j], jnp.int32(0))
+            pop_ok = a_pop & back_ok[own_row, j]
+
+            new_state = {"last": new_ss.last, "ticket": new_ss.ticket,
+                         "vals": sv[None], "ticks": stk[None]}
+            return new_state, pos, matched, pop_vals, pop_ok, slot_overflow
+
+        specs = {"last": P(), "ticket": P(), "vals": P(self.axis),
+                 "ticks": P(self.axis)}
+
+        @jax.jit
+        @functools.partial(
+            jax.shard_map, mesh=self.mesh,
+            in_specs=(specs, P(self.axis), P(self.axis), P(self.axis)),
+            out_specs=(specs, P(self.axis), P(self.axis), P(self.axis),
+                       P(self.axis), P()),
+            check_vma=False)
+        def step(state, is_push, valid, payload):
+            return body(state, is_push, valid, payload)
+
+        return step
+
+    def step(self, state, is_push, valid, payload):
+        return self._step(state, is_push, valid, payload)

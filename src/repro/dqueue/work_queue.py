@@ -1,0 +1,115 @@
+"""Work-stealing queue with lease-based straggler mitigation.
+
+The paper's motivating application (Sec. I): FIFO work stealing.  Work items
+enter the distributed queue; workers dequeue in sequentially-consistent FIFO
+order.  For fault tolerance at fleet scale:
+
+  * every dequeue is a *lease* — the item is re-enqueued if not acknowledged
+    within ``lease_steps`` (handles dead or straggling workers);
+  * duplicate completions are idempotent (first ack wins), which makes
+    speculative "backup" execution of leased-but-slow items safe — the
+    standard straggler-mitigation trick.
+
+Runs host-side around a :class:`DeviceQueue` so the item payloads live
+sharded on device, and the global FIFO order is the queue's order ≺.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .device_queue import DeviceQueue
+
+
+@dataclass
+class _Lease:
+    item: np.ndarray
+    issued_step: int
+    worker: int
+
+
+class WorkQueue:
+    def __init__(self, dq: DeviceQueue, lease_steps: int = 8):
+        self.dq = dq
+        self.state = dq.init_state()
+        self.lease_steps = lease_steps
+        self.step_no = 0
+        self.leases: Dict[int, _Lease] = {}   # element-id -> lease
+        self.completed: set = set()
+        self.stats = {"reissued": 0, "duplicate_acks": 0, "items_done": 0}
+        self._next_eid = 0
+
+    # -- one synchronous scheduling step ------------------------------------
+    def step(self, submit: List[np.ndarray], want: List[int]
+             ) -> List[Tuple[int, np.ndarray]]:
+        """Submit new items and serve dequeue requests of `want[w]` items per
+        worker.  Returns (worker, payload) grants.  Expired leases are
+        re-enqueued ahead of new submissions (FIFO fairness for retries)."""
+        self.step_no += 1
+        expired = [l for eid, l in self.leases.items()
+                   if self.step_no - l.issued_step > self.lease_steps
+                   and eid not in self.completed]
+        for l in expired:
+            self.stats["reissued"] += 1
+        retry_payloads = [l.item for l in expired]
+        for l in expired:
+            eid = int(l.item[0])
+            self.leases.pop(eid, None)
+
+        n = self.dq.n_shards * self.dq.L
+        W = self.dq.W
+        enq_items = retry_payloads + list(submit)
+        n_deq = int(sum(want))
+        assert len(enq_items) + n_deq <= n, "batch larger than queue step"
+        is_enq = np.zeros(n, bool)
+        valid = np.zeros(n, bool)
+        payload = np.zeros((n, W), np.int32)
+        for i, item in enumerate(enq_items):
+            is_enq[i] = True
+            valid[i] = True
+            payload[i, : len(item)] = item
+        for k in range(n_deq):
+            valid[len(enq_items) + k] = True
+        self.state, pos, matched, deq_vals, deq_ok, overflow = self.dq.step(
+            self.state, is_enq, valid, payload)
+        assert not bool(overflow), "work queue overflow"
+        deq_vals = np.asarray(deq_vals)
+        deq_ok = np.asarray(deq_ok)
+        grants: List[Tuple[int, np.ndarray]] = []
+        workers = [w for w, k in enumerate(want) for _ in range(k)]
+        for k in range(n_deq):
+            i = len(enq_items) + k
+            if deq_ok[i]:
+                item = deq_vals[i]
+                eid = int(item[0])
+                self.leases[eid] = _Lease(item=item,
+                                          issued_step=self.step_no,
+                                          worker=workers[k])
+                grants.append((workers[k], item))
+        return grants
+
+    def make_item(self, data: List[int]) -> np.ndarray:
+        """Items carry a unique id in word 0 (dedup across re-issues)."""
+        eid = self._next_eid
+        self._next_eid += 1
+        item = np.zeros(self.dq.W, np.int32)
+        item[0] = eid
+        item[1: 1 + len(data)] = data
+        return item
+
+    def ack(self, item: np.ndarray) -> bool:
+        """Worker completion. Returns True if this ack won (first)."""
+        eid = int(item[0])
+        if eid in self.completed:
+            self.stats["duplicate_acks"] += 1
+            return False
+        self.completed.add(eid)
+        self.leases.pop(eid, None)
+        self.stats["items_done"] += 1
+        return True
+
+    @property
+    def outstanding(self) -> int:
+        return len(self.leases)

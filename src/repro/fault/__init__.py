@@ -1,0 +1,3 @@
+from .failures import FailureInjector, run_with_restarts
+
+__all__ = ["FailureInjector", "run_with_restarts"]

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: FlashAttention forward (causal / sliding window).
+
+Online-softmax tiling (Dao et al., adapted to TPU memory hierarchy):
+  grid = (batch*heads, q_blocks, kv_blocks)  — kv innermost, sequential;
+  q block (Bq, D) stays in VMEM across the kv sweep; running max ``m``,
+  normalizer ``l`` and accumulator ``acc`` live in VMEM scratch (f32);
+  each step is one (Bq, Bk) MXU matmul + rescale — MXU-aligned with
+  Bq = Bk = 128 and D padded to a lane multiple.
+
+Queries align to the END of the key sequence (decode convention), so the
+same kernel serves prefill (Lq == Lk), chunked prefill and decode (Lq == 1).
+Fully-masked kv blocks are skipped via ``@pl.when`` on block indices —
+with causal masking this halves the work; with a sliding window the sweep
+touches only O(window) keys per query block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale, causal, window, bq, bk, lq, lk, nk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    off = lk - lq  # query row r corresponds to key position off + global_q
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level relevance: any key in this block visible to any query here?
+    q_lo = qi * bq + off
+    q_hi = q_lo + bq - 1
+    k_lo = ki * bk
+    relevant = True
+    if causal:
+        relevant = jnp.logical_and(relevant, k_lo <= q_hi)
+    if window is not None:
+        k_hi = k_lo + bk - 1
+        relevant = jnp.logical_and(relevant, k_hi > q_lo - window)
+
+    @pl.when(relevant)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_lo
+        kpos = lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + k_lo
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[...] = (acc_ref[...] / safe).astype(o_ref.dtype)[None]
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=None,
+                           block_q=128, block_k=128, interpret=True):
+    """q: [B, Lq, D]; k/v: [B, Lk, D] -> [B, Lq, D]."""
+    B, Lq, D = q.shape
+    Lk = k.shape[1]
+    bq = min(block_q, Lq)
+    bk = min(block_k, Lk)
+    assert Lq % bq == 0 and Lk % bk == 0, "pad sequence to block multiples"
+    nq, nk = Lq // bq, Lk // bk
+    scale = 1.0 / (D ** 0.5)
+    kern = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, lq=Lq, lk=Lk, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # normalizer
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Public wrapper: GQA-aware flash attention (folds KV head groups)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: [B, Hq, Lq, D]; k/v: [B, Hkv, Lk, D]; Hq % Hkv == 0 (GQA).
+
+    Returns [B, Hq, Lq, D].  Queries align to the end of the key sequence.
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    # fold: [B*Hkv, G*Lq, D] queries share the kv head in one kernel batch
+    qf = q.reshape(B, Hkv, G, Lq, D).reshape(B * Hkv, G * Lq, D)
+    kf = k.reshape(B * Hkv, -1, D)
+    vf = v.reshape(B * Hkv, -1, D)
+    if G == 1:
+        out = flash_attention_kernel(qf, kf, vf, causal=causal, window=window,
+                                     block_q=block_q, block_k=block_k,
+                                     interpret=interpret)
+    else:
+        # grouped queries must not cross-mask: run per group slice
+        outs = []
+        for g in range(G):
+            outs.append(flash_attention_kernel(
+                qf[:, g * Lq:(g + 1) * Lq], kf, vf, causal=causal,
+                window=window, block_q=block_q, block_k=block_k,
+                interpret=interpret))
+        out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, Hkv, G, Lq, D).reshape(B, Hq, Lq, D)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: softmax attention with causal / sliding-window masks."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: [B, Lq, D]; k/v: [B, Lk, D].  Queries are aligned to the END of the
+    key sequence (decode convention: query i attends keys <= Lk-Lq+i)."""
+    B, Lq, D = q.shape
+    Lk = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Lq)[:, None] + (Lk - Lq)
+    kpos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

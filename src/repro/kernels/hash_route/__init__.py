@@ -1,0 +1,4 @@
+from .ops import hash_route_pallas
+from .ref import hash_route_ref
+
+__all__ = ["hash_route_pallas", "hash_route_ref"]

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: DHT dispatch routing (SKUEUE Stage 4 front-end).
+
+For a tile of positions: 32-bit splitmix hash (VPU integer ops), owner
+bucket, and a per-tile owner histogram via a one-hot matmul (MXU-friendly:
+[TILE, n_shards] one-hot contracted against ones).  Tiles are (8, 128) int32
+in VMEM; histograms accumulate across a sequential grid axis into the output
+block (same-index revisiting pattern)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 8
+TILE_LANES = 128
+TILE = TILE_ROWS * TILE_LANES
+
+
+def _mix32(x):
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _route_kernel(pos_ref, valid_ref, owner_ref, hist_ref, *, n_shards):
+    t = pl.program_id(0)
+    pos = pos_ref[...]
+    valid = valid_ref[...] != 0
+    h = _mix32(pos)
+    owner = ((h >> jnp.uint32(8)) % jnp.uint32(n_shards)).astype(jnp.int32)
+    owner = jnp.where(valid, owner, -1)
+    owner_ref[...] = owner
+    # one-hot histogram for this tile, accumulated across the grid
+    flat = owner.reshape(-1)
+    shard_ids = lax.broadcasted_iota(jnp.int32, (TILE, n_shards), 1)
+    onehot = (flat[:, None] == shard_ids).astype(jnp.int32)
+    tile_hist = jnp.sum(onehot, axis=0)  # [n_shards]
+
+    @pl.when(t == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += tile_hist.reshape(1, n_shards)
+
+
+def hash_route_kernel(pos: jax.Array, valid: jax.Array, n_shards: int,
+                      interpret: bool = True):
+    n = pos.shape[0]
+    assert n % TILE == 0
+    T = n // TILE
+    p2 = pos.astype(jnp.int32).reshape(T, TILE_ROWS, TILE_LANES)
+    v2 = valid.astype(jnp.int32).reshape(T, TILE_ROWS, TILE_LANES)
+    import functools
+    owner, hist = pl.pallas_call(
+        functools.partial(_route_kernel, n_shards=n_shards),
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, n_shards), lambda t: (0, 0)),  # accumulated
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, TILE_ROWS, TILE_LANES), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_shards), jnp.int32),
+        ],
+        interpret=interpret,
+    )(p2, v2)
+    return owner.reshape(n), hist[0]

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the hash_route kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import TILE, hash_route_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "interpret"))
+def hash_route_pallas(pos: jax.Array, valid: jax.Array, n_shards: int,
+                      interpret: bool = True):
+    """Owner shard + per-shard counts for a batch of DHT positions."""
+    n = pos.shape[0]
+    pad = (-n) % TILE
+    if pad:
+        pos = jnp.concatenate([pos, jnp.zeros((pad,), pos.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), valid.dtype)])
+    owner, counts = hash_route_kernel(pos, valid, n_shards,
+                                      interpret=interpret)
+    return owner[:n], counts

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the DHT hash-routing kernel.
+
+Mirrors the paper's consistent hashing (Sec. II-B): position -> pseudorandom
+key in [0,1) -> owning shard.  With equal-width shard intervals the owner is
+``floor(key01 * n_shards)``.  The hash is a 32-bit splitmix finalizer
+(TPU-friendly: no uint64)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_route_ref(pos: jax.Array, valid: jax.Array, n_shards: int):
+    """Returns (owner[n] int32 with -1 for invalid, counts[n_shards] int32)."""
+    h = _mix32(pos)
+    owner = (h >> jnp.uint32(8)).astype(jnp.uint32) % jnp.uint32(n_shards)
+    owner = jnp.where(valid, owner.astype(jnp.int32), -1)
+    counts = jnp.sum(
+        jax.nn.one_hot(jnp.where(valid, owner, n_shards), n_shards + 1,
+                       dtype=jnp.int32),
+        axis=0)[:n_shards]
+    return owner, counts

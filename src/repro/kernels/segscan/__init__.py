@@ -1,0 +1,4 @@
+from .ops import queue_scan_pallas
+from .ref import queue_scan_ref
+
+__all__ = ["queue_scan_pallas", "queue_scan_ref"]

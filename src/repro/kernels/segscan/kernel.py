@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: SKUEUE batch position-assignment scan.
+
+The paper's Stages 1-3 for one device's request array, as a two-phase
+Blelloch scan tiled for VMEM:
+
+  phase A (parallel over tiles): per-tile total (A,B,C) transform —
+          a pure reduction, one (8,128) VPU tile at a time;
+  phase B (parallel over tiles, given the exclusive tile-prefix carries):
+          intra-tile Hillis-Steele scan in the min-plus semiring +
+          position emission.
+
+The inter-tile exclusive scan of the tiny per-tile carries happens in jnp
+between the two pallas_calls (it is O(n/TILE) elements — negligible), which
+mirrors the paper's anchor step: the carries ARE the aggregated batches.
+
+Layout: requests are reshaped to [T, 8, 128] tiles; the scan order is the
+row-major flattened order.  All arithmetic is int32 in VMEM; the MXU is not
+involved (this is a VPU kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INF = 2 ** 30  # plain int: Pallas kernels need literals, not traced consts
+TILE_ROWS = 8
+TILE_LANES = 128
+TILE = TILE_ROWS * TILE_LANES
+
+
+def _compose(t1, t2):
+    A1, B1, C1 = t1
+    A2, B2, C2 = t2
+    return (A1 + A2,
+            jnp.minimum(jnp.minimum(B1 + A2, C1 + B2), INF),
+            C1 + C2)
+
+
+def _tile_transforms(is_enq, valid):
+    e = jnp.logical_and(is_enq != 0, valid != 0).astype(jnp.int32)
+    v = (valid != 0)
+    A = jnp.where(v, 1 - e, 0)
+    B = jnp.where(v, jnp.where(e > 0, INF, 1), INF)
+    C = jnp.where(v, e, 0)
+    return A, B, C
+
+
+def _totals_kernel(is_enq_ref, valid_ref, out_ref):
+    """Phase A: reduce one [8,128] tile to its total (A,B,C)."""
+    A, B, C = _tile_transforms(is_enq_ref[...], valid_ref[...])
+    flat = (A.reshape(-1), B.reshape(-1), C.reshape(-1))
+    # log-step tree reduction over the flattened tile.  The min-plus compose
+    # is non-commutative: pair ADJACENT elements (2i, 2i+1) at every level so
+    # the reduction respects the left-to-right request order.
+    n = TILE
+    a, b, c = flat
+    while n > 1:
+        left = (a[0:n:2], b[0:n:2], c[0:n:2])
+        right = (a[1:n:2], b[1:n:2], c[1:n:2])
+        a, b, c = _compose(left, right)
+        n //= 2
+    out_ref[0, 0] = a[0]
+    out_ref[0, 1] = b[0]
+    out_ref[0, 2] = c[0]
+
+
+def _scan_kernel(is_enq_ref, valid_ref, carry_ref, state_ref,
+                 pos_ref, match_ref):
+    """Phase B: intra-tile exclusive scan after the tile's carry."""
+    A, B, C = _tile_transforms(is_enq_ref[...], valid_ref[...])
+    a = A.reshape(-1)
+    b = B.reshape(-1)
+    c = C.reshape(-1)
+    # Hillis-Steele inclusive scan over TILE elems (log2(TILE)=10 steps)
+    shift = 1
+    while shift < TILE:
+        ap = jnp.concatenate([jnp.zeros((shift,), jnp.int32), a[:-shift]])
+        bp = jnp.concatenate([jnp.full((shift,), INF, jnp.int32), b[:-shift]])
+        cp = jnp.concatenate([jnp.zeros((shift,), jnp.int32), c[:-shift]])
+        na, nb, nc = _compose((ap, bp, cp), (a, b, c))
+        idx = lax.broadcasted_iota(jnp.int32, (TILE,), 0)
+        keep = idx < shift
+        a = jnp.where(keep, a, na)
+        b = jnp.where(keep, b, nb)
+        c = jnp.where(keep, c, nc)
+        shift *= 2
+    # exclusive = shift by one
+    a_x = jnp.concatenate([jnp.zeros((1,), jnp.int32), a[:-1]])
+    b_x = jnp.concatenate([jnp.full((1,), INF, jnp.int32), b[:-1]])
+    c_x = jnp.concatenate([jnp.zeros((1,), jnp.int32), c[:-1]])
+    # prepend the inter-tile carry and the initial anchor state
+    ca = carry_ref[0, 0]
+    cb = carry_ref[0, 1]
+    cc = carry_ref[0, 2]
+    a_x, b_x, c_x = _compose((ca, cb, cc), (a_x, b_x, c_x))
+    first0 = state_ref[0, 0]
+    last0 = state_ref[0, 1]
+    f_i = jnp.minimum(first0 + a_x, last0 + b_x)
+    l_i = last0 + c_x
+    is_enq = (is_enq_ref[...].reshape(-1) != 0)
+    vmask = (valid_ref[...].reshape(-1) != 0)
+    pos = jnp.where(is_enq, l_i + 1,
+                    jnp.where(f_i <= l_i, f_i, jnp.int32(-1)))
+    pos = jnp.where(vmask, pos, jnp.int32(-1))
+    pos_ref[...] = pos.reshape(1, TILE_ROWS, TILE_LANES)
+    match_ref[...] = jnp.where(vmask, (pos >= 0), False).reshape(
+        1, TILE_ROWS, TILE_LANES).astype(jnp.int32)
+
+
+def queue_scan_kernel(is_enq: jax.Array, valid: jax.Array,
+                      first: jax.Array, last: jax.Array,
+                      interpret: bool = True):
+    """n must be a multiple of 1024 (pad with valid=False).
+
+    Returns (pos[n], matched[n], new_first, new_last)."""
+    n = is_enq.shape[0]
+    assert n % TILE == 0, f"pad request batch to a multiple of {TILE}"
+    T = n // TILE
+    e2 = is_enq.astype(jnp.int32).reshape(T, TILE_ROWS, TILE_LANES)
+    v2 = valid.astype(jnp.int32).reshape(T, TILE_ROWS, TILE_LANES)
+
+    # ---- phase A: per-tile totals ----
+    totals = pl.pallas_call(
+        _totals_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, 3), jnp.int32),
+        interpret=interpret,
+    )(e2, v2)
+
+    # ---- inter-tile exclusive scan of carries (tiny; jnp) ----
+    def comp(x, y):
+        return jnp.stack(_compose((x[..., 0], x[..., 1], x[..., 2]),
+                                  (y[..., 0], y[..., 1], y[..., 2])), -1)
+    incl = lax.associative_scan(comp, totals, axis=0)
+    ident = jnp.array([[0, INF, 0]], jnp.int32)
+    excl = jnp.concatenate([ident, incl[:-1]], axis=0)
+    tot = incl[-1]
+    state = jnp.stack([first.astype(jnp.int32),
+                       last.astype(jnp.int32)])[None]  # [1, 2]
+
+    # ---- phase B: positions ----
+    pos, match = pl.pallas_call(
+        _scan_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, 3), lambda t: (t, 0)),
+            pl.BlockSpec((1, 2), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, TILE_ROWS, TILE_LANES), jnp.int32),
+            jax.ShapeDtypeStruct((T, TILE_ROWS, TILE_LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(e2, v2, excl, state)
+
+    new_first = jnp.minimum(first + tot[0], last + tot[1])
+    new_last = last + tot[2]
+    return (pos.reshape(n), match.reshape(n).astype(bool),
+            new_first.astype(jnp.int32), new_last.astype(jnp.int32))

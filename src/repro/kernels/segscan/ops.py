@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the segscan kernel (auto-padding, dtypes)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import TILE, queue_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def queue_scan_pallas(is_enq: jax.Array, valid: jax.Array,
+                      first: jax.Array, last: jax.Array,
+                      interpret: bool = True):
+    """Position assignment for a request batch (SKUEUE Stages 1-3).
+
+    is_enq/valid: [n] bool.  Returns (pos[n] int32 ⊥=-1, matched[n] bool,
+    new_first, new_last).  n is padded internally to a multiple of 1024.
+    """
+    n = is_enq.shape[0]
+    pad = (-n) % TILE
+    if pad:
+        is_enq = jnp.concatenate([is_enq, jnp.zeros((pad,), is_enq.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), valid.dtype)])
+    pos, matched, nf, nl = queue_scan_kernel(
+        is_enq, valid, jnp.asarray(first), jnp.asarray(last),
+        interpret=interpret)
+    return pos[:n], matched[:n], nf, nl

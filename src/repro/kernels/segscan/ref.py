@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SKUEUE batch scan kernel.
+
+Delegates to the framework implementation (itself hypothesis-validated
+against the paper's Stage-2/3 interval machinery in tests/test_scan_queue.py)
+so the kernel is checked against the exact protocol semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.scan_queue import QueueState, queue_scan
+
+
+def queue_scan_ref(is_enq: jax.Array, valid: jax.Array, first: jax.Array,
+                   last: jax.Array):
+    """Returns (positions[n] int32 with ⊥=-1, matched[n] bool,
+    new_first, new_last)."""
+    pos, matched, new = queue_scan(
+        is_enq.astype(bool), QueueState(first.astype(jnp.int32),
+                                        last.astype(jnp.int32)),
+        valid=valid.astype(bool))
+    return pos, matched, new.first, new.last

@@ -1,0 +1,4 @@
+from .ops import ssd_scan_pallas
+from .ref import ssd_scan_ref
+
+__all__ = ["ssd_scan_pallas", "ssd_scan_ref"]

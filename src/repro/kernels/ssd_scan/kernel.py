@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: chunked SSD scan (Mamba-2 SSD, arXiv:2405.21060).
+
+TPU adaptation of the SSD block decomposition: the sequence is split into
+chunks of Q tokens; the grid is (batch*heads, n_chunks) with the chunk axis
+sequential and the running state S [N, P] in f32 VMEM scratch:
+
+    intra-chunk (MXU):  y_intra = (tril(C B^T) ∘ decay(i,j)) @ xt
+    inter-chunk (MXU):  y_inter = (C * exp(l)) @ S
+    state update (MXU): S <- exp(l_Q) S + (B * exp(l_Q - l))^T @ xt
+
+where l = cumsum(loga) within the chunk (loga <= 0, so all exponents are
+<= 0 — numerically safe without max-subtraction).  Q and N are chosen
+MXU-aligned (128); P is the Mamba head dim (64).  The recurrence depth
+drops from L to L/Q, everything else is dense matmul — exactly the
+"duality" the paper exploits, mapped onto the MXU instead of tensor cores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xt_ref, loga_ref, b_ref, c_ref, y_ref, s_ref, *, Q, N, P):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    xt = xt_ref[0, 0].astype(jnp.float32)    # [Q, P]
+    la = loga_ref[0, 0, 0].astype(jnp.float32)  # [Q]
+    b = b_ref[0, 0].astype(jnp.float32)      # [Q, N]
+    c = c_ref[0, 0].astype(jnp.float32)      # [Q, N]
+    l = jnp.cumsum(la)                       # [Q] inclusive log-decay
+
+    # inter-chunk: contribution of the carried state
+    c_dec = c * jnp.exp(l)[:, None]
+    y_inter = lax.dot_general(c_dec, s_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [Q, P]
+
+    # intra-chunk: masked decay-weighted attention-like matmul
+    scores = lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # [Q, Q]
+    li = l[:, None]
+    lj = l[None, :]
+    ii = lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    dec = jnp.where(ii >= jj, jnp.exp(li - lj), 0.0)
+    y_intra = lax.dot_general(scores * dec, xt, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    y_ref[...] = (y_inter + y_intra).astype(y_ref.dtype)[None, None]
+
+    # state update for the next chunk
+    ltot = l[Q - 1]
+    b_dec = b * jnp.exp(ltot - l)[:, None]
+    s_new = lax.dot_general(b_dec, xt, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # [N, P]
+    s_ref[...] = jnp.exp(ltot) * s_ref[...] + s_new
+
+
+def ssd_scan_kernel(xt, loga, B, C, chunk: int = 128, interpret: bool = True):
+    """xt: [BH, L, P]; loga: [BH, L]; B/C: [BH, L, N] -> y [BH, L, P]."""
+    BH, L, P = xt.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, "pad sequence to a chunk multiple"
+    nc = L // Q
+    la2 = loga.reshape(BH, nc, 1, Q)  # row-major (1, Q) blocks
+    kern = functools.partial(_ssd_kernel, Q=Q, N=N, P=P)
+    y = pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nc, Q, P), xt.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xt.reshape(BH, nc, Q, P), la2, B.reshape(BH, nc, Q, N),
+      C.reshape(BH, nc, Q, N))
+    return y.reshape(BH, L, P)

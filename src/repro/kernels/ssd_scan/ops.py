@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(xt: jax.Array, loga: jax.Array, B: jax.Array,
+                    C: jax.Array, chunk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """Chunked SSD scan. xt: [BH, L, P]; loga: [BH, L]; B/C: [BH, L, N]."""
+    L = xt.shape[1]
+    if L % chunk and L > chunk:
+        p = (-L) % chunk
+        xt = jnp.pad(xt, ((0, 0), (0, p), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, p)))
+        B = jnp.pad(B, ((0, 0), (0, p), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, p), (0, 0)))
+    y = ssd_scan_kernel(xt, loga, B, C, chunk=chunk, interpret=interpret)
+    return y[:, :L]

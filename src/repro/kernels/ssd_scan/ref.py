@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for SSD (Mamba-2 state-space duality, arXiv:2405.21060).
+
+The most-naive formulation: a sequential ``lax.scan`` over time of the
+diagonal-A SSM recurrence
+
+    S_t = exp(loga_t) * S_{t-1} + B_t ⊗ xt_t          (S: [N, P])
+    y_t = C_t @ S_t
+
+where ``xt = x * dt`` and ``loga = dt * A`` are precomputed by the caller
+(so the oracle is purely the recurrence the chunked kernel reformulates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan_ref(xt: jax.Array, loga: jax.Array, B: jax.Array,
+                 C: jax.Array) -> jax.Array:
+    """xt: [BH, L, P]; loga: [BH, L]; B/C: [BH, L, N] -> y [BH, L, P]."""
+    BH, L, P = xt.shape
+    N = B.shape[-1]
+
+    def step(S, inp):
+        xt_t, la_t, b_t, c_t = inp
+        S = jnp.exp(la_t) * S + b_t[:, None] * xt_t[None, :]
+        y = c_t @ S
+        return S, y
+
+    def per_head(args):
+        xt_h, la_h, b_h, c_h = args
+        S0 = jnp.zeros((N, P), jnp.float32)
+        _, y = lax.scan(step, S0, (xt_h.astype(jnp.float32),
+                                   la_h.astype(jnp.float32),
+                                   b_h.astype(jnp.float32),
+                                   c_h.astype(jnp.float32)))
+        return y
+
+    y = jax.vmap(lambda a, b, c, d: per_head((a, b, c, d)))(xt, loga, B, C)
+    return y.astype(xt.dtype)

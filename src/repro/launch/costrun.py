@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Exact per-cell cost model: XLA's cost_analysis counts while-loop bodies
+ONCE, so the dry-run numbers undercount scanned layers/microbatches.  This
+runner lowers a fully-UNROLLED variant at two reduced depths (L=2 and L=4 —
+layers are identical, so cost is affine in L) and extrapolates:
+
+    F(L) = F(L2) + (F(L4) - F(L2)) / (L4 - L2) * (L - L2)
+
+Train cells are costed with num_microbatches=1 at the full global batch
+(the accumulation loop is compute-identical).  Results land in
+experiments/costing/ and are consumed by benchmarks/roofline.py.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from ..models import build_model
+from ..models.costing import costing_mode
+from ..sharding import AxisRules, logical_to_spec, set_rules, shardings_for_tree
+from ..train import adamw_init, make_train_step
+from .hlo import collective_bytes
+from .mesh import make_production_mesh
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "costing"
+
+
+def _reduced_cfg(cfg, L):
+    over = {"n_layers": L}
+    if cfg.family == "hybrid":
+        over["n_layers"] = L * cfg.attn_every  # whole segments
+    if cfg.enc_layers:
+        over["enc_layers"] = L
+    return dataclasses.replace(cfg, **over), over.get("n_layers", L)
+
+
+def _measure(cfg, shape, rules):
+    mesh = make_production_mesh(multi_pod=False)
+    set_rules(mesh, rules)
+    model = build_model(cfg)
+    seq, gb, kind = SHAPES[shape]
+    params, p_axes = model.abstract_params()
+    p_sh = shardings_for_tree(p_axes, mesh, rules, shapes_tree=params)
+    in_specs = model.input_specs(shape)
+    b_axes = model.batch_axes(shape)
+    b_sh = {k: NamedSharding(mesh, logical_to_spec(
+        b_axes[k], mesh, rules, shape=in_specs[k].shape)) for k in in_specs}
+    with costing_mode():
+        if kind == "train":
+            step = make_train_step(model, num_microbatches=1)
+            opt = jax.eval_shape(adamw_init, params)
+            opt_sh = type(opt)(m=p_sh, v=p_sh, step=NamedSharding(mesh, P()))
+            fn = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
+                         out_shardings=(p_sh, opt_sh, None))
+            comp = fn.lower(params, opt, in_specs).compile()
+        elif kind == "prefill":
+            def prefill(params, batch):
+                if cfg.family == "encdec":
+                    from ..models.encdec import decode as dfw, encode
+                    enc = encode(params, cfg, batch["frames"], remat=False)
+                    h, _ = dfw(params, cfg, batch["tokens"], enc, remat=False)
+                else:
+                    from ..models.transformer import forward
+                    h, _, _ = forward(params, cfg, batch["tokens"],
+                                      vision_embeds=batch.get("vision_embeds"),
+                                      remat=False)
+                w = (params["embed"].T if cfg.tie_embeddings
+                     else params["unembed"]).astype(jnp.bfloat16)
+                return (h[:, -1] @ w).astype(jnp.float32)
+            fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            comp = fn.lower(params, in_specs).compile()
+        else:
+            cache, c_axes = model.abstract_cache(gb, seq)
+            c_sh = shardings_for_tree(c_axes, mesh, rules, shapes_tree=cache)
+            extra = {k: v for k, v in in_specs.items() if k != "tokens"}
+            extra_sh = {k: b_sh[k] for k in extra}
+
+            def decode(params, cache, tokens, idx, extra):
+                return model.decode_fn(params, cache, tokens, idx, **extra)
+            fn = jax.jit(decode, in_shardings=(
+                p_sh, c_sh, b_sh["tokens"], NamedSharding(mesh, P()),
+                extra_sh))
+            comp = fn.lower(params, cache, in_specs["tokens"],
+                            jax.ShapeDtypeStruct((), jnp.int32),
+                            extra).compile()
+    ca = comp.cost_analysis()
+    coll = collective_bytes(comp.as_text())
+    return {"flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "coll": coll.get("total", 0)}
+
+
+def cost_cell(arch, shape):
+    cfg = get_config(arch)
+    if not shape_applicable(cfg, shape):
+        return {"skipped": True}
+    rules = AxisRules()
+    c2, l2 = _reduced_cfg(cfg, 2)
+    c4, l4 = _reduced_cfg(cfg, 4)
+    f2 = _measure(c2, shape, rules)
+    f4 = _measure(c4, shape, rules)
+    L = cfg.n_layers
+    out = {"arch": arch, "shape": shape, "L2": l2, "L4": l4, "L": L}
+    for k in ("flops", "bytes", "coll"):
+        slope = (f4[k] - f2[k]) / (l4 - l2)
+        out[k + "_per_layer"] = slope
+        out[k + "_const"] = f2[k] - slope * l2
+        out[k] = f2[k] + slope * (L - l2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            path = OUT_DIR / f"{a}__{s}.json"
+            if path.exists() and not args.force:
+                print(f"[cache] {a}/{s}")
+                continue
+            t0 = time.time()
+            try:
+                res = cost_cell(a, s)
+                path.write_text(json.dumps(res, indent=1))
+                if res.get("skipped"):
+                    print(f"[skip ] {a}/{s}")
+                else:
+                    print(f"[ok   ] {a}/{s}: {res['flops']:.3g} flops/dev "
+                          f"{res['coll']/2**20:.0f} MiB coll/dev "
+                          f"({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:  # noqa: BLE001
+                print(f"[FAIL ] {a}/{s}: {e}")
+                (OUT_DIR / f"{a}__{s}.FAILED.txt").write_text(
+                    traceback.format_exc())
+
+
+if __name__ == "__main__":
+    main()

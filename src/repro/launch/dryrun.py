@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we AOT-compile the real jitted step (train_step for train
+shapes, prefill/decode for serving shapes) against ShapeDtypeStruct inputs
+with full production shardings — no array is ever allocated.  The compiled
+artifact yields:
+
+  memory_analysis()   per-device bytes (proves the cell fits 16 GB HBM)
+  cost_analysis()     per-device HLO flops + bytes accessed
+  as_text()           post-SPMD HLO — collective bytes via launch.hlo
+
+Results are cached as JSON under experiments/dryrun/ and consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from ..models import build_model
+from ..sharding import AxisRules, logical_to_spec, set_rules, shardings_for_tree
+from ..train import adamw_init, make_train_step
+from .hlo import collective_bytes
+from .mesh import make_production_mesh
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# microbatch count per (arch, shape): the activation-memory lever
+MICROBATCH = {
+    "default": {"train_4k": 8},
+    "mamba2_130m": {"train_4k": 4},
+    "whisper_small": {"train_4k": 4},
+    "zamba2_1p2b": {"train_4k": 8},
+    "granite_moe_1b": {"train_4k": 8},
+    "mixtral_8x22b": {"train_4k": 16},
+    "mistral_large_123b": {"train_4k": 16},
+}
+
+
+def _axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def cell_name(arch, shape, multi_pod, variant=""):
+    pod = "pod2" if multi_pod else "pod1"
+    v = f"_{variant}" if variant else ""
+    return f"{arch}__{shape}__{pod}{v}"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             rules: AxisRules | None = None, variant: str = "",
+             donate: bool = True, microbatch: int | None = None,
+             cache_dtype=None, cfg_over: dict | None = None) -> dict:
+    """variant / microbatch / cache_dtype / cfg_over support the §Perf
+    hillclimb: lower the same cell under a changed configuration and diff
+    the roofline terms."""
+    cfg = get_config(arch)
+    if cfg_over:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    if not shape_applicable(cfg, shape):
+        return {"cell": cell_name(arch, shape, multi_pod, variant),
+                "skipped": f"{arch} is not sub-quadratic; long_500k skipped "
+                           "(DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or AxisRules()
+    set_rules(mesh, rules)
+    model = build_model(cfg)
+    seq, gb, kind = SHAPES[shape]
+    t0 = time.time()
+
+    params, p_axes = model.abstract_params()
+    p_sh = shardings_for_tree(p_axes, mesh, rules, shapes_tree=params)
+    in_specs = model.input_specs(shape)
+    b_axes = model.batch_axes(shape)
+    b_sh = {k: NamedSharding(mesh, logical_to_spec(
+        b_axes[k], mesh, rules, shape=in_specs[k].shape)) for k in in_specs}
+
+    if kind == "train":
+        mb = microbatch or MICROBATCH.get(
+            arch, MICROBATCH["default"]).get(shape, 1)
+        result_mb = mb
+        train_step = make_train_step(model, num_microbatches=mb)
+        opt = jax.eval_shape(adamw_init, params)
+        opt_sh = type(opt)(m=jax.tree.map(lambda s: s, p_sh),
+                           v=jax.tree.map(lambda s: s, p_sh),
+                           step=NamedSharding(mesh, P()))
+        fn = jax.jit(train_step,
+                     in_shardings=(p_sh, opt_sh, b_sh),
+                     out_shardings=(p_sh, opt_sh, None),
+                     donate_argnums=(0, 1) if donate else ())
+        lowered = fn.lower(params, opt, in_specs)
+    elif kind == "prefill":
+        def prefill(params, batch):
+            if cfg.family == "encdec":
+                from ..models.encdec import decode as dec_fwd, encode
+                enc = encode(params, cfg, batch["frames"], remat=False)
+                h, _ = dec_fwd(params, cfg, batch["tokens"], enc, remat=False)
+            else:
+                from ..models.transformer import forward
+                h, _, _ = forward(params, cfg, batch["tokens"],
+                                  vision_embeds=batch.get("vision_embeds"),
+                                  remat=False)
+            w = (params["embed"].T if cfg.tie_embeddings
+                 else params["unembed"]).astype(jnp.bfloat16)
+            return (h[:, -1] @ w).astype(jnp.float32)
+        fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+        lowered = fn.lower(params, in_specs)
+    else:  # decode
+        cache, c_axes = model.abstract_cache(
+            gb, seq, dtype=cache_dtype or jnp.bfloat16)
+        c_sh = shardings_for_tree(c_axes, mesh, rules, shapes_tree=cache)
+        extra = {k: v for k, v in in_specs.items() if k != "tokens"}
+        extra_sh = {k: b_sh[k] for k in extra}
+
+        def decode(params, cache, tokens, idx, extra):
+            return model.decode_fn(params, cache, tokens, idx, **extra)
+        fn = jax.jit(decode,
+                     in_shardings=(p_sh, c_sh, b_sh["tokens"],
+                                   NamedSharding(mesh, P()), extra_sh),
+                     donate_argnums=(1,) if donate else ())
+        lowered = fn.lower(params, cache, in_specs["tokens"],
+                           jax.ShapeDtypeStruct((), jnp.int32), extra)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    widened = _bf16_widening_estimate(txt)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    result = {
+        "cell": cell_name(arch, shape, multi_pod, variant),
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": dict(mesh.shape), "chips": n_chips,
+        "seq": seq, "global_batch": gb,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+        },
+        "cost": {"flops": ca.get("flops", 0.0),
+                 "transcendentals": ca.get("transcendentals", 0.0),
+                 "bytes_accessed": ca.get("bytes accessed", 0.0)},
+        "collectives": coll,
+    }
+    # The CPU backend widens bf16 arithmetic to f32 and keeps f32 copies of
+    # bf16 tensors across loop boundaries; a native-bf16 TPU backend would
+    # not allocate those.  Report both raw and corrected peaks.
+    result["memory"]["bf16_widening_bytes_est"] = widened
+    result["memory"]["peak_bytes_tpu_corrected"] = max(
+        0, result["memory"]["peak_bytes_per_device"] - widened)
+    result["fits_hbm16"] = bool(
+        result["memory"]["peak_bytes_per_device"] < 16e9)
+    result["fits_hbm16_tpu_corrected"] = bool(
+        result["memory"]["peak_bytes_tpu_corrected"] < 16e9)
+    return result
+
+
+def _bf16_widening_estimate(txt: str) -> int:
+    """Bytes of f32 buffers that pair a same-shape bf16 buffer (the CPU
+    backend's widening artifact).  Conservative: counts each dims-set once."""
+    import re
+    bf16 = set(re.findall(r"bf16\[([0-9,]+)\]", txt))
+    f32 = set(re.findall(r"f32\[([0-9,]+)\]", txt))
+    total = 0
+    for dims in bf16 & f32:
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 > 64 * 2**20:  # only large buffers matter for the peak
+            total += n * 4
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in cells:
+        name = cell_name(a, s, mp)
+        path = OUT_DIR / f"{name}.json"
+        if path.exists() and not args.force:
+            print(f"[cache] {name}")
+            n_ok += 1
+            continue
+        print(f"[run  ] {name} ...", flush=True)
+        try:
+            res = run_cell(a, s, multi_pod=mp, donate=not args.no_donate)
+            path.write_text(json.dumps(res, indent=1))
+            if "skipped" in res:
+                print(f"[skip ] {name}: {res['skipped']}")
+                n_skip += 1
+            else:
+                mem = res["memory"]["peak_bytes_per_device"] / 2**30
+                fl = res["cost"]["flops"]
+                print(f"[ok   ] {name}: peak {mem:.2f} GiB/dev, "
+                      f"{fl:.3g} flops/dev, "
+                      f"coll {res['collectives'].get('total', 0)/2**20:.1f} "
+                      f"MiB/dev, compile {res['compile_s']:.0f}s "
+                      f"fits={res['fits_hbm16']}")
+                n_ok += 1
+        except Exception as e:  # noqa: BLE001 — report, continue sweep
+            n_fail += 1
+            print(f"[FAIL ] {name}: {e}")
+            (OUT_DIR / f"{name}.FAILED.txt").write_text(
+                traceback.format_exc())
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,63 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` reports flops and bytes-accessed per device but
+NOT collective bytes; we regex every collective op in ``compiled.as_text()``
+and sum its output-shape bytes (per-device payload).  This feeds the third
+roofline term (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# matches e.g.  %ar = bf16[16,1024]{1,0} all-reduce(...)
+#          or   %t = (f32[8,128], f32[8,128]) all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes (per device), plus op counts."""
+    out: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # avoid double counting async start/done pairs: count "-start" ops and
+        # plain ops; "-done" repeats the shape of its start
+        window = hlo_text[m.start(): m.start() + 400]
+        if f"{kind}-done(" in window.split("\n")[0]:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    result = dict(out)
+    result["_counts"] = dict(counts)
+    result["total"] = sum(v for k, v in out.items())
+    return result

@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant: importing this module never touches
+jax device state (device count is locked on first jax init, and the 512
+placeholder devices are only forced by launch/dryrun.py)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips single pod; (2,16,16) = 512 chips for two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    n_data = min(n_data, n)
+    n_model = max(1, min(n_model, n // n_data))
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,96 @@
+"""Training driver: end-to-end loop with checkpoint/restart and the
+queue-ordered data pipeline.
+
+Full-scale use lowers the same train_step the dry-run compiles; on this CPU
+container run reduced configs, e.g.:
+
+  python -m repro.launch.train --arch llama3_8b --reduced --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..data import GlobalOrderPipeline
+from ..fault import FailureInjector, run_with_restarts
+from ..models import build_model
+from ..train import adamw_init, make_train_step
+
+
+def train_loop(arch: str, *, reduced: bool = True, steps: int = 50,
+               global_batch: int = 8, seq_len: int = 64,
+               ckpt_dir=None, ckpt_every: int = 10,
+               fail_at=(), log=print):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    pipe = GlobalOrderPipeline(seq_len, cfg.vocab, global_batch)
+    train_step = jax.jit(make_train_step(model, num_microbatches=1,
+                                         total_steps=steps))
+
+    def init_state():
+        params, _ = model.init_params(jax.random.key(0))
+        return {"params": params, "opt": adamw_init(params)}
+
+    losses = []
+
+    def step_fn(state, step):
+        batch = pipe.batch_at_step(step)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()
+                 if k != "sample_indices"}
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(step)
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((global_batch, cfg.enc_seq, cfg.d_model)),
+                jnp.bfloat16)
+        if cfg.family == "vlm":
+            rng = np.random.default_rng(step)
+            batch["vision_embeds"] = jnp.asarray(
+                rng.standard_normal((global_batch, cfg.n_vision_tokens,
+                                     cfg.d_model)), jnp.bfloat16)
+        params, opt, metrics = train_step(state["params"], state["opt"],
+                                          batch)
+        loss = float(metrics["loss"])
+        losses.append((step, loss))
+        if step % 10 == 0:
+            log(f"step {step:4d}  loss {loss:.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}")
+        return {"params": params, "opt": opt}
+
+    if ckpt_dir is None:
+        import tempfile
+        ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    injector = FailureInjector(fail_at_steps=tuple(fail_at))
+    state, metrics = run_with_restarts(
+        init_state=init_state, step_fn=step_fn, n_steps=steps,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, injector=injector, log=log)
+    return state, losses, metrics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    _, losses, metrics = train_loop(
+        args.arch, reduced=args.reduced, steps=args.steps,
+        global_batch=args.global_batch, seq_len=args.seq_len,
+        ckpt_dir=args.ckpt_dir)
+    print(f"done in {time.time()-t0:.1f}s; "
+          f"loss {losses[0][1]:.3f} -> {losses[-1][1]:.3f}; {metrics}")
+
+
+if __name__ == "__main__":
+    main()

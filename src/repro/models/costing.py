@@ -1,0 +1,61 @@
+"""Costing mode: unroll every internal loop so ``compiled.cost_analysis()``
+is exact (XLA costs while-loop bodies ONCE, regardless of trip count — see
+EXPERIMENTS.md §Roofline methodology).
+
+Usage: ``with costing_mode(): lower(...)`` — model scans (layers,
+microbatches, loss chunks, SSD chunks, attention q-chunks) switch to
+unrolled forms.  Costing lowers reduced-depth variants (L=2 and L=4) and
+extrapolates linearly in L, which is exact because layers are identical."""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+def unrolling() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def costing_mode():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan that fully unrolls in costing mode."""
+    from jax import lax
+    if not _UNROLL:
+        return lax.scan(f, init, xs, length=length)
+    import jax
+    import jax.numpy as jnp
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def xmap(f, xs):
+    """lax.map that fully unrolls in costing mode."""
+    from jax import lax
+    if not _UNROLL:
+        return lax.map(f, xs)
+    import jax
+    import jax.numpy as jnp
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = [f(jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
+    return jax.tree.map(lambda *a: jnp.stack(a), *ys)

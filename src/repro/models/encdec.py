@@ -1,0 +1,155 @@
+"""Whisper-style encoder-decoder (audio frontend stubbed).
+
+Encoder: bidirectional attention over precomputed frame embeddings
+(``input_specs`` supplies [B, enc_seq, d] — the conv stem is a stub per the
+assignment).  Decoder: causal self-attention + cross-attention to the
+encoder output.  Sinusoidal positions, scan-over-layers, remat.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import constraint
+from .costing import scan as cscan
+from . import layers as L
+
+
+def _init_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L._ones_init((cfg.d_model,), ("embed",))
+    p["attn"], a["attn"] = L.init_attention(ks[0], cfg)
+    p["ln2"], a["ln2"] = L._ones_init((cfg.d_model,), ("embed",))
+    p["mlp"], a["mlp"] = L.init_mlp(ks[1], cfg)
+    return p, a
+
+
+def _init_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L._ones_init((cfg.d_model,), ("embed",))
+    p["self_attn"], a["self_attn"] = L.init_attention(ks[0], cfg)
+    p["lnx"], a["lnx"] = L._ones_init((cfg.d_model,), ("embed",))
+    p["cross_attn"], a["cross_attn"] = L.init_attention(ks[1], cfg)
+    p["ln2"], a["ln2"] = L._ones_init((cfg.d_model,), ("embed",))
+    p["mlp"], a["mlp"] = L.init_mlp(ks[2], cfg)
+    return p, a
+
+
+def init_encdec(key, cfg):
+    from .transformer import _stack_init
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["embed"], a["embed"] = L._dense_init(
+        ks[0], (cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02)
+    p["enc_layers"], a["enc_layers"] = _stack_init(
+        _init_enc_block, ks[1], cfg.enc_layers, cfg)
+    p["enc_ln"], a["enc_ln"] = L._ones_init((cfg.d_model,), ("embed",))
+    p["dec_layers"], a["dec_layers"] = _stack_init(
+        _init_dec_block, ks[2], cfg.n_layers, cfg)
+    p["final_ln"], a["final_ln"] = L._ones_init((cfg.d_model,), ("embed",))
+    p["unembed"], a["unembed"] = L._dense_init(
+        ks[3], (cfg.d_model, cfg.vocab), ("embed", "vocab"), scale=0.02)
+    return p, a
+
+
+def encode(params, cfg, frames, remat=True):
+    """frames: [B, T, d] stub embeddings -> encoder states [B, T, d]."""
+    B, T, d = frames.shape
+    h = frames.astype(jnp.bfloat16) + L.sinusoidal_pos(T, d)
+    h = constraint(h, ("batch", None, None))
+    positions = jnp.arange(T)
+
+    def body(hh, lp):
+        hh = constraint(hh, ("batch", "seq", None))
+        x = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+        o, _ = L.attention(lp["attn"], x, cfg, positions, causal=False)
+        hh = hh + o
+        x = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        return hh + L.mlp(lp["mlp"], x), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = cscan(body_fn, h, params["enc_layers"])
+    return L.rms_norm(h, params["enc_ln"], cfg.norm_eps)
+
+
+def _cross_kv(lp, cfg, enc_out):
+    B, T, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ lp["cross_attn"]["wk"]).reshape(B, T, KV, hd)
+    v = (enc_out @ lp["cross_attn"]["wv"]).reshape(B, T, KV, hd)
+    return k, v
+
+
+def decode(params, cfg, tokens, enc_out, cache=None, cache_index=None,
+           remat=True):
+    """tokens: [B, S]; enc_out: [B, T, d].  Returns (h, new_cache)."""
+    h = params["embed"].astype(jnp.bfloat16)[tokens]
+    h = constraint(h, ("batch", None, None))
+    B, S, d = h.shape
+    base = cache_index if cache_index is not None else 0
+    positions = base + jnp.arange(S)
+
+    def body(hh, xs):
+        if cache is None:
+            lp = xs
+            hh = constraint(hh, ("batch", "seq", None))
+            x = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            o, _ = L.attention(lp["self_attn"], x, cfg, positions,
+                               causal=True)
+            hh = hh + o
+            x = L.rms_norm(hh, lp["lnx"], cfg.norm_eps)
+            o, _ = L.attention(lp["cross_attn"], x, cfg, positions,
+                               cross_kv=_cross_kv(lp, cfg, enc_out))
+            hh = hh + o
+            x = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            return hh + L.mlp(lp["mlp"], x), None
+        lp, kc, vc = xs
+        x = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+        o, nc = L.attention(lp["self_attn"], x, cfg, positions, causal=True,
+                            cache={"k": kc, "v": vc},
+                            cache_index=cache_index)
+        hh = hh + o
+        x = L.rms_norm(hh, lp["lnx"], cfg.norm_eps)
+        o, _ = L.attention(lp["cross_attn"], x, cfg, positions,
+                           cross_kv=_cross_kv(lp, cfg, enc_out))
+        hh = hh + o
+        x = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        return hh + L.mlp(lp["mlp"], x), (nc["k"], nc["v"])
+
+    body_fn = jax.checkpoint(body) if (remat and cache is None) else body
+    if cache is None:
+        h, _ = cscan(body_fn, h, params["dec_layers"])
+        new_cache = None
+    else:
+        h, (nk, nv) = cscan(body_fn, h,
+                               (params["dec_layers"], cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+    return L.rms_norm(h, params["final_ln"], cfg.norm_eps), new_cache
+
+
+def encdec_loss(params, cfg, batch, remat=True):
+    enc_out = encode(params, cfg, batch["frames"], remat=remat)
+    h, _ = decode(params, cfg, batch["tokens"], enc_out, remat=remat)
+    return L.chunked_xent(h, params["unembed"].astype(jnp.bfloat16),
+                          batch["targets"], batch.get("valid"))
+
+
+def encdec_init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.hd)
+    axes = ("layer", "batch", "kv", None, "kv_hd")
+    return ({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)},
+            {"k": axes, "v": axes})
+
+
+def encdec_decode_step(params, cfg, cache, tokens, cache_index, enc_out):
+    h, new_cache = decode(params, cfg, tokens, enc_out, cache=cache,
+                          cache_index=cache_index, remat=False)
+    logits = (h[:, -1] @ params["unembed"].astype(jnp.bfloat16)
+              ).astype(jnp.float32)
+    return logits, new_cache

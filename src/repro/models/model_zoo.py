@@ -1,0 +1,126 @@
+"""Model facade: one uniform interface over every assigned architecture.
+
+``build_model(cfg)`` returns a :class:`Model` exposing
+
+  init_params(rng)          real parameters (smoke tests, examples)
+  abstract_params()         ShapeDtypeStructs via eval_shape (dry-run)
+  param_axes()              logical-axis tree parallel to params
+  loss_fn(params, batch)    training loss
+  decode_fn(params, cache, tokens, idx, [enc_out])   one serve step
+  init_cache(batch, seq)    decode cache (+ axes); abstract_cache for dry-run
+  input_specs(shape_name)   ShapeDtypeStruct stand-ins for every input
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, ArchConfig
+from . import encdec as ED
+from . import transformer as TF
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+
+    # ----------------------------------------------------------- params ----
+    def init_params(self, rng) -> Tuple[Dict, Dict]:
+        if self.cfg.family == "encdec":
+            return ED.init_encdec(rng, self.cfg)
+        return TF.init_lm(rng, self.cfg)
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct tree, logical-axes tree) — zero allocation.
+
+        The axes tree is static python data; capture it by side effect while
+        eval_shape traces the parameter shapes."""
+        cap = {}
+
+        def f(k):
+            p, a = self.init_params(k)
+            cap["axes"] = a
+            return p
+
+        p = jax.eval_shape(f, jax.random.key(0))
+        return p, cap["axes"]
+
+    # ------------------------------------------------------------- loss ----
+    def loss_fn(self, params, batch, remat=True):
+        if self.cfg.family == "encdec":
+            return ED.encdec_loss(params, self.cfg, batch, remat=remat)
+        return TF.lm_loss(params, self.cfg, batch, remat=remat)
+
+    # ------------------------------------------------------------ decode ---
+    def init_cache(self, batch, max_seq, dtype=jnp.bfloat16):
+        if self.cfg.family == "encdec":
+            return ED.encdec_init_cache(self.cfg, batch, max_seq, dtype)
+        return TF.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def abstract_cache(self, batch, max_seq, dtype=jnp.bfloat16):
+        cap = {}
+
+        def f():
+            c, a = self.init_cache(batch, max_seq, dtype)
+            cap["axes"] = a
+            return c
+
+        c = jax.eval_shape(f)
+        return c, cap["axes"]
+
+    def decode_fn(self, params, cache, tokens, cache_index, enc_out=None):
+        if self.cfg.family == "encdec":
+            return ED.encdec_decode_step(params, self.cfg, cache, tokens,
+                                         cache_index, enc_out)
+        return TF.decode_step(params, self.cfg, cache, tokens, cache_index)
+
+    # ------------------------------------------------------- input specs ---
+    def input_specs(self, shape_name: str, dtype=jnp.bfloat16
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    For train/prefill: the token batch (+ stub modality embeddings).
+    For decode: one new token per sequence (the KV cache/SSM state is a
+    separate argument, see launch.dryrun)."""
+        seq, gb, kind = SHAPES[shape_name]
+        cfg = self.cfg
+        i32 = jnp.int32
+        if kind in ("train", "prefill"):
+            specs = {}
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (gb, cfg.enc_seq, cfg.d_model), dtype)
+                specs["tokens"] = jax.ShapeDtypeStruct((gb, seq), i32)
+            elif cfg.family == "vlm":
+                text = seq - cfg.n_vision_tokens
+                specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (gb, cfg.n_vision_tokens, cfg.d_model), dtype)
+                specs["tokens"] = jax.ShapeDtypeStruct((gb, text), i32)
+            else:
+                specs["tokens"] = jax.ShapeDtypeStruct((gb, seq), i32)
+            if kind == "train":
+                tshape = specs["tokens"].shape
+                specs["targets"] = jax.ShapeDtypeStruct(tshape, i32)
+            return specs
+        # decode: one token per sequence
+        specs = {"tokens": jax.ShapeDtypeStruct((gb, 1), i32)}
+        if cfg.family == "encdec":
+            specs["enc_out"] = jax.ShapeDtypeStruct(
+                (gb, cfg.enc_seq, cfg.d_model), dtype)
+        return specs
+
+    def batch_axes(self, shape_name: str) -> Dict[str, tuple]:
+        """Logical axes for input_specs entries."""
+        specs = self.input_specs(shape_name)
+        out = {}
+        for k, v in specs.items():
+            out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+        return out
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,79 @@
+"""Mixture-of-Experts FFN — GShard-style per-row capacity dispatch.
+
+Dispatch/combine are dense one-hot einsums (no scatter): for each batch row,
+each token's top-k choices get a rank within their expert (exclusive cumsum
+over the row); ranks beyond the per-row capacity ``C = S*k/E * factor`` drop
+(classic capacity dropping).  The [B,S,E,C] dispatch tensor contracts tokens
+into per-expert buffers and back — MXU-friendly, and GSPMD shards it exactly
+like any other matmul (dispatch overhead ~E*C*d/(k*3*d*ff) ≈ 5% of expert
+flops at mixtral scale).
+
+This is the SKUEUE Stage-4 dataflow with experts as DHT shards: hashed-
+destination dispatch, bounded per-destination capacity, combine on return
+(DESIGN.md §2).  Sharding: ``moe_ep=True`` shards experts over "model"
+(granite-moe: 32/16); otherwise d_ff shards over "model" and experts
+replicate (mixtral: 8 experts < 16 shards).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import constraint
+from .layers import _dense_init
+
+
+def init_moe(key, cfg):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    ex = "expert" if cfg.moe_ep else "expert_rep"
+    p, a = {}, {}
+    p["router"], a["router"] = _dense_init(ks[0], (d, E), ("embed", None),
+                                           dtype=jnp.float32)
+    p["w1"], a["w1"] = _dense_init(ks[1], (E, d, f), (ex, "embed", "ff"))
+    p["w3"], a["w3"] = _dense_init(ks[2], (E, d, f), (ex, "embed", "ff"))
+    p["w2"], a["w2"] = _dense_init(ks[3], (E, f, d), (ex, "ff", "embed"))
+    return p, a
+
+
+def moe_ffn(p, x, cfg, capacity_factor: float = None):
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    capacity_factor = capacity_factor or cfg.capacity_factor
+    C = int(max(1, round(S * K / E * capacity_factor)))
+
+    logits = (x.astype(jnp.float32) @ p["router"])             # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, K)                           # [B, S, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                               # [E]
+    onehot_e = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # [B, S, K, E]
+    ce = onehot_e.mean(axis=(0, 1, 2))
+    aux = E * jnp.sum(me * ce)
+
+    # rank of each (token, choice) within its expert, per row
+    flat = onehot_e.reshape(B, S * K, E)
+    ranks = jnp.cumsum(flat, axis=1) - flat                    # exclusive
+    pos = jnp.einsum("bte,bte->bt", ranks, flat).reshape(B, S, K)
+    keep = (pos < C).astype(jnp.float32)
+    onehot_c = jax.nn.one_hot(pos.astype(jnp.int32), C,
+                              dtype=jnp.float32)               # [B, S, K, C]
+    disp = jnp.einsum("bske,bskc->bsec", onehot_e * keep[..., None],
+                      onehot_c).astype(x.dtype)                # [B, S, E, C]
+    comb = jnp.einsum("bske,bskc,bsk->bsec", onehot_e, onehot_c,
+                      gates * keep).astype(jnp.float32)
+
+    ex = "expert" if cfg.moe_ep else None
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)                 # [B, E, C, d]
+    xe = constraint(xe, ("batch", ex, None, None))
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w1"])) * \
+        jnp.einsum("becd,edf->becf", xe, p["w3"])
+    h = constraint(h, ("batch", ex, None, "ff" if not cfg.moe_ep else None))
+    ye = jnp.einsum("becf,efd->becd", h, p["w2"])
+    ye = constraint(ye, ("batch", ex, None, None))
+    y = jnp.einsum("bsec,becd->bsd", comb, ye.astype(jnp.float32))
+    return y.astype(x.dtype), aux

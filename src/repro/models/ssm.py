@@ -1,0 +1,158 @@
+"""Mamba-2 block (SSD, arXiv:2405.21060) — chunked jnp path + Pallas option.
+
+Block: in_proj -> [z | xBC | dt]; short causal depthwise conv on xBC; SSD
+scan over heads; gated RMSNorm(y, z); out_proj.  The SSD scan itself is the
+chunked block decomposition (same math as kernels/ssd_scan; that kernel is
+the TPU fast path, this jnp version is what the dry-run lowers).
+
+Decode is O(1): the recurrent state [H, N, P] plus a (K-1)-deep conv tail
+replace the KV cache entirely — this is why mamba2/zamba2 run long_500k.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .costing import scan as cscan
+from .layers import _dense_init, rms_norm
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    K = cfg.conv_kernel
+    conv_dim = di + 2 * G * N
+    proj_out = 2 * di + 2 * G * N + H   # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["in_proj"], a["in_proj"] = _dense_init(ks[0], (d, proj_out),
+                                             ("embed", "ssm_inner"))
+    p["conv_w"], a["conv_w"] = _dense_init(ks[1], (K, conv_dim),
+                                           (None, "ssm_inner"), scale=0.5)
+    p["A_log"], a["A_log"] = (jnp.zeros((H,), jnp.float32), (None,))
+    p["D"], a["D"] = (jnp.ones((H,), jnp.float32), (None,))
+    p["dt_bias"], a["dt_bias"] = (jnp.zeros((H,), jnp.float32), (None,))
+    p["norm_w"], a["norm_w"] = (jnp.ones((di,), jnp.bfloat16), ("ssm_inner",))
+    p["out_proj"], a["out_proj"] = _dense_init(ks[2], (di, d),
+                                               ("ssm_inner", "embed"))
+    return p, a
+
+
+def _ssd_chunked(xt, loga, B, C, chunk=128):
+    """xt: [b, L, H, P]; loga: [b, L, H]; B/C: [b, L, G, N] (G=1 broadcast).
+    Chunked scan over L with lax.scan across chunks."""
+    b, L, H, P = xt.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    while L % Q:
+        Q //= 2
+    nc = L // Q
+    xt_c = xt.reshape(b, nc, Q, H, P).astype(jnp.float32)
+    la_c = loga.reshape(b, nc, Q, H).astype(jnp.float32)
+    B_c = B.reshape(b, nc, Q, -1, N).astype(jnp.float32)
+    C_c = C.reshape(b, nc, Q, -1, N).astype(jnp.float32)
+
+    def chunk_step(S, inp):
+        xq, lq, bq, cq = inp            # [b,Q,H,P], [b,Q,H], [b,Q,G,N]
+        l = jnp.cumsum(lq, axis=1)       # [b,Q,H]
+        bqh = jnp.broadcast_to(bq[:, :, :1], (b, Q, 1, N))[:, :, 0]
+        cqh = jnp.broadcast_to(cq[:, :, :1], (b, Q, 1, N))[:, :, 0]
+        # inter-chunk
+        y_inter = jnp.einsum("bqn,bhnp,bqh->bqhp", cqh, S, jnp.exp(l))
+        # intra-chunk
+        scores = jnp.einsum("bqn,btn->bqt", cqh, bqh)
+        dec = jnp.exp(l[:, :, None] - l[:, None])        # [b,q,t,H]
+        ii = jnp.arange(Q)
+        mask = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        w = scores[..., None] * jnp.where(mask, dec, 0.0)
+        y_intra = jnp.einsum("bqth,bthp->bqhp", w, xq)
+        # state update
+        ltot = l[:, -1]                                   # [b,H]
+        bdec = jnp.einsum("btn,bth->bthn", bqh,
+                          jnp.exp(ltot[:, None] - l))
+        S_new = jnp.exp(ltot)[:, :, None, None] * S + \
+            jnp.einsum("bthn,bthp->bhnp", bdec, xq)
+        return S_new, y_inter + y_intra
+
+    S0 = jnp.zeros((b, H, N, P), jnp.float32)
+    inp = (xt_c.transpose(1, 0, 2, 3, 4), la_c.transpose(1, 0, 2, 3),
+           B_c.transpose(1, 0, 2, 3, 4), C_c.transpose(1, 0, 2, 3, 4))
+    S_fin, y = cscan(chunk_step, S0, inp)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, L, H, P)
+    return y.astype(xt.dtype), S_fin
+
+
+def _split_proj(cfg, zxbcdt):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: di + di + 2 * G * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def mamba2_block(p, x, cfg, state: Optional[dict] = None):
+    """x: [B, S, d].  Returns (y, new_state | None).
+
+    state (decode): {"ssm": [B,H,N,P] f32, "conv": [B,K-1,conv_dim]}."""
+    Bsz, S, d = x.shape
+    di, H, N, G, K = (cfg.d_inner, cfg.ssm_heads, cfg.ssm_state,
+                      cfg.ssm_groups, cfg.conv_kernel)
+    P = cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+
+    new_state = None
+    if state is None:
+        # causal depthwise conv over sequence
+        pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+        conv = sum(pad[:, i: i + S] * p["conv_w"][i].astype(x.dtype)
+                   for i in range(K))
+        xBC = jax.nn.silu(conv)
+    else:
+        tail = state["conv"]                      # [B, K-1, conv_dim]
+        win = jnp.concatenate([tail, xBC], axis=1)  # [B, K, conv] (S==1)
+        conv = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))[:, None]
+        xBC = jax.nn.silu(conv.astype(x.dtype))
+        new_conv = win[:, 1:]
+
+    xpart = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bmat = xBC[..., di: di + G * N].reshape(Bsz, S, G, N)
+    Cmat = xBC[..., di + G * N:].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    loga = -jnp.exp(p["A_log"]) * dt
+    xt = xpart.astype(jnp.float32) * dt[..., None]
+
+    if state is None:
+        y, _ = _ssd_chunked(xt, loga, Bmat, Cmat)
+    else:
+        S_prev = state["ssm"]                      # [B,H,N,P]
+        b1 = Bmat[:, 0, 0]                         # [B,N]  (G=1)
+        c1 = Cmat[:, 0, 0]
+        a1 = jnp.exp(loga[:, 0])                   # [B,H]
+        S_new = a1[:, :, None, None] * S_prev + \
+            jnp.einsum("bn,bhp->bhnp", b1.astype(jnp.float32), xt[:, 0])
+        y = jnp.einsum("bn,bhnp->bhp", c1.astype(jnp.float32), S_new)[:, None]
+        new_state = {"ssm": S_new, "conv": new_conv}
+        y = y.astype(x.dtype)
+
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xpart
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(x.dtype)), p["norm_w"],
+                 cfg.norm_eps)
+    return (y @ p["out_proj"]).astype(x.dtype), new_state
+
+
+def init_mamba_state(cfg, batch, dtype=jnp.bfloat16):
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,280 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are STACKED on a leading axis and executed with ``lax.scan`` (small
+HLO, fast multi-pod compiles — the MaxText approach).  The scan body is
+``jax.checkpoint``-wrapped (full remat by default).  Hybrid (Zamba2-style)
+models run the mamba scan in segments of ``attn_every`` layers with ONE
+shared attention+FFN block applied between segments.
+
+All functions are pure over (params, inputs); logical-axis trees parallel
+the param trees for sharding (repro.sharding.specs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import constraint
+from .costing import scan as cscan
+from . import layers as L
+from .moe import init_moe, moe_ffn
+from .ssm import init_mamba2, init_mamba_state, mamba2_block
+
+
+# ------------------------------------------------------------------ init ---
+def _stack_init(fn, key, n, *args):
+    """vmap a per-layer init over n layer keys -> stacked params + axes."""
+    keys = jax.random.split(key, n)
+    p0, a0 = fn(keys[0], *args)
+    stacked = jax.vmap(lambda k: fn(k, *args)[0])(keys)
+    axes = jax.tree.map(lambda ax: ("layer",) + ax, a0,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+    return stacked, axes
+
+
+def _init_block(key, cfg):
+    """One transformer block (attn + ffn/moe/mamba per family)."""
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["ln1"], a["ln1"] = L._ones_init((cfg.d_model,), ("embed",))
+        p["attn"], a["attn"] = L.init_attention(ks[0], cfg)
+        p["ln2"], a["ln2"] = L._ones_init((cfg.d_model,), ("embed",))
+        if cfg.family == "moe":
+            p["moe"], a["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"], a["mlp"] = L.init_mlp(ks[1], cfg)
+    elif cfg.family in ("ssm", "hybrid"):
+        p["ln1"], a["ln1"] = L._ones_init((cfg.d_model,), ("embed",))
+        p["mamba"], a["mamba"] = init_mamba2(ks[0], cfg)
+    else:
+        raise ValueError(cfg.family)
+    return p, a
+
+
+def init_lm(key, cfg):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["embed"], a["embed"] = L._dense_init(
+        ks[0], (cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02)
+    p["layers"], a["layers"] = _stack_init(_init_block, ks[1],
+                                           cfg.n_layers, cfg)
+    p["final_ln"], a["final_ln"] = L._ones_init((cfg.d_model,), ("embed",))
+    if not cfg.tie_embeddings:
+        p["unembed"], a["unembed"] = L._dense_init(
+            ks[2], (cfg.d_model, cfg.vocab), ("embed", "vocab"), scale=0.02)
+    if cfg.family == "hybrid":
+        sp, sa = {}, {}
+        sp["ln1"], sa["ln1"] = L._ones_init((cfg.d_model,), ("embed",))
+        sp["attn"], sa["attn"] = L.init_attention(ks[3], cfg)
+        sp["ln2"], sa["ln2"] = L._ones_init((cfg.d_model,), ("embed",))
+        sp["mlp"], sa["mlp"] = L.init_mlp(ks[4], cfg)
+        p["shared"], a["shared"] = sp, sa
+    return p, a
+
+
+# --------------------------------------------------------------- forward ---
+def _attn_block(p, h, cfg, positions, cache=None, cache_index=None):
+    x = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    attn_out, new_cache = L.attention(
+        p["attn"], x, cfg, positions, causal=True, window=cfg.window,
+        cache=cache, cache_index=cache_index)
+    h = h + attn_out
+    x = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_ffn(p["moe"], x, cfg)
+    else:
+        y, aux = L.mlp(p["mlp"], x), jnp.float32(0)
+    return h + y, aux, new_cache
+
+
+def _mamba_layer(p, h, cfg, state=None):
+    x = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    y, new_state = mamba2_block(p["mamba"], x, cfg, state=state)
+    return h + y, new_state
+
+
+def forward(params, cfg, tokens, vision_embeds=None, cache=None,
+            cache_index=None, remat=True):
+    """tokens: [B, S] int32.  vision_embeds: [B, n_vis, d] (vlm prefill).
+    cache: per-family decode cache (see init_cache).  Returns
+    (hidden [B, S_total, d], aux_loss, new_cache)."""
+    h = params["embed"].astype(jnp.bfloat16)[tokens]
+    if vision_embeds is not None:
+        h = jnp.concatenate([vision_embeds.astype(h.dtype), h], axis=1)
+    h = constraint(h, ("batch", None, None))
+    B, S, _ = h.shape
+    base = cache_index if cache_index is not None else 0
+    positions = base + jnp.arange(S)
+
+    aux_total = jnp.float32(0)
+    new_cache: Dict[str, Any] = {}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            hh, aux = carry
+            if cache is None:
+                # sequence parallelism: the carry (== the remat stack saved
+                # for backward) stays seq-sharded over "model"
+                hh = constraint(hh, ("batch", "seq", None))
+                lp = xs
+                hh, a, _ = _attn_block(lp, hh, cfg, positions)
+                return (hh, aux + a), None
+            lp, kc, vc = xs
+            hh, a, nc = _attn_block(lp, hh, cfg, positions,
+                                    cache={"k": kc, "v": vc},
+                                    cache_index=cache_index)
+            return (hh, aux + a), (nc["k"], nc["v"])
+        body_fn = jax.checkpoint(body) if (remat and cache is None) else body
+        if cache is None:
+            (h, aux_total), _ = cscan(body_fn, (h, aux_total),
+                                         params["layers"])
+        else:
+            (h, aux_total), (nk, nv) = cscan(
+                body_fn, (h, aux_total),
+                (params["layers"], cache["k"], cache["v"]))
+            new_cache = {"k": nk, "v": nv}
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            hh = carry
+            if cache is None:
+                hh = constraint(hh, ("batch", "seq", None))
+                hh, _ = _mamba_layer(xs, hh, cfg)
+                return hh, None
+            lp, ssm_s, conv_s = xs
+            hh, ns = _mamba_layer(lp, hh, cfg,
+                                  state={"ssm": ssm_s, "conv": conv_s})
+            return hh, (ns["ssm"], ns["conv"])
+        body_fn = jax.checkpoint(body) if (remat and cache is None) else body
+        if cache is None:
+            h, _ = cscan(body_fn, h, params["layers"])
+        else:
+            h, (nssm, nconv) = cscan(
+                body_fn, h, (params["layers"], cache["ssm"], cache["conv"]))
+            new_cache = {"ssm": nssm, "conv": nconv}
+
+    elif cfg.family == "hybrid":
+        # segments of attn_every mamba layers + the shared attn block
+        k = cfg.attn_every
+        n_seg = (cfg.n_layers + k - 1) // k
+        seg_caches = []
+        for s in range(n_seg):
+            lo, hi = s * k, min((s + 1) * k, cfg.n_layers)
+            seg = jax.tree.map(lambda x: x[lo:hi], params["layers"])
+            if cache is None:
+                def mbody(hh, lp):
+                    hh = constraint(hh, ("batch", "seq", None))
+                    hh, _ = _mamba_layer(lp, hh, cfg)
+                    return hh, None
+                mb = jax.checkpoint(mbody) if remat else mbody
+                h, _ = cscan(mb, h, seg)
+            else:
+                def mbody_c(hh, xs):
+                    lp, ssm_s, conv_s = xs
+                    hh, ns = _mamba_layer(lp, hh, cfg,
+                                          state={"ssm": ssm_s,
+                                                 "conv": conv_s})
+                    return hh, (ns["ssm"], ns["conv"])
+                h, (nssm, nconv) = cscan(
+                    mbody_c, h,
+                    (seg, cache["ssm"][lo:hi], cache["conv"][lo:hi]))
+                new_cache.setdefault("ssm", []).append(nssm)
+                new_cache.setdefault("conv", []).append(nconv)
+            if hi == (s + 1) * k:  # full segment -> shared attention block
+                if cache is None:
+                    h, a, _ = _attn_block(params["shared"], h, cfg, positions)
+                    aux_total = aux_total + a
+                else:
+                    kc = cache["shared_k"][s]
+                    vc = cache["shared_v"][s]
+                    h, a, nc = _attn_block(
+                        params["shared"], h, cfg, positions,
+                        cache={"k": kc, "v": vc}, cache_index=cache_index)
+                    seg_caches.append(nc)
+        if cache is not None:
+            new_cache["ssm"] = jnp.concatenate(new_cache["ssm"], 0)
+            new_cache["conv"] = jnp.concatenate(new_cache["conv"], 0)
+            if seg_caches:
+                new_cache["shared_k"] = jnp.stack(
+                    [c["k"] for c in seg_caches])
+                new_cache["shared_v"] = jnp.stack(
+                    [c["v"] for c in seg_caches])
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return h, aux_total, (new_cache if cache is not None else None)
+
+
+# ------------------------------------------------------------------ loss ---
+def lm_loss(params, cfg, batch, remat=True):
+    """batch: tokens [B,S], targets [B,S] (+ vision_embeds for vlm)."""
+    ve = batch.get("vision_embeds")
+    h, aux, _ = forward(params, cfg, batch["tokens"], vision_embeds=ve,
+                        remat=remat)
+    if ve is not None:
+        h = h[:, ve.shape[1]:]  # loss on text positions only
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["unembed"]).astype(jnp.bfloat16)
+    nll = L.chunked_xent(h, w, batch["targets"], batch.get("valid"))
+    return nll + 0.01 * aux
+
+
+# ----------------------------------------------------------------- cache ---
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    """Decode cache + its logical axes (for sharding).
+
+    Sliding-window attention caps the cache at the window size: decode only
+    ever reads the last ``window`` keys (the long_500k enabler for SWA)."""
+    eff = min(max_seq, cfg.window) if cfg.window else max_seq
+    if cfg.family in ("dense", "moe", "vlm"):
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, eff, cfg.hd)
+        # resolution order: kv-heads shard when divisible; else kv_seq (off
+        # by default — flash-decoding split-K, enable via rules override);
+        # else head_dim (split-D decode with per-layer logit all-reduce)
+        axes = ("layer", "batch", "kv", "kv_seq", "kv_hd")
+        return ({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)},
+                {"k": axes, "v": axes})
+    if cfg.family == "ssm":
+        st = init_mamba_state(cfg, batch, dtype)
+        shapes = jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype), st)
+        return ({"ssm": shapes["ssm"], "conv": shapes["conv"]},
+                {"ssm": ("layer", "batch", "ssm_inner", None, None),
+                 "conv": ("layer", "batch", None, "ssm_inner")})
+    if cfg.family == "hybrid":
+        st = init_mamba_state(cfg, batch, dtype)
+        n_seg = cfg.n_layers // cfg.attn_every
+        kshape = (n_seg, batch, cfg.n_kv_heads, eff, cfg.hd)
+        return ({
+            "ssm": jnp.zeros((cfg.n_layers,) + st["ssm"].shape,
+                             st["ssm"].dtype),
+            "conv": jnp.zeros((cfg.n_layers,) + st["conv"].shape,
+                              st["conv"].dtype),
+            "shared_k": jnp.zeros(kshape, dtype),
+            "shared_v": jnp.zeros(kshape, dtype),
+        }, {
+            "ssm": ("layer", "batch", "ssm_inner", None, None),
+            "conv": ("layer", "batch", None, "ssm_inner"),
+            "shared_k": ("layer", "batch", "kv", None, "kv_hd"),
+            "shared_v": ("layer", "batch", "kv", None, "kv_hd"),
+        })
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cfg, cache, tokens, cache_index):
+    """One decode step. tokens: [B, 1].  Returns (logits [B, V], cache)."""
+    h, _, new_cache = forward(params, cfg, tokens, cache=cache,
+                              cache_index=cache_index, remat=False)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["unembed"]).astype(jnp.bfloat16)
+    logits = (h[:, -1] @ w).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,5 @@
+from .specs import (AxisRules, constraint, current_rules, logical_to_spec,
+                    set_rules, shardings_for_tree)
+
+__all__ = ["AxisRules", "constraint", "current_rules", "logical_to_spec",
+           "set_rules", "shardings_for_tree"]

@@ -1,0 +1,140 @@
+"""Logical-axis -> mesh-axis rules (DP / FSDP / TP / EP / SP).
+
+Parameters and activations carry *logical* axis names (("embed", "ff"),
+("batch", None, "embed"), ...).  ``AxisRules`` maps them onto the production
+mesh.  The default rules implement:
+
+  batch   -> ("pod", "data")     data parallelism (hierarchical across pods)
+  embed   -> ("data",)           FSDP / ZeRO-3 weight sharding
+  heads/kv/ff/vocab/ssm_inner/expert -> ("model",)   tensor/expert parallel
+  kv_seq  -> ("model",)          decode KV-cache sequence (flash-decoding
+                                 split-K) — used by the optimized specs
+  expert_rep -> None             TP-MoE (experts replicated, d_ff sharded)
+
+``constraint(x, names)`` applies ``lax.with_sharding_constraint`` when a
+mesh is active (set via ``set_rules``) and is a no-op otherwise, so model
+code stays pure and runs unsharded on CPU tests.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    rules: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+        ("batch", ("pod", "data")),
+        ("embed", ("data",)),
+        ("heads", ("model",)),
+        ("kv", ("model",)),
+        ("kv_hd", ("model",)),  # decode-cache head_dim: the split-D fallback
+        #                         when kv_heads doesn't divide the model axis
+        ("ff", ("model",)),
+        ("vocab", ("model",)),
+        ("expert", ("model",)),
+        ("expert_rep", ()),
+        ("ssm_inner", ("model",)),
+        ("kv_seq", ()),  # flash-decoding split-K: opt-in via override
+        ("layer", ()),
+        # Megatron-style sequence parallelism: the residual stream between
+        # blocks (and therefore the remat stack the layer scan saves for
+        # backward) shards its seq dim over "model"; GSPMD inserts the
+        # all-gather at attention entry / reduce-scatter at block exit.
+        ("seq", ("model",)),
+    )
+
+    def lookup(self, name: Optional[str], mesh_axes) -> Optional[Tuple[str, ...]]:
+        if name is None:
+            return None
+        for k, axes in self.rules:
+            if k == name:
+                usable = tuple(a for a in axes if a in mesh_axes)
+                return usable or None
+        return None
+
+    def override(self, **kw) -> "AxisRules":
+        d = dict(self.rules)
+        for k, v in kw.items():
+            d[k] = tuple(v) if v else ()
+        return AxisRules(rules=tuple(d.items()))
+
+
+def logical_to_spec(logical: Sequence[Optional[str]], mesh: Mesh,
+                    rules: Optional[AxisRules] = None,
+                    shape: Optional[Sequence[int]] = None) -> P:
+    """When ``shape`` is given, mappings whose axis product does not divide
+    the dim are shrunk (drop axes left-to-right) or dropped — pjit input
+    shardings require exact divisibility (e.g. vocab 50280 on a 16-way axis
+    falls back to replicated; padding the table is the optimization, see
+    EXPERIMENTS.md §Perf)."""
+    rules = rules or AxisRules()
+    names = set(mesh.axis_names)
+    parts = []
+    used = set()
+    for i, ax in enumerate(logical):
+        mapped = rules.lookup(ax, names)
+        if mapped:
+            # an axis may appear only once in a spec
+            mapped = tuple(m for m in mapped if m not in used)
+        if mapped and shape is not None:
+            while mapped:
+                prod = 1
+                for m in mapped:
+                    prod *= mesh.shape[m]
+                if shape[i] % prod == 0:
+                    break
+                mapped = mapped[1:]  # drop the outermost axis and retry
+            mapped = tuple(mapped)
+        if mapped:
+            used.update(mapped)
+            parts.append(mapped if len(mapped) > 1 else mapped[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def shardings_for_tree(axes_tree, mesh: Mesh,
+                       rules: Optional[AxisRules] = None,
+                       shapes_tree=None):
+    """Map a pytree of logical-axis tuples to NamedShardings.  Pass the
+    matching params/ShapeDtypeStruct tree to enable divisibility fallback."""
+    is_axes = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        isinstance(e, (str, type(None))) for e in x)
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda ax: NamedSharding(mesh, logical_to_spec(ax, mesh, rules)),
+            axes_tree, is_leaf=is_axes)
+    flat_a, treedef = jax.tree.flatten(axes_tree, is_leaf=is_axes)
+    flat_s = jax.tree.leaves(shapes_tree)
+    assert len(flat_a) == len(flat_s), "axes/shape trees must parallel"
+    out = [NamedSharding(mesh, logical_to_spec(a, mesh, rules,
+                                               shape=s.shape))
+           for a, s in zip(flat_a, flat_s)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def set_rules(mesh: Optional[Mesh], rules: Optional[AxisRules] = None):
+    _state.mesh = mesh
+    _state.rules = rules or AxisRules()
+
+
+def current_rules():
+    return (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+
+
+def constraint(x, logical: Sequence[Optional[str]]):
+    """Sharding constraint by logical axes; no-op without an active mesh."""
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return x
+    rules = getattr(_state, "rules", None) or AxisRules()
+    spec = logical_to_spec(logical, mesh, rules, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

@@ -1,0 +1,71 @@
+"""Gradient compression for cross-pod (DCN) reduction: int8 quantization
+with error feedback.
+
+At 2+ pods the gradient all-reduce crosses the slow inter-pod links.  The
+standard distributed-optimization trick: reduce-scatter in full precision
+inside the pod (fast ICI), quantize the pod-local partial sums to int8 with
+a per-block scale, all-reduce the int8 payload across pods (4x fewer DCN
+bytes than bf16), dequantize, and carry the quantization residual into the
+next step (error feedback keeps the compression unbiased over time).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def _quant_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_grads(grads, residual):
+    """Quantize grads+residual; returns (payload, new_residual).
+
+    payload is a pytree of (int8 blocks, f32 scales) leaf-pairs ready for
+    the cross-pod all-reduce; residual carries the error feedback."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = (jax.tree.leaves(residual) if residual is not None
+              else [jnp.zeros(g.shape, jnp.float32) for g in flat_g])
+    payload, new_res = [], []
+    for g, r in zip(flat_g, flat_r):
+        x = g.astype(jnp.float32) + r
+        q, s = _quant_int8(x)
+        deq = _dequant(q, s, g.shape)
+        payload.append((q, s))
+        new_res.append(x - deq)
+    return (jax.tree.unflatten(treedef, payload),
+            jax.tree.unflatten(treedef, new_res))
+
+
+def decompress_grads(payload, shapes):
+    flat_p = jax.tree.leaves(payload,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    flat_s, treedef = jax.tree.flatten(shapes)
+    out = [_dequant(q, s, g.shape) for (q, s), g in zip(flat_p, flat_s)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def compression_ratio(grads) -> float:
+    """Bytes(int8+scales) / bytes(bf16) — reported in EXPERIMENTS.md."""
+    total_in = sum(g.size * 2 for g in jax.tree.leaves(grads))
+    total_out = sum(g.size * 1 + (g.size // BLOCK + 1) * 4
+                    for g in jax.tree.leaves(grads))
+    return total_out / total_in

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# make tests/ helpers (multidev.py) importable under `PYTHONPATH=src pytest`
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: REDUCED configs of the same family run one
+forward + one train-grad step + one decode step on CPU, asserting shapes and
+no NaNs.  Full configs are exercised only via the dry-run (no allocation)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+
+def _smoke_batch(cfg, rng, B=2, S=32):
+    batch = {}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.array(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.bfloat16)
+        batch["tokens"] = jnp.array(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        batch["targets"] = jnp.array(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    elif cfg.family == "vlm":
+        text = S
+        batch["vision_embeds"] = jnp.array(
+            rng.standard_normal((B, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.bfloat16)
+        batch["tokens"] = jnp.array(
+            rng.integers(0, cfg.vocab, (B, text)), jnp.int32)
+        batch["targets"] = jnp.array(
+            rng.integers(0, cfg.vocab, (B, text)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.array(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        batch["targets"] = jnp.array(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = np.random.default_rng(hash(arch) % (1 << 31))
+    params, axes = model.init_params(jax.random.key(1))
+    # axes tree must parallel the param tree
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    assert len(flat_p) == len(flat_a)
+    for p, a in zip(flat_p, flat_a):
+        assert p.ndim == len(a), (p.shape, a)
+
+    batch = _smoke_batch(cfg, rng)
+    loss, grads = jax.value_and_grad(
+        lambda pr: model.loss_fn(pr, batch))(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    gnorm = jax.tree.reduce(
+        lambda acc, g: acc + float(jnp.sum(jnp.square(g.astype(jnp.float32)))),
+        grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: grad norm {gnorm}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = np.random.default_rng(hash(arch) % (1 << 30))
+    params, _ = model.init_params(jax.random.key(2))
+    B, S = 2, 16
+    cache, cache_axes = model.init_cache(B, S)
+    tok = jnp.array(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_out"] = jnp.array(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.bfloat16)
+    logits, cache = model.decode_fn(params, cache, tok, jnp.int32(0), **kw)
+    logits2, cache = model.decode_fn(params, cache, tok, jnp.int32(1), **kw)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "mixtral_8x22b", "mamba2_130m",
+                                  "zamba2_1p2b"])
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode must reproduce the full-sequence forward."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = np.random.default_rng(7)
+    params, _ = model.init_params(jax.random.key(3))
+    B, S = 1, 8
+    toks = jnp.array(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    from repro.models import transformer as TF
+    h_full, _, _ = TF.forward(params, cfg, toks, remat=False)
+    w = params["unembed"].astype(jnp.bfloat16)
+    logits_full = (h_full @ w).astype(jnp.float32)
+
+    cache, _ = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_fn(params, cache, toks[:, t: t + 1],
+                                    jnp.int32(t))
+        outs.append(lg)
+    logits_step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_step),
+                               np.asarray(logits_full),
+                               rtol=0.15, atol=0.15)  # bf16 accumulation
+
+
+def test_abstract_params_no_allocation():
+    """Full-size configs must shape-infer without touching memory."""
+    cfg = get_config("mistral_large_123b")
+    model = build_model(cfg)
+    p, axes = model.abstract_params()
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+    assert 100e9 < n_params < 150e9, n_params / 1e9
+    cache, c_axes = model.abstract_cache(128, 32768)
+    n_cache = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(cache))
+    assert n_cache > 1e9
+
+
+def test_param_counts_sane():
+    expect = {
+        "mamba2_130m": (0.10e9, 0.20e9),
+        "llama3_8b": (7e9, 9e9),
+        "granite_3_8b": (7e9, 9.5e9),
+        "internlm2_20b": (17e9, 23e9),
+        "mixtral_8x22b": (120e9, 150e9),
+        "mistral_large_123b": (110e9, 135e9),
+        "llava_next_34b": (30e9, 38e9),
+        "zamba2_1p2b": (1.0e9, 1.9e9),
+        "whisper_small": (0.2e9, 0.5e9),
+        "granite_moe_1b": (0.8e9, 1.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        model = build_model(get_config(arch))
+        p, _ = model.abstract_params()
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,230 @@
+"""End-to-end protocol tests: sequential consistency (Theorems 14/21),
+runtime scaling (Theorem 15), batch bounds (Theorems 18/20), membership
+(Section IV) — under both synchronous and adversarial-async schedulers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consistency import check_sequential_consistency
+from repro.core.protocol import DEQ, ENQ, Skueue
+
+
+def _inject_random(sk, n_reqs, p_enq, rng):
+    nids = sk.ring.node_ids()
+    for _ in range(n_reqs):
+        sk.inject(nids[int(rng.integers(len(nids)))],
+                  ENQ if rng.random() < p_enq else DEQ)
+
+
+# ---------------------------------------------------------------- queue ----
+@pytest.mark.parametrize("n,p_enq", [(3, 0.5), (8, 0.75), (8, 0.25), (16, 0.5)])
+def test_queue_sync_consistent(n, p_enq):
+    sk = Skueue(n, mode="queue", seed=n)
+    rng = np.random.default_rng(n * 7 + 1)
+    def inject(s, rnd):
+        if rnd <= 40:
+            _inject_random(s, 3, p_enq, rng)
+    sk.run_rounds(80, inject_fn=inject)
+    stats = check_sequential_consistency(sk)
+    assert stats["n_requests"] == 120
+    sk.check_dht_placement()
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 10),
+       p_enq=st.floats(0.1, 0.9))
+@settings(max_examples=25, deadline=None)
+def test_queue_async_adversarial_consistent(seed, n, p_enq):
+    """Definition 1 holds for every asynchronous schedule we can generate."""
+    sk = Skueue(n, mode="queue", seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    _inject_random(sk, 40, p_enq, rng)
+    assert sk.run_async(max_steps=400_000)
+    check_sequential_consistency(sk)
+
+
+def test_queue_matches_fifo_when_single_process():
+    """With one process the distributed queue == a classical queue."""
+    sk = Skueue(1, mode="queue", seed=0)
+    nid = sk.ring.node_ids()[0]
+    pattern = [ENQ, ENQ, DEQ, ENQ, DEQ, DEQ, DEQ, ENQ, DEQ]
+    for k in pattern:
+        sk.inject(nid, k)
+    sk.run_rounds(5)
+    check_sequential_consistency(sk)  # replay IS the classical-queue check
+
+
+def test_fifo_order_across_processes():
+    """Elements injected in one quiesced wave leave in position order."""
+    sk = Skueue(4, mode="queue", seed=2)
+    nids = sk.ring.node_ids()
+    for i in range(10):
+        sk.inject(nids[i % len(nids)], ENQ)
+    sk.run_rounds(100)
+    for i in range(10):
+        sk.inject(nids[(3 * i) % len(nids)], DEQ)
+    sk.run_rounds(100)
+    stats = check_sequential_consistency(sk)
+    assert stats["n_requests"] == 20
+    deqs = sorted((r.order, r.result) for r in sk.requests if r.kind == DEQ)
+    enq_pos = {r.elem: r.pos for r in sk.requests if r.kind == ENQ}
+    served = [enq_pos[res] for _, res in deqs]
+    assert served == sorted(served), "FIFO: dequeues return ascending positions"
+
+
+# ---------------------------------------------------------------- stack ----
+@pytest.mark.parametrize("n,p_push", [(4, 0.5), (8, 0.7), (8, 0.3)])
+def test_stack_sync_consistent(n, p_push):
+    sk = Skueue(n, mode="stack", seed=n + 100)
+    rng = np.random.default_rng(n * 13 + 1)
+    def inject(s, rnd):
+        if rnd <= 40:
+            _inject_random(s, 3, p_push, rng)
+    sk.run_rounds(100, inject_fn=inject)
+    check_sequential_consistency(sk)
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 8),
+       p=st.floats(0.2, 0.8))
+@settings(max_examples=20, deadline=None)
+def test_stack_async_adversarial_consistent(seed, n, p):
+    sk = Skueue(n, mode="stack", seed=seed)
+    rng = np.random.default_rng(seed + 3)
+    _inject_random(sk, 30, p, rng)
+    assert sk.run_async(max_steps=600_000)
+    check_sequential_consistency(sk)
+
+
+def test_stack_local_combining_fast_path():
+    """Sec. VI: locally paired push/pop complete without any DHT traffic."""
+    sk = Skueue(4, mode="stack", seed=7)
+    nid = sk.ring.node_ids()[0]
+    sk.inject(nid, ENQ)
+    rid = sk.inject(nid, DEQ)
+    req = sk.requests[rid]
+    assert req.done and req.result == sk.requests[rid - 1].elem
+    assert sk.total_msgs == 0  # answered before any message was sent
+
+
+def test_stack_batches_constant_size():
+    """Theorem 20: stack batches aggregate to at most (pop-run, push-run)."""
+    sk = Skueue(6, mode="stack", seed=9)
+    rng = np.random.default_rng(11)
+    def inject(s, rnd):
+        if rnd <= 60:
+            _inject_random(s, 6, 0.5, rng)
+    sk.run_rounds(120, inject_fn=inject)
+    check_sequential_consistency(sk)
+    assert sk.stats_batch_max_runs <= 3  # (maybe-empty push, pop, push)
+
+
+# --------------------------------------------------------------- runtime ---
+def test_latency_scales_logarithmically():
+    """Theorem 15 / Figure 2: mean rounds/request grows ~ log n."""
+    means = []
+    for n in (4, 16, 64):
+        sk = Skueue(n, mode="queue", seed=n)
+        rng = np.random.default_rng(n)
+        def inject(s, rnd):
+            if rnd <= 30:
+                _inject_random(s, 2, 0.5, rng)
+        sk.run_rounds(60, inject_fn=inject)
+        check_sequential_consistency(sk)
+        lat = [r.t_done - r.t_issue for r in sk.requests]
+        means.append(np.mean(lat))
+    # monotone-ish growth, far from linear: 16x nodes << 16x latency
+    assert means[2] < means[0] * 6
+    assert means[2] / np.log2(64 * 3) < 3 * means[0] / np.log2(4 * 3) + 10
+
+
+def test_queue_batch_size_logarithmic():
+    """Theorem 18: queue batches stay O(log n) runs under 1 req/round/node."""
+    n = 32
+    sk = Skueue(n, mode="queue", seed=5)
+    rng = np.random.default_rng(6)
+    def inject(s, rnd):
+        if rnd <= 60:
+            nids = s.ring.node_ids()
+            for nid in nids:
+                s.inject(nid, ENQ if rng.random() < 0.5 else DEQ)
+    sk.run_rounds(120, inject_fn=inject)
+    check_sequential_consistency(sk)
+    assert sk.stats_batch_max_runs <= 6 * np.log2(3 * n)
+
+
+# ------------------------------------------------------------ membership ---
+def test_join_leave_churn_queue():
+    sk = Skueue(6, mode="queue", seed=17)
+    rng = np.random.default_rng(19)
+    def inject(s, rnd):
+        nids = s.ring.node_ids()
+        if rnd % 3 == 0 and rnd <= 150:
+            s.inject(nids[int(rng.integers(len(nids)))],
+                     ENQ if rng.random() < 0.6 else DEQ)
+        if rnd == 10:
+            s.request_join()
+        if rnd == 20:
+            s.request_join()
+        if rnd == 35:
+            s.request_leave(2)
+        if rnd == 50:
+            s.request_leave(0)
+    sk.run_rounds(300, inject_fn=inject)
+    check_sequential_consistency(sk)
+    sk.check_dht_placement()
+    procs = set(sk.ring.proc[n] for n in sk.ring.node_ids())
+    assert procs == {1, 3, 4, 5, 6, 7}
+    assert sk.pending_membership == 0
+    assert sk.ring.size == 24  # 18 original + 6 joined virtual nodes
+
+
+def test_anchor_process_leave_hands_off():
+    sk = Skueue(5, mode="queue", seed=23)
+    anchor_proc = sk.ring.proc[sk.ring.anchor]
+    rng = np.random.default_rng(29)
+    def inject(s, rnd):
+        nids = s.ring.node_ids()
+        if rnd % 2 == 0 and rnd <= 80:
+            s.inject(nids[int(rng.integers(len(nids)))],
+                     ENQ if rng.random() < 0.5 else DEQ)
+        if rnd == 15:
+            s.request_leave(anchor_proc)
+    sk.run_rounds(250, inject_fn=inject)
+    check_sequential_consistency(sk)
+    sk.check_dht_placement()
+    assert anchor_proc not in set(sk.ring.proc[n] for n in sk.ring.node_ids())
+    assert sk.pending_membership == 0
+
+
+def test_join_moves_dht_data_to_new_owner():
+    sk = Skueue(4, mode="queue", seed=31)
+    nids = sk.ring.node_ids()
+    for i in range(30):
+        sk.inject(nids[i % len(nids)], ENQ)
+    sk.run_rounds(120)
+    sk.check_dht_placement()
+    stored_before = sum(len(s) for s in sk.store)
+    assert stored_before == 30
+    for _ in range(3):
+        sk.request_join()
+    sk.run_rounds(150)
+    sk.check_dht_placement()  # data must have moved to the new owners
+    assert sum(len(s) for s in sk.store) == 30
+    # drain the queue through the grown system
+    nids = sk.ring.node_ids()
+    for i in range(30):
+        sk.inject(nids[(7 * i) % len(nids)], DEQ)
+    sk.run_rounds(200)
+    check_sequential_consistency(sk)
+
+
+def test_many_simultaneous_joins():
+    """Theorem 17 flavour: a burst of joins integrates in few update phases."""
+    sk = Skueue(8, mode="queue", seed=37)
+    def inject(s, rnd):
+        if rnd == 5:
+            for _ in range(8):
+                s.request_join()
+    sk.run_rounds(200, inject_fn=inject)
+    assert sk.ring.size == 3 * 16
+    assert sk.pending_membership == 0
+    assert sk.update_phases <= 6

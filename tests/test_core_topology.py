@@ -1,0 +1,87 @@
+"""Topology tests: LDB (Definition 2), aggregation tree, DHT fairness."""
+import numpy as np
+import pytest
+
+from repro.core.hashing import hash01, position_key
+from repro.core.ldb import LDB, LEFT, MIDDLE, RIGHT
+from repro.core.ring import DynamicRing
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 7, 16, 33, 100, 257])
+def test_ldb_tree_invariants(n):
+    ldb = LDB.build(n, salt=n)
+    ldb.check_tree()
+    # every node has <= 2 children, right nodes have none
+    assert (ldb.n_children <= 2).all()
+    assert (ldb.n_children[ldb.kind == RIGHT] == 0).all()
+
+
+@pytest.mark.parametrize("n", [4, 16, 64, 256, 1024, 4096])
+def test_tree_height_logarithmic(n):
+    """Corollary 6: aggregation tree height O(log n) w.h.p."""
+    depths = [LDB.build(n, salt=s).depth.max() for s in range(3)]
+    # empirical constant ~4-5 x log2(3n); assert a generous bound
+    assert max(depths) <= 8 * np.log2(3 * n) + 8
+
+
+def test_label_halving_structure():
+    ldb = LDB.build(50, salt=1)
+    # parent labels strictly decrease; middle's parent is exactly m/2
+    mids = np.flatnonzero(ldb.kind == MIDDLE)
+    for v in mids:
+        p = ldb.parent[v]
+        if p >= 0:
+            assert abs(ldb.labels[p] - ldb.labels[v] / 2) < 1e-12
+
+
+def test_ring_matches_static_ldb():
+    """DynamicRing on static membership == LDB semantics."""
+    n = 37
+    ldb = LDB.build(n, salt=5)
+    ring = DynamicRing.build(n, salt=5)
+    ring.check_tree()
+    assert ring.size == ldb.size
+    # identical sorted label sequences
+    ring_labels = [ring.labels[nid] for nid in ring.node_ids()]
+    np.testing.assert_allclose(ring_labels, ldb.labels)
+    # identical ownership for random keys
+    keys = hash01(np.arange(200), salt=99)
+    owners_ldb = ldb.owner_of(keys)
+    for k, ow in zip(keys, owners_ldb):
+        nid = ring.owner_of_scalar(float(k))
+        assert abs(ring.labels[nid] - ldb.labels[ow]) < 1e-12
+
+
+def test_routing_hops_logarithmic():
+    """Lemma 3: O(log n) routing."""
+    for n in (16, 256, 1024):
+        ldb = LDB.build(n, salt=2)
+        rng = np.random.default_rng(0)
+        src = rng.integers(ldb.size, size=200)
+        keys = rng.random(200)
+        hops = ldb.route_hops(src, keys)
+        assert hops.mean() <= 4 * np.log2(3 * n) + 4
+        # scalar path agrees
+        for i in range(10):
+            assert hops[i] == ldb.route_hops_scalar(int(src[i]), float(keys[i]))
+
+
+def test_consistent_hashing_fair():
+    """Lemma 4 (fairness): keys spread evenly over nodes."""
+    n = 64
+    ldb = LDB.build(n, salt=3)
+    keys = position_key(np.arange(20000))
+    owners = ldb.owner_of(keys)
+    counts = np.bincount(owners, minlength=ldb.size)
+    # expectation ~104 per node; no node should be grossly overloaded
+    assert counts.max() < 12 * keys.size / ldb.size
+    assert counts.sum() == keys.size
+
+
+def test_owner_interval_semantics():
+    ldb = LDB.build(10, salt=7)
+    # owner of exactly a node label is that node
+    for i in (0, 5, 17):
+        assert ldb.owner_of(np.array([ldb.labels[i]]))[0] == i
+    # key below the minimum wraps to the max node
+    assert ldb.owner_of(np.array([ldb.labels[0] / 2]))[0] == ldb.size - 1

@@ -1,0 +1,143 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.hash_route import hash_route_pallas, hash_route_ref
+from repro.kernels.segscan import queue_scan_pallas, queue_scan_ref
+from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_scan_ref
+
+
+# ----------------------------------------------------------- segscan -------
+@pytest.mark.parametrize("n", [64, 1024, 2048, 4096 + 512])
+@pytest.mark.parametrize("p_enq", [0.25, 0.5, 0.9])
+def test_segscan_matches_ref(n, p_enq):
+    rng = np.random.default_rng(n + int(p_enq * 100))
+    e = jnp.array(rng.random(n) < p_enq)
+    v = jnp.array(rng.random(n) < 0.85)
+    f0, l0 = jnp.int32(3), jnp.int32(7)
+    pk, mk, fk, lk = queue_scan_pallas(e, v, f0, l0)
+    pr, mr, fr, lr = queue_scan_ref(e, v, f0, l0)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+    assert (int(fk), int(lk)) == (int(fr), int(lr))
+
+
+@given(seed=st.integers(0, 1000), n=st.sampled_from([128, 1024, 2500]),
+       pre=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_segscan_property(seed, n, pre):
+    rng = np.random.default_rng(seed)
+    e = jnp.array(rng.random(n) < rng.random())
+    v = jnp.array(rng.random(n) < 0.9)
+    pk, mk, fk, lk = queue_scan_pallas(e, v, jnp.int32(0), jnp.int32(pre - 1))
+    pr, mr, fr, lr = queue_scan_ref(e, v, jnp.int32(0), jnp.int32(pre - 1))
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    assert (int(fk), int(lk)) == (int(fr), int(lr))
+    # invariant: matched dequeue positions are unique & consumed FIFO
+    deq_pos = np.asarray(pk)[np.asarray(mk) & ~np.asarray(e)]
+    assert len(set(deq_pos.tolist())) == len(deq_pos)
+
+
+# --------------------------------------------------------- hash_route ------
+@pytest.mark.parametrize("n,shards", [(1024, 8), (1024, 256), (4096, 16),
+                                      (3000, 64)])
+def test_hash_route_matches_ref(n, shards):
+    rng = np.random.default_rng(n + shards)
+    pos = jnp.array(rng.integers(0, 1 << 30, n), jnp.int32)
+    valid = jnp.array(rng.random(n) < 0.9)
+    ow_k, c_k = hash_route_pallas(pos, valid, shards)
+    ow_r, c_r = hash_route_ref(pos, valid, shards)
+    np.testing.assert_array_equal(np.asarray(ow_k), np.asarray(ow_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+def test_hash_route_fairness():
+    """Lemma 4 flavour: the hash spreads dense positions evenly."""
+    pos = jnp.arange(1 << 14, dtype=jnp.int32)
+    valid = jnp.ones((1 << 14,), bool)
+    _, counts = hash_route_pallas(pos, valid, 64)
+    c = np.asarray(counts)
+    assert c.sum() == 1 << 14
+    assert c.max() / c.mean() < 1.5
+
+
+# ----------------------------------------------------- flash attention -----
+CASES = [
+    # (B, Hq, Hkv, Lq, Lk, D, causal, window, dtype, rtol)
+    (2, 4, 4, 128, 128, 64, True, None, jnp.float32, 2e-5),
+    (1, 8, 2, 128, 256, 64, True, None, jnp.float32, 2e-5),   # GQA + align
+    (1, 4, 4, 256, 256, 128, True, 128, jnp.float32, 2e-5),   # SWA
+    (2, 2, 2, 128, 128, 64, False, None, jnp.float32, 2e-5),  # encoder
+    (1, 4, 4, 128, 128, 64, True, None, jnp.bfloat16, 2e-2),
+    (1, 2, 2, 384, 384, 64, True, 256, jnp.float32, 2e-5),    # non-pow2 seq
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_attention_matches_ref(case):
+    B, Hq, Hkv, Lq, Lk, D, causal, window, dtype, rtol = case
+    rng = np.random.default_rng(hash(case[:8]) % (1 << 31))
+    q = jnp.array(rng.standard_normal((B, Hq, Lq, D)), dtype)
+    k = jnp.array(rng.standard_normal((B, Hkv, Lk, D)), dtype)
+    v = jnp.array(rng.standard_normal((B, Hkv, Lk, D)), dtype)
+    o_k = flash_attention(q, k, v, causal=causal, window=window)
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=1).reshape(B * Hq, Lk, D)
+    vr = jnp.repeat(v, G, axis=1).reshape(B * Hq, Lk, D)
+    o_r = attention_ref(q.reshape(B * Hq, Lq, D), kr, vr, causal=causal,
+                        window=window).reshape(B, Hq, Lq, D)
+    err = float(jnp.max(jnp.abs(o_k.astype(jnp.float32)
+                                - o_r.astype(jnp.float32))))
+    assert err < rtol * 10, err
+
+
+def test_flash_attention_swa_ignores_far_context():
+    """Sliding window: tokens beyond the window must not affect outputs."""
+    rng = np.random.default_rng(0)
+    D, L, W = 64, 256, 64
+    q = jnp.array(rng.standard_normal((1, 1, L, D)), jnp.float32)
+    k = jnp.array(rng.standard_normal((1, 1, L, D)), jnp.float32)
+    v = jnp.array(rng.standard_normal((1, 1, L, D)), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=True, window=W)
+    # perturb keys/values far outside the last query's window
+    k2 = k.at[:, :, : L - 2 * W].set(0.0)
+    v2 = v.at[:, :, : L - 2 * W].set(0.0)
+    o2 = flash_attention(q, k2, v2, causal=True, window=W)
+    np.testing.assert_allclose(np.asarray(o1[:, :, -1]),
+                               np.asarray(o2[:, :, -1]), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- ssd ---------
+@pytest.mark.parametrize("shape", [(2, 256, 64, 64, 128), (4, 128, 64, 128, 64),
+                                   (1, 512, 32, 64, 128), (2, 128, 64, 64, 32)])
+def test_ssd_scan_matches_naive_recurrence(shape):
+    BH, L, P, N, chunk = shape
+    rng = np.random.default_rng(sum(shape))
+    xt = jnp.array(rng.standard_normal((BH, L, P)), jnp.float32)
+    loga = jnp.array(-np.abs(rng.standard_normal((BH, L))) * 0.1, jnp.float32)
+    B = jnp.array(rng.standard_normal((BH, L, N)) * 0.3, jnp.float32)
+    C = jnp.array(rng.standard_normal((BH, L, N)) * 0.3, jnp.float32)
+    yk = ssd_scan_pallas(xt, loga, B, C, chunk=chunk)
+    yr = ssd_scan_ref(xt, loga, B, C)
+    rel = float(jnp.max(jnp.abs(yk - yr)) / (jnp.max(jnp.abs(yr)) + 1e-9))
+    assert rel < 2e-5, rel
+
+
+def test_ssd_chunk_size_invariance():
+    """Chunking is an implementation detail: results agree across Q."""
+    rng = np.random.default_rng(1)
+    BH, L, P, N = 2, 256, 32, 64
+    xt = jnp.array(rng.standard_normal((BH, L, P)), jnp.float32)
+    loga = jnp.array(-np.abs(rng.standard_normal((BH, L))) * 0.2, jnp.float32)
+    B = jnp.array(rng.standard_normal((BH, L, N)) * 0.3, jnp.float32)
+    C = jnp.array(rng.standard_normal((BH, L, N)) * 0.3, jnp.float32)
+    y64 = ssd_scan_pallas(xt, loga, B, C, chunk=64)
+    y128 = ssd_scan_pallas(xt, loga, B, C, chunk=128)
+    np.testing.assert_allclose(np.asarray(y64), np.asarray(y128),
+                               rtol=1e-4, atol=1e-4)

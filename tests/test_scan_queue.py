@@ -1,0 +1,307 @@
+"""TPU-native scan queue: associativity, equivalence with the sequential
+reference AND with the paper protocol's interval machinery."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch as B
+from repro.core.intervals import AnchorState, BOTTOM as IV_BOTTOM
+from repro.core.intervals import assign_queue, positions_queue
+from repro.core.scan_queue import (INF, QueueState, StackState, queue_compose,
+                                   queue_op_transforms, queue_scan,
+                                   stack_compose, stack_op_transforms,
+                                   stack_scan)
+
+
+def _apply(tr, f, l):
+    A, B_, C = tr
+    return min(f + A, l + B_), l + C
+
+
+@given(st.lists(st.booleans(), min_size=3, max_size=30),
+       st.integers(0, 5), st.integers(-1, 20))
+@settings(max_examples=60, deadline=None)
+def test_queue_operator_associative(ops, cut, last0):
+    """(t1;t2);t3 == t1;(t2;t3) and composition == sequential application."""
+    e = jnp.array(ops)
+    A, B_, C = queue_op_transforms(e)
+    ts = [(int(A[i]), int(B_[i]), int(C[i])) for i in range(len(ops))]
+    def comp(t1, t2):
+        return tuple(int(x) for x in queue_compose(
+            tuple(map(jnp.int32, t1)), tuple(map(jnp.int32, t2))))
+    total_lr = ts[0]
+    for t in ts[1:]:
+        total_lr = comp(total_lr, t)
+    # arbitrary re-association at `cut`
+    k = max(1, min(len(ts) - 1, cut + 1))
+    left = ts[0]
+    for t in ts[1:k]:
+        left = comp(left, t)
+    right = ts[k]
+    for t in ts[k + 1:]:
+        right = comp(right, t)
+    assert comp(left, right) == total_lr
+    # composed transform == op-by-op state evolution
+    f, l = 0, last0
+    for op in ops:
+        if op:
+            l += 1
+        else:
+            f = min(f + 1, l + 1)
+    ff, ll = _apply(total_lr, 0, last0)
+    assert (min(ff, l + 10**9), ll) == (f, l) or (ff, ll) == (f, l)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=64),
+       st.integers(0, 8))
+@settings(max_examples=60, deadline=None)
+def test_queue_scan_matches_sequential(ops, pre):
+    """Scan positions == one-by-one sequential queue semantics."""
+    is_enq = jnp.array(ops)
+    state = QueueState(jnp.int32(0), jnp.int32(pre - 1))
+    pos, matched, new = queue_scan(is_enq, state)
+    pos = np.asarray(pos)
+    f, l = 0, pre - 1
+    for i, op in enumerate(ops):
+        if op:
+            l += 1
+            assert pos[i] == l
+        else:
+            if f <= l:
+                assert pos[i] == f and matched[i]
+                f += 1
+            else:
+                assert pos[i] == -1 and not matched[i]
+    assert (int(new.first), int(new.last)) == (f, l)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=48), st.integers(0, 6))
+@settings(max_examples=40, deadline=None)
+def test_scan_equals_paper_intervals(ops, pre):
+    """THE bridge theorem: the associative scan assigns exactly the same
+    positions as the paper's Stage-2/3 interval machinery (single batch)."""
+    runs = B.empty()
+    for op in ops:
+        B.append_op(runs, op)
+    anchor = AnchorState(first=0, last=pre - 1)
+    ivs = assign_queue(anchor, runs)
+    paper_pos = positions_queue(ivs, runs)
+    paper_pos = [(-1 if p == IV_BOTTOM else p) for p in paper_pos]
+
+    pos, matched, new = queue_scan(
+        jnp.array(ops), QueueState(jnp.int32(0), jnp.int32(pre - 1)))
+    assert list(np.asarray(pos)) == paper_pos
+    assert (int(new.first), int(new.last)) == (anchor.first, anchor.last)
+
+
+def test_queue_scan_padding_identity():
+    is_enq = jnp.array([True, False, True, False])
+    valid = jnp.array([True, False, False, True])
+    state = QueueState(jnp.int32(0), jnp.int32(-1))
+    pos, matched, new = queue_scan(is_enq, state, valid=valid)
+    # effective sequence: ENQ, DEQ -> positions 0, 0
+    assert list(np.asarray(pos)) == [0, -1, -1, 0]
+    assert int(new.size) == 0
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=48))
+@settings(max_examples=40, deadline=None)
+def test_stack_scan_matches_sequential(ops):
+    is_push = jnp.array(ops)
+    pos, tick, matched, new = stack_scan(is_push, StackState.empty())
+    pos, tick = np.asarray(pos), np.asarray(tick)
+    ref = []  # list of (pos, ticket)
+    t = 0
+    for i, op in enumerate(ops):
+        if op:
+            t += 1
+            ref.append((len(ref) + 1, t))
+            assert (pos[i], tick[i]) == ref[-1]
+        else:
+            if ref:
+                rp, rt = ref.pop()
+                assert pos[i] == rp and tick[i] >= rt
+            else:
+                assert pos[i] == -1 and not matched[i]
+    assert int(new.last) == len(ref) and int(new.ticket) == t
+
+
+@given(st.lists(st.booleans(), min_size=2, max_size=24), st.integers(1, 20))
+@settings(max_examples=40, deadline=None)
+def test_stack_operator_associative(ops, cut):
+    a, b, d = stack_op_transforms(jnp.array(ops))
+    ts = [(int(a[i]), int(b[i]), int(d[i])) for i in range(len(ops))]
+    def comp(t1, t2):
+        return tuple(int(x) for x in stack_compose(
+            tuple(map(jnp.int32, t1)), tuple(map(jnp.int32, t2))))
+    k = 1 + cut % (len(ts) - 1)
+    left = ts[0]
+    for t in ts[1:k]:
+        left = comp(left, t)
+    right = ts[k]
+    for t in ts[k + 1:]:
+        right = comp(right, t)
+    seq = ts[0]
+    for t in ts[1:]:
+        seq = comp(seq, t)
+    assert comp(left, right) == seq
+
+
+# ---------------------------------------------------- multi-device paths ---
+from multidev import run_multidev  # noqa: E402
+
+SHARDED_EQUIV = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.scan_queue import QueueState, queue_scan, make_sharded_queue_scan
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+run = make_sharded_queue_scan(mesh, "data")
+rng = np.random.default_rng(0)
+state = QueueState(jnp.int32(0), jnp.int32(-1))
+state_flat = QueueState(jnp.int32(0), jnp.int32(-1))
+for it in range(5):
+    is_enq = jnp.array(rng.random(64) < 0.6)
+    valid = jnp.array(rng.random(64) < 0.9)
+    p1, m1, state = run(is_enq, state, valid)
+    p2, m2, state_flat = queue_scan(is_enq, state_flat, valid=valid)
+    assert (np.asarray(p1) == np.asarray(p2)).all(), (p1, p2)
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+    assert int(state.first) == int(state_flat.first)
+    assert int(state.last) == int(state_flat.last)
+print("OK sharded == flat", int(state.first), int(state.last))
+"""
+
+
+def test_sharded_scan_equals_flat_8dev():
+    """The ppermute-hypercube path == flat associative_scan on 8 devices."""
+    out = run_multidev(SHARDED_EQUIV, n_dev=8)
+    assert "OK sharded == flat" in out
+
+
+DEVICE_QUEUE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from collections import deque
+from repro.dqueue import DeviceQueue
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+dq = DeviceQueue(mesh, "data", cap=64, payload_width=2, ops_per_shard=8)
+state = dq.init_state()
+rng = np.random.default_rng(1)
+ref = deque()
+eid = 0
+for it in range(12):
+    n = dq.n_shards * dq.L
+    is_enq = rng.random(n) < (0.7 if it < 8 else 0.2)
+    valid = rng.random(n) < 0.8
+    payload = np.zeros((n, 2), np.int32)
+    for i in range(n):
+        if is_enq[i] and valid[i]:
+            payload[i, 0] = eid; payload[i, 1] = eid * 7; eid += 1
+    state, pos, matched, dv, dok, ovf = dq.step(
+        state, jnp.array(is_enq), jnp.array(valid), jnp.array(payload))
+    assert not bool(ovf)
+    dv, dok, matched = np.asarray(dv), np.asarray(dok), np.asarray(matched)
+    # replay the same global order on a reference FIFO
+    for i in range(n):
+        if not valid[i]:
+            assert not matched[i]
+            continue
+        if is_enq[i]:
+            ref.append(tuple(payload[i]))
+        else:
+            if ref:
+                exp = ref.popleft()
+                assert matched[i] and dok[i], (it, i)
+                assert tuple(dv[i]) == exp, (it, i, dv[i], exp)
+            else:
+                assert not matched[i]
+    assert int(state.size) == len(ref)
+print("OK device queue fifo", len(ref))
+"""
+
+
+def test_device_queue_fifo_8dev():
+    out = run_multidev(DEVICE_QUEUE, n_dev=8)
+    assert "OK device queue fifo" in out
+
+
+DEVICE_STACK = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.dqueue import DeviceStack
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+ds = DeviceStack(mesh, "data", cap=64, payload_width=2, ops_per_shard=8,
+                 slot_depth=6)
+state = ds.init_state()
+rng = np.random.default_rng(3)
+ref = []
+eid = 0
+for it in range(12):
+    n = ds.n_shards * ds.L
+    is_push = rng.random(n) < (0.65 if it < 8 else 0.25)
+    valid = rng.random(n) < 0.8
+    payload = np.zeros((n, 2), np.int32)
+    for i in range(n):
+        if is_push[i] and valid[i]:
+            payload[i, 0] = eid; payload[i, 1] = eid * 3 + 1; eid += 1
+    state, pos, matched, pv, pok, ovf = ds.step(
+        state, jnp.array(is_push), jnp.array(valid), jnp.array(payload))
+    assert not bool(ovf), it
+    pv, pok, matched = np.asarray(pv), np.asarray(pok), np.asarray(matched)
+    for i in range(n):
+        if not valid[i]:
+            continue
+        if is_push[i]:
+            ref.append(tuple(payload[i]))
+        else:
+            if ref:
+                exp = ref.pop()
+                assert matched[i] and pok[i], (it, i)
+                assert tuple(pv[i]) == exp, (it, i, pv[i], exp)
+            else:
+                assert not matched[i]
+    assert int(state["last"]) == len(ref)
+print("OK device stack lifo", len(ref))
+"""
+
+
+def test_device_stack_lifo_4dev():
+    out = run_multidev(DEVICE_STACK, n_dev=4)
+    assert "OK device stack lifo" in out
+
+
+WORK_QUEUE = r"""
+import numpy as np, jax
+from repro.dqueue import DeviceQueue, WorkQueue
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+dq = DeviceQueue(mesh, "data", cap=128, payload_width=4, ops_per_shard=8)
+wq = WorkQueue(dq, lease_steps=3)
+items = [wq.make_item([i, i * i]) for i in range(20)]
+done = set()
+pending = list(items)
+straggler_holds = {}
+step = 0
+while len(done) < 20 and step < 60:
+    step += 1
+    submit = pending[:5]; pending = pending[5:]
+    grants = wq.step(submit, want=[2, 2, 2])  # 3 workers
+    for w, item in grants:
+        eid = int(item[0])
+        if w == 2 and eid not in straggler_holds:
+            straggler_holds[eid] = step  # worker 2 stalls on first receipt
+            continue
+        if wq.ack(item):
+            done.add(eid)
+assert len(done) == 20, (len(done), wq.stats)
+assert wq.stats["reissued"] >= 1  # stragglers were re-issued
+print("OK work queue", wq.stats)
+"""
+
+
+def test_work_queue_straggler_mitigation_4dev():
+    out = run_multidev(WORK_QUEUE, n_dev=4)
+    assert "OK work queue" in out
