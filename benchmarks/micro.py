@@ -1,12 +1,29 @@
-"""Framework microbenchmarks: scan-queue ops, device-queue steps, kernels."""
+"""Framework microbenchmarks: scan-queue ops, device-queue steps, kernels.
+
+PR 1 adds the wave-pipeline benchmark: the seed single-wave dispatch
+discipline (one jitted step per wave, host round-trip between waves,
+five all_to_all collectives per wave) vs. the fused path (two collectives
+per wave, donated state, K waves inside one lax.scan dispatch).  Results
+are written to ``BENCH_PR1.json``; run directly with
+
+    PYTHONPATH=src python -m benchmarks.micro --pr1 [path]
+
+(on fewer than 8 devices it re-execs itself on a forced 8-device CPU mesh).
+"""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _time_us(fn, *args, iters=20, warmup=3):
@@ -54,19 +71,150 @@ def bench_device_queue():
     mesh = make_host_mesh(n_data=len(jax.devices()))
     dq = DeviceQueue(mesh, "data", cap=1024, payload_width=4,
                      ops_per_shard=256)
-    state = dq.init_state()
     n = dq.n_shards * dq.L
     rng = np.random.default_rng(2)
     is_enq = jnp.array(rng.random(n) < 0.6)
     valid = jnp.ones((n,), bool)
     payload = jnp.array(rng.integers(0, 100, (n, 4)), jnp.int32)
 
-    def step(s):
-        out = dq.step(s, is_enq, valid, payload)
-        return out[0]
-
-    us = _time_us(step, state, iters=10)
+    # the step donates its state argument, so thread it through the loop
+    state = dq.init_state()
+    for _ in range(3):  # warmup
+        state = dq.step(state, is_enq, valid, payload)[0]
+    jax.block_until_ready(state.store_full)
+    iters = 10
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = dq.step(state, is_enq, valid, payload)[0]
+    jax.block_until_ready(state.store_full)
+    us = (time.perf_counter() - t0) / iters * 1e6
     return [(f"device_queue_step_{n}ops", us, f"{n/us:.2f} ops/us")]
+
+
+# ------------------------------------------------- PR 1: wave pipeline -----
+def count_all_to_all(jitted, args) -> int:
+    """Number of all-to-all collectives in the compiled HLO of ``jitted``."""
+    import re
+    txt = jitted.lower(*args).compile().as_text()
+    return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+
+
+def _measure_wave_pipeline(n_dev: int, K: int, ops_per_shard: int = 64,
+                           iters: int = 10) -> dict:
+    from repro.compat import make_mesh
+    from repro.dqueue import DeviceQueue
+    mesh = make_mesh((n_dev,), ("data",))
+    kwargs = dict(cap=max(256, K * ops_per_shard // n_dev + 1),
+                  payload_width=4, ops_per_shard=ops_per_shard)
+    legacy = DeviceQueue(mesh, "data", fused=False, **kwargs)
+    fused = DeviceQueue(mesh, "data", **kwargs)
+    n = n_dev * ops_per_shard
+    rng = np.random.default_rng(5)
+    E = jnp.array(rng.random((K, n)) < 0.5)
+    V = jnp.ones((K, n), bool)
+    PW = jnp.array(rng.integers(0, 100, (K, n, 4)), jnp.int32)
+    # pre-split per-wave inputs so slicing is not charged to the seed path
+    Es = [E[k] for k in range(K)]
+    Vs = [V[k] for k in range(K)]
+    Ps = [PW[k] for k in range(K)]
+
+    def run_single_wave_loop():
+        # the seed dispatch discipline: one jitted call per wave with a host
+        # round-trip (bool(overflow)) between waves, exactly what the seed
+        # ServeEngine/WorkQueue did.
+        state = legacy.init_state()
+        for k in range(K):
+            state, pos, m, dv, dok, ovf = legacy.step(
+                state, Es[k], Vs[k], Ps[k])
+            assert not bool(ovf)
+        jax.block_until_ready(state.store_full)
+
+    def run_fused_multi_wave():
+        state = fused.init_state()
+        out = fused.run_waves(state, E, V, PW)
+        jax.block_until_ready(out[0].store_full)
+
+    def best_time(fn):
+        fn()  # warmup / compile
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_single = best_time(run_single_wave_loop)
+    t_fused = best_time(run_fused_multi_wave)
+
+    step_args = (legacy.init_state(), E[0], V[0], PW[0])
+    coll_legacy = count_all_to_all(legacy._step, step_args)
+    step_args = (fused.init_state(), E[0], V[0], PW[0])
+    coll_fused = count_all_to_all(fused._step, step_args)
+    return {
+        "n_dev": n_dev, "K": K, "ops_per_wave": n,
+        "seed_single_wave": {
+            "waves_per_sec": K / t_single,
+            "us_per_wave": t_single / K * 1e6,
+            "collectives_per_wave": coll_legacy,
+        },
+        "fused_multi_wave": {
+            "waves_per_sec": K / t_fused,
+            "us_per_wave": t_fused / K * 1e6,
+            "collectives_per_wave": coll_fused,
+        },
+        "speedup_waves_per_sec": t_single / t_fused,
+    }
+
+
+def emit_bench_pr1(path: str = "BENCH_PR1.json", n_dev: int = 8,
+                   K: int = 32) -> dict:
+    """Measure the wave pipeline on an ``n_dev`` CPU mesh and write JSON.
+
+    Re-execs in a subprocess with ``--xla_force_host_platform_device_count``
+    when the current process doesn't have exactly ``n_dev`` CPU devices."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    in_child = os.environ.get("_REPRO_BENCH_PR1_CHILD") == "1"
+    if not in_child and (len(jax.devices()) != n_dev
+                         or jax.default_backend() != "cpu"):
+        env = dict(os.environ)
+        # drop any pre-existing device-count flag (last one wins in XLA
+        # flag parsing) and mark the child so it never re-execs itself
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform_device_count")]
+        flags.append(f"--xla_force_host_platform_device_count={n_dev}")
+        env["XLA_FLAGS"] = " ".join(flags)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["_REPRO_BENCH_PR1_CHILD"] = "1"
+        env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.micro", "--pr1", path,
+             "--n-dev", str(n_dev), "--waves", str(K)],
+            cwd=_REPO_ROOT, env=env, check=True)
+        with open(path) as f:
+            return json.load(f)
+    data = _measure_wave_pipeline(n_dev=n_dev, K=K)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
+def bench_wave_pipeline():
+    try:
+        data = emit_bench_pr1()
+    except Exception as e:  # keep the rest of the CSV usable
+        return [("dq_wave_pipeline", 0.0, f"unavailable: {e}", "", "")]
+    rows = []
+    for key, label in (("seed_single_wave", "dq_seed_single_wave"),
+                       ("fused_multi_wave", "dq_fused_multi_wave")):
+        d = data[key]
+        rows.append((f"{label}_K{data['K']}", d["us_per_wave"],
+                     f"{d['waves_per_sec']:.1f} waves/s",
+                     d["waves_per_sec"], d["collectives_per_wave"]))
+    rows.append((f"dq_fused_speedup_K{data['K']}", 0.0,
+                 f"{data['speedup_waves_per_sec']:.2f}x waves/sec", "", ""))
+    return rows
 
 
 def bench_attention():
@@ -85,6 +233,22 @@ def bench_attention():
 def run_all():
     rows = []
     for fn in (bench_scan_queue, bench_segscan_kernel, bench_device_queue,
-               bench_attention):
+               bench_wave_pipeline, bench_attention):
         rows += fn()
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pr1", nargs="?", const="BENCH_PR1.json", default=None,
+                    help="measure the wave pipeline and write BENCH_PR1.json")
+    ap.add_argument("--n-dev", type=int, default=8)
+    ap.add_argument("--waves", type=int, default=32)
+    cli = ap.parse_args()
+    if cli.pr1:
+        out = emit_bench_pr1(cli.pr1, n_dev=cli.n_dev, K=cli.waves)
+        print(json.dumps(out, indent=2))
+    else:
+        for row in run_all():
+            print(",".join(str(c) for c in row))

@@ -10,7 +10,9 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
 
-    print("name,us_per_call,derived")
+    # PR 1 extends the CSV with waves_per_sec and collectives_per_wave
+    # columns (populated by the device-queue wave-pipeline rows).
+    print("name,us_per_call,derived,waves_per_sec,collectives_per_wave")
 
     from . import paper_figs
     for fig in (paper_figs.fig2_queue, paper_figs.fig3_stack,
@@ -18,21 +20,24 @@ def main() -> None:
         for name, n, p, mean_rounds, cnt in fig(full=args.full):
             # "us_per_call" column carries the figure's y-value
             print(f"{name}_n{n}_p{p},{mean_rounds:.2f},"
-                  f"avg_rounds_per_request({cnt} reqs)")
+                  f"avg_rounds_per_request({cnt} reqs),,")
             sys.stdout.flush()
 
     from . import micro
-    for name, us, derived in micro.run_all():
-        print(f"{name},{us:.1f},{derived}")
+    for row in micro.run_all():
+        name, us, derived = row[:3]
+        waves_per_sec = f"{row[3]:.1f}" if len(row) > 3 and row[3] != "" else ""
+        coll = str(row[4]) if len(row) > 4 and row[4] != "" else ""
+        print(f"{name},{us:.1f},{derived},{waves_per_sec},{coll}")
         sys.stdout.flush()
 
     if not args.skip_roofline:
         from . import roofline
         try:
             for name, dom, derived in roofline.bench_rows():
-                print(f"{name},0,{dom} {derived}")
+                print(f"{name},0,{dom} {derived},,")
         except Exception as e:  # dry-run artifacts missing
-            print(f"roofline,0,unavailable: {e}")
+            print(f"roofline,0,unavailable: {e},,")
 
 
 if __name__ == '__main__':

@@ -51,8 +51,8 @@ def main():
     x = jnp.arange(128.0).reshape(8, 16)
     with tempfile.TemporaryDirectory() as d:
         save_checkpoint(d, 1, {"w": x})
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((1,), ("data",))
         from jax.sharding import NamedSharding, PartitionSpec as P
         sh = {"w": NamedSharding(mesh, P("data", None))}
         restored, _ = restore_sharded(d, 1, {"w": x}, sh)

@@ -636,14 +636,25 @@ class Skueue:
 
     # ------------------------------------------------------------- checks ---
     def check_dht_placement(self) -> None:
-        """Every stored element lives at the consistent-hashing owner."""
+        """Every stored element AND parked pending request lives at its
+        consistent-hashing owner.  (The seed version carried a dead guard —
+        ``if not self.store[nid]`` inside the loop over that dict's own keys,
+        which can never fire — and only checked the store.)"""
         for nid in range(len(self.store)):
             for p in self.store[nid]:
-                if not self.store[nid]:
-                    continue
                 owner = self.ring.owner_of_scalar(float(position_key(p)))
                 assert owner == nid, (
                     f"element at pos {p} stored on {nid}, owner is {owner}")
+            for p in self.pending_get[nid]:
+                owner = self.ring.owner_of_scalar(float(position_key(p)))
+                assert owner == nid, (
+                    f"pending GET for pos {p} parked on {nid}, "
+                    f"owner is {owner}")
+            for (p, _t, _rid) in self.pending_pop[nid]:
+                owner = self.ring.owner_of_scalar(float(position_key(p)))
+                assert owner == nid, (
+                    f"pending POP for pos {p} parked on {nid}, "
+                    f"owner is {owner}")
 
     def queue_size(self) -> int:
         return self.anchor_state.size if self.mode == "queue" else self.anchor_state.last

@@ -47,6 +47,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import axis_size, shard_map
+
 INF = jnp.int32(2 ** 30)  # +infinity in the tropical semiring (no overflow:
 #                           compositions add at most O(batch) to it once)
 BOTTOM = jnp.int32(-1)
@@ -210,7 +212,7 @@ def sharded_queue_scan(is_enq_local: jax.Array, state: QueueState,
     total = tuple(x[-1] for x in inc)
 
     # phase 2: exclusive hypercube scan of device totals
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     incl = total
     shift = 1
@@ -254,10 +256,10 @@ def make_sharded_queue_scan(mesh, axis_name: str = "data"):
     rep = P()
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
-                       in_specs=(spec, rep, spec), out_specs=(spec, spec, rep),
-                       check_vma=False)  # new state is value-replicated by
-    def run(is_enq, state, valid):       # the final ppermute broadcast
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(spec, rep, spec), out_specs=(spec, spec, rep))
+    def run(is_enq, state, valid):       # new state is value-replicated by
+        # the final all_gather broadcast
         pos, matched, new = sharded_queue_scan(
             is_enq, QueueState(*state), axis_name, valid_local=valid)
         return pos, matched, tuple(new)

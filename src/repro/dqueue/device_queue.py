@@ -1,4 +1,4 @@
-"""Device-resident distributed queue: SKUEUE Stage 4 as all_to_all dispatch.
+"""Device-resident distributed queue: SKUEUE Stage 4 as fused all_to_all waves.
 
 The element store is sharded across a mesh axis: position ``p`` lives on
 shard ``p % n_shards`` at slot ``(p // n_shards) % cap`` — a dense sharded
@@ -15,12 +15,40 @@ paper's GET-outruns-PUT asynchrony *by construction*; FIFO consistency
 guarantees a matched GET's element is present (enqueued this step or
 earlier).
 
+Fused-collective layout (PR 1)
+------------------------------
+Stage 4 costs exactly **two** ``all_to_all`` collectives per wave:
+
+* *request* direction — PUT and GET traffic share one int32 send buffer of
+  shape ``[n_shards, L, 2 + W]``; each op column packs
+  ``slot ‖ tag ‖ payload`` where ``tag`` is 0 = inactive, 1 = PUT,
+  2 = GET (payload words are don't-care for GETs).  Inactive entries carry
+  ``slot = cap``, the junk row every shard reserves past its ring.
+* *reply* direction — one ``[n_shards, L, 1 + W]`` buffer packing
+  ``ok ‖ value`` for GET responses (PUT entries reply with ``ok = 0``).
+
+The seed implementation issued five collectives per wave (PUT slot, PUT
+vals, GET slot, GET reply vals, GET reply ok); that path is preserved as
+``fused=False`` so benchmarks and differential tests can compare against it.
+
+Buffer donation and multi-wave scan driver
+------------------------------------------
+The jitted ``step``/``run_waves`` entry points donate the queue state
+(``donate_argnums=(0,)``), so the ``[n_shards, cap+1, W]`` store is updated
+in place instead of being copied every wave — callers must treat the
+passed-in state as consumed (every driver in this repo replaces it).
+
+``run_waves`` executes K waves inside one ``lax.scan`` over pre-staged
+``[K, n, ...]`` op batches and returns all K results at once: no host
+round-trip between waves, one device dispatch per K-wave burst.  Wave k's
+global order follows wave k-1's, so a [K, n] staging is exactly K
+back-to-back waves of the sequential queue semantics.
+
 Payloads are fixed-width int32 vectors (token ids / request descriptors);
 the serving engine keeps richer request metadata host-side keyed by payload.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -28,8 +56,13 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.scan_queue import (BOTTOM, QueueState, StackState, queue_scan,
                                sharded_queue_scan, stack_scan)
+
+TAG_INACTIVE = 0
+TAG_PUT = 1
+TAG_GET = 2
 
 
 class DeviceQueueState(NamedTuple):
@@ -53,23 +86,38 @@ def _build_send(owner, col_payload, active, n_shards, sentinel):
     return jnp.where(hit[..., None], col_payload[None, :, :], sentinel)
 
 
+def _build_send_packed(owner, cols, active, n_shards, fill):
+    """Fused scatter: cols [L, C] into a [n_shards, L, C] send buffer; rows
+    not owned by a shard carry the ``fill`` [C] sentinel column."""
+    rows = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
+    hit = (rows == owner[None, :]) & active[None, :]
+    return jnp.where(hit[..., None], cols[None, :, :], fill[None, None, :])
+
+
 class DeviceQueue:
     """Distributed FIFO over one mesh axis.
 
     Args:
       mesh: jax Mesh; axis_name: the shard axis; cap: slots per shard;
-      payload_width: int32 words per element.
+      payload_width: int32 words per element; ops_per_shard: wave width L;
+      fused: two-collective fused Stage 4 (default) vs. the five-collective
+        seed path (kept for benchmarking and differential tests).
     """
 
     def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
-                 payload_width: int = 4, ops_per_shard: int = 64):
+                 payload_width: int = 4, ops_per_shard: int = 64,
+                 fused: bool = True):
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
         self.cap = cap
         self.W = payload_width
         self.L = ops_per_shard
+        self.fused = fused
+        self._state_specs = DeviceQueueState(P(), P(), P(self.axis),
+                                             P(self.axis))
         self._step = self._build_step()
+        self._run_waves = self._build_run_waves()
 
     def init_state(self) -> DeviceQueueState:
         n, cap, W = self.n_shards, self.cap, self.W
@@ -84,81 +132,165 @@ class DeviceQueue:
                 jnp.zeros((n, cap + 1), bool), sharding),
         )
 
+    # ------------------------------------------------------- wave bodies ---
+    def _assign(self, state: DeviceQueueState, is_enq, valid):
+        """Stages 1-3: position assignment by associative scan."""
+        qs = QueueState(state.first, state.last)
+        pos, matched, new_qs = sharded_queue_scan(
+            is_enq, qs, self.axis, valid_local=valid)
+        owner = jnp.where(matched, pos % self.n_shards, -1).astype(jnp.int32)
+        slot = jnp.where(matched, (pos // self.n_shards) % self.cap, self.cap)
+        return pos, matched, new_qs, owner, slot.astype(jnp.int32)
+
+    def _fused_wave(self, state: DeviceQueueState, is_enq, valid, payload):
+        """One wave, two collectives: packed request + packed reply."""
+        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
+        pos, matched, new_qs, owner, slot = self._assign(state, is_enq, valid)
+
+        # ---- stage 4 request: slot ‖ tag ‖ payload in ONE all_to_all ----
+        tag = jnp.where(matched & is_enq, TAG_PUT,
+                        jnp.where(matched & ~is_enq, TAG_GET, TAG_INACTIVE))
+        cols = jnp.concatenate(
+            [slot[:, None], tag.astype(jnp.int32)[:, None], payload], axis=1)
+        fill = jnp.concatenate(
+            [jnp.full((2,), cap, jnp.int32).at[1].set(TAG_INACTIVE),
+             jnp.zeros((W,), jnp.int32)])
+        send = _build_send_packed(owner, cols, matched, n_shards, fill)
+        recv = lax.all_to_all(send, axis, 0, 0, tiled=True)  # [n, L, 2+W]
+        r_slot, r_tag, r_vals = recv[..., 0], recv[..., 1], recv[..., 2:]
+
+        # ---- apply PUTs (before GETs: same-wave ENQ visible to DEQ) ----
+        sv = state.store_vals[0]   # local shard view inside shard_map
+        sf = state.store_full[0]
+        put_slot = jnp.where(r_tag == TAG_PUT, r_slot, cap).reshape(-1)
+        sv = sv.at[put_slot].set(r_vals.reshape(-1, W))  # cap row is junk
+        sf = sf.at[put_slot].set(True)
+        sf = sf.at[cap].set(False)
+
+        # ---- serve GETs and build the packed reply ----
+        is_get = r_tag == TAG_GET
+        get_slot = jnp.where(is_get, r_slot, cap)        # [n, L]
+        res_vals = sv[get_slot]                          # [n, L, W]
+        res_ok = is_get & sf[get_slot] & (get_slot < cap)
+        sf = sf.at[get_slot.reshape(-1)].set(False)      # remove on read
+        sf = sf.at[cap].set(False)
+        reply = jnp.concatenate(
+            [res_ok.astype(jnp.int32)[..., None], res_vals], axis=-1)
+        back = lax.all_to_all(reply, axis, 0, 0, tiled=True)  # [n, L, 1+W]
+
+        # local op j's reply sits at [owner[j], j]
+        j = jnp.arange(owner.shape[0])
+        own_row = jnp.clip(owner, 0, n_shards - 1)
+        want_get = matched & (~is_enq)
+        deq_vals = jnp.where(want_get[:, None],
+                             back[own_row, j, 1:], jnp.int32(0))
+        deq_ok = want_get & (back[own_row, j, 0] > 0)
+
+        overflow = (new_qs.last - new_qs.first + 1) > n_shards * cap
+        return (DeviceQueueState(new_qs.first, new_qs.last, sv[None],
+                                 sf[None]),
+                pos, matched, deq_vals, deq_ok, overflow)
+
+    def _legacy_wave(self, state: DeviceQueueState, is_enq, valid, payload):
+        """The seed five-collective wave (benchmark/differential baseline)."""
+        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
+        pos, matched, new_qs, owner, slot = self._assign(state, is_enq, valid)
+
+        # ---- stage 4a: PUT dispatch (enqueues) ----
+        put_active = matched & is_enq
+        send_slot = _build_send(owner, slot, put_active, n_shards,
+                                jnp.int32(cap))
+        send_vals = _build_send(owner, payload, put_active, n_shards,
+                                jnp.int32(0))
+        recv_slot = lax.all_to_all(send_slot, axis, 0, 0, tiled=True)
+        recv_vals = lax.all_to_all(send_vals, axis, 0, 0, tiled=True)
+        flat_slot = recv_slot.reshape(-1)
+        flat_vals = recv_vals.reshape(-1, W)
+        sv = state.store_vals[0]
+        sf = state.store_full[0]
+        sv = sv.at[flat_slot].set(flat_vals)     # cap row is the junk row
+        sf = sf.at[flat_slot].set(True)
+        sf = sf.at[cap].set(False)
+
+        # ---- stage 4b: GET dispatch (dequeues) ----
+        get_active = matched & (~is_enq)
+        gsend = _build_send(owner, slot, get_active, n_shards,
+                            jnp.int32(cap))
+        grecv = lax.all_to_all(gsend, axis, 0, 0, tiled=True)
+        res_vals = sv[grecv]                      # [n_shards, L, W]
+        res_ok = sf[grecv] & (grecv < cap)
+        sf = sf.at[grecv.reshape(-1)].set(False)  # remove on read
+        sf = sf.at[cap].set(False)
+        back_vals = lax.all_to_all(res_vals, axis, 0, 0, tiled=True)
+        back_ok = lax.all_to_all(res_ok, axis, 0, 0, tiled=True)
+        j = jnp.arange(owner.shape[0])
+        own_row = jnp.clip(owner, 0, n_shards - 1)
+        deq_vals = jnp.where(get_active[:, None],
+                             back_vals[own_row, j], jnp.int32(0))
+        deq_ok = get_active & back_ok[own_row, j]
+
+        overflow = (new_qs.last - new_qs.first + 1) > n_shards * cap
+        return (DeviceQueueState(new_qs.first, new_qs.last, sv[None],
+                                 sf[None]),
+                pos, matched, deq_vals, deq_ok, overflow)
+
+    def _wave_body(self):
+        return self._fused_wave if self.fused else self._legacy_wave
+
     # ------------------------------------------------------------ step -----
     def _build_step(self):
-        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
-
-        def body(state: DeviceQueueState, is_enq, valid, payload):
-            # ---- stages 1-3: position assignment by associative scan ----
-            qs = QueueState(state.first, state.last)
-            pos, matched, new_qs = sharded_queue_scan(
-                is_enq, qs, axis, valid_local=valid)
-            owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
-            slot = jnp.where(matched, (pos // n_shards) % cap, cap)
-            slot = slot.astype(jnp.int32)
-
-            # ---- stage 4a: PUT dispatch (enqueues) ----
-            put_active = matched & is_enq
-            send_slot = _build_send(owner, slot, put_active, n_shards,
-                                    jnp.int32(cap))
-            send_vals = _build_send(owner, payload, put_active, n_shards,
-                                    jnp.int32(0))
-            recv_slot = lax.all_to_all(send_slot, axis, 0, 0, tiled=True)
-            recv_vals = lax.all_to_all(send_vals, axis, 0, 0, tiled=True)
-            flat_slot = recv_slot.reshape(-1)
-            flat_vals = recv_vals.reshape(-1, W)
-            sv = state.store_vals[0]   # local shard view inside shard_map
-            sf = state.store_full[0]
-            sv = sv.at[flat_slot].set(flat_vals)     # cap row is the junk row
-            sf = sf.at[flat_slot].set(True)
-            sf = sf.at[cap].set(False)
-
-            # ---- stage 4b: GET dispatch (dequeues) ----
-            get_active = matched & (~is_enq)
-            gsend = _build_send(owner, slot, get_active, n_shards,
-                                jnp.int32(cap))
-            grecv = lax.all_to_all(gsend, axis, 0, 0, tiled=True)
-            res_vals = sv[grecv]                      # [n_shards, L, W]
-            res_ok = sf[grecv] & (grecv < cap)
-            sf = sf.at[grecv.reshape(-1)].set(False)  # remove on read
-            sf = sf.at[cap].set(False)
-            back_vals = lax.all_to_all(res_vals, axis, 0, 0, tiled=True)
-            back_ok = lax.all_to_all(res_ok, axis, 0, 0, tiled=True)
-            # local op j's reply sits at [owner[j], j]
-            j = jnp.arange(owner.shape[0])
-            own_row = jnp.clip(owner, 0, n_shards - 1)
-            deq_vals = jnp.where(get_active[:, None],
-                                 back_vals[own_row, j], jnp.int32(0))
-            deq_ok = get_active & back_ok[own_row, j]
-
-            overflow = (new_qs.last - new_qs.first + 1) > n_shards * cap
-            return (DeviceQueueState(new_qs.first, new_qs.last,
-                                     sv[None], sf[None]),
-                    pos, matched, deq_vals, deq_ok, overflow)
-
-        state_specs = DeviceQueueState(P(), P(), P(self.axis), P(self.axis))
-
-        @jax.jit
-        @functools.partial(
-            jax.shard_map, mesh=self.mesh,
-            in_specs=(state_specs, P(self.axis), P(self.axis),
-                      P(self.axis)),
-            out_specs=(state_specs, P(self.axis), P(self.axis),
-                       P(self.axis), P(self.axis), P()),
-            check_vma=False)
-        def step(state, is_enq, valid, payload):
-            return body(state, is_enq, valid, payload)
-
-        return step
+        body = self._wave_body()
+        state_specs = self._state_specs
+        wrapped = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(state_specs, P(self.axis), P(self.axis), P(self.axis)),
+            out_specs=(state_specs, P(self.axis), P(self.axis), P(self.axis),
+                       P(self.axis), P()))
+        return jax.jit(wrapped, donate_argnums=(0,))
 
     def step(self, state: DeviceQueueState, is_enq: jax.Array,
              valid: jax.Array, payload: jax.Array):
-        """Process one global batch.
+        """Process one global batch.  The state argument is DONATED.
 
         is_enq/valid: [n_shards * L] bool; payload: [n_shards * L, W] int32.
         Returns (new_state, positions, matched, deq_vals, deq_ok, overflow).
         """
         return self._step(state, is_enq, valid, payload)
+
+    # ------------------------------------------------------- multi-wave ----
+    def _build_run_waves(self):
+        body = self._wave_body()
+        state_specs = self._state_specs
+
+        def multi(state, is_enq, valid, payload):
+            # local shapes: is_enq/valid [K, L]; payload [K, L, W]
+            def wave(st, xs):
+                e, v, p = xs
+                st2, pos, matched, dv, dok, ovf = body(st, e, v, p)
+                return st2, (pos, matched, dv, dok, ovf)
+            st, (pos, matched, dv, dok, ovf) = lax.scan(
+                wave, state, (is_enq, valid, payload))
+            return st, pos, matched, dv, dok, ovf
+
+        wrapped = shard_map(
+            multi, mesh=self.mesh,
+            in_specs=(state_specs, P(None, self.axis), P(None, self.axis),
+                      P(None, self.axis)),
+            out_specs=(state_specs, P(None, self.axis), P(None, self.axis),
+                       P(None, self.axis), P(None, self.axis), P(None)))
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+    def run_waves(self, state: DeviceQueueState, is_enq: jax.Array,
+                  valid: jax.Array, payload: jax.Array):
+        """Execute K pre-staged waves in ONE device dispatch (lax.scan).
+
+        The state argument is DONATED.  is_enq/valid: [K, n_shards * L] bool;
+        payload: [K, n_shards * L, W] int32.  Wave k's global order follows
+        wave k-1's.  Returns (new_state, positions [K, n], matched [K, n],
+        deq_vals [K, n, W], deq_ok [K, n], overflow [K]) with no host
+        synchronization between waves.
+        """
+        return self._run_waves(state, is_enq, valid, payload)
 
 
 class DeviceStack:
@@ -167,7 +299,16 @@ class DeviceStack:
     Positions are reused, so each store slot keeps a small (ticket, payload)
     set of depth ``slot_depth``; the monotone ticket bound makes concurrent
     pops conflict-free (each pop takes the unique max ticket <= its bound).
+
+    Stage 4 uses the same fused two-collective layout as :class:`DeviceQueue`
+    (request buffer packs ``slot ‖ ticket/bound ‖ tag ‖ payload``; reply
+    packs ``ok ‖ value``), replacing the seed's seven collectives per wave,
+    and the jitted entry points donate the stack state.  ``run_waves``
+    mirrors the queue's multi-wave lax.scan driver.
     """
+
+    TAG_PUSH = 1
+    TAG_POP = 2
 
     def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
                  payload_width: int = 4, ops_per_shard: int = 64,
@@ -179,7 +320,10 @@ class DeviceStack:
         self.W = payload_width
         self.L = ops_per_shard
         self.D = slot_depth
+        self._specs = {"last": P(), "ticket": P(), "vals": P(self.axis),
+                       "ticks": P(self.axis)}
         self._step = self._build_step()
+        self._run_waves = self._build_run_waves()
 
     def init_state(self):
         n, cap, W, D = self.n_shards, self.cap, self.W, self.D
@@ -194,110 +338,134 @@ class DeviceStack:
                                     sharding),
         }
 
-    def _build_step(self):
+    def _wave(self, state, is_push, valid, payload):
         axis, n_shards, cap, W, D = (self.axis, self.n_shards, self.cap,
                                      self.W, self.D)
+        ss = StackState(state["last"], state["ticket"])
+        # global order over shards: reuse the queue hypercube by running
+        # the scan on the concatenated view via all_gather of transforms.
+        # (stack_scan is cheap: carries are 3 ints)
+        is_push_g = lax.all_gather(is_push, axis, tiled=True)
+        valid_g = lax.all_gather(valid, axis, tiled=True)
+        pos_g, tick_g, matched_g, new_ss = stack_scan(
+            is_push_g, ss, valid=valid_g)
+        i0 = lax.axis_index(axis) * is_push.shape[0]
+        pos = lax.dynamic_slice_in_dim(pos_g, i0, is_push.shape[0])
+        tick = lax.dynamic_slice_in_dim(tick_g, i0, is_push.shape[0])
+        matched = lax.dynamic_slice_in_dim(matched_g, i0,
+                                           is_push.shape[0])
 
-        def body(state, is_push, valid, payload):
-            ss = StackState(state["last"], state["ticket"])
-            # global order over shards: reuse the queue hypercube by running
-            # the scan on the concatenated view via all_gather of transforms.
-            # (stack_scan is cheap: carries are 3 ints)
-            is_push_g = lax.all_gather(is_push, axis, tiled=True)
-            valid_g = lax.all_gather(valid, axis, tiled=True)
-            pos_g, tick_g, matched_g, new_ss = stack_scan(
-                is_push_g, ss, valid=valid_g)
-            i0 = lax.axis_index(axis) * is_push.shape[0]
-            pos = lax.dynamic_slice_in_dim(pos_g, i0, is_push.shape[0])
-            tick = lax.dynamic_slice_in_dim(tick_g, i0, is_push.shape[0])
-            matched = lax.dynamic_slice_in_dim(matched_g, i0,
-                                               is_push.shape[0])
+        owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
+        slot = jnp.where(matched, (pos // n_shards) % cap,
+                         cap).astype(jnp.int32)
 
-            owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
-            slot = jnp.where(matched, (pos // n_shards) % cap,
-                             cap).astype(jnp.int32)
+        sv = state["vals"][0]    # [cap+1, D, W]
+        stk = state["ticks"][0]  # [cap+1, D]
 
-            sv = state["vals"][0]    # [cap+1, D, W]
-            stk = state["ticks"][0]  # [cap+1, D]
+        # ---- fused request: slot ‖ ticket/bound ‖ tag ‖ payload ----
+        tag = jnp.where(matched & is_push, self.TAG_PUSH,
+                        jnp.where(matched & ~is_push, self.TAG_POP,
+                                  TAG_INACTIVE))
+        cols = jnp.concatenate(
+            [slot[:, None], tick[:, None], tag.astype(jnp.int32)[:, None],
+             payload], axis=1)
+        fill = jnp.concatenate(
+            [jnp.array([cap, -1, TAG_INACTIVE], jnp.int32),
+             jnp.zeros((W,), jnp.int32)])
+        send = _build_send_packed(owner, cols, matched, n_shards, fill)
+        recv = lax.all_to_all(send, axis, 0, 0, tiled=True)  # [n, L, 3+W]
+        r_all_slot, r_tb, r_tag = recv[..., 0], recv[..., 1], recv[..., 2]
+        r_all_vals = recv[..., 3:]
 
-            # ---- PUSH dispatch ----
-            a_push = matched & is_push
-            s_slot = _build_send(owner, slot, a_push, n_shards, jnp.int32(cap))
-            s_tick = _build_send(owner, tick, a_push, n_shards, jnp.int32(-1))
-            s_vals = _build_send(owner, payload, a_push, n_shards,
-                                 jnp.int32(0))
-            r_slot = lax.all_to_all(s_slot, axis, 0, 0, tiled=True).reshape(-1)
-            r_tick = lax.all_to_all(s_tick, axis, 0, 0, tiled=True).reshape(-1)
-            r_vals = lax.all_to_all(s_vals, axis, 0, 0,
-                                    tiled=True).reshape(-1, W)
-            # insert each arriving element into the first free depth entry
-            # of its slot; arrivals to one slot in one step get distinct
-            # entries via rank-within-slot.
-            order = jnp.argsort(r_slot)  # group same-slot arrivals
-            rs, rt, rv = r_slot[order], r_tick[order], r_vals[order]
-            same = jnp.concatenate([jnp.array([False]), rs[1:] == rs[:-1]])
-            idx = jnp.arange(rs.shape[0], dtype=jnp.int32)
-            run_start = lax.associative_scan(
-                jnp.maximum, jnp.where(same, -1, idx))
-            rank = idx - run_start  # 0,1,2,... within each same-slot run
-            free = (stk[rs] < 0).astype(jnp.int32)      # [Nr, D]
-            base_free = jnp.cumsum(free, axis=1) - free  # rank of each free
-            want = rank[:, None]
-            pick = (stk[rs] < 0) & (base_free == want)
-            depth_idx = jnp.argmax(pick, axis=1)
-            ok_ins = pick.any(axis=1) & (rt >= 0) & (rs < cap)
-            stk = stk.at[jnp.where(ok_ins, rs, cap),
-                         jnp.where(ok_ins, depth_idx, D - 1)].set(
-                             jnp.where(ok_ins, rt, stk[cap, D - 1]))
-            sv = sv.at[jnp.where(ok_ins, rs, cap),
-                       jnp.where(ok_ins, depth_idx, D - 1)].set(
-                           jnp.where(ok_ins[:, None], rv, sv[cap, D - 1]))
-            slot_overflow = ((rt >= 0) & (rs < cap) & ~ok_ins).any()
-            slot_overflow = lax.pmax(slot_overflow.astype(jnp.int32),
-                                     axis) > 0  # replicated flag
+        # ---- PUSH inserts ----
+        is_push_r = r_tag == self.TAG_PUSH
+        r_slot = jnp.where(is_push_r, r_all_slot, cap).reshape(-1)
+        r_tick = jnp.where(is_push_r, r_tb, -1).reshape(-1)
+        r_vals = r_all_vals.reshape(-1, W)
+        # insert each arriving element into the first free depth entry
+        # of its slot; arrivals to one slot in one step get distinct
+        # entries via rank-within-slot.
+        order = jnp.argsort(r_slot)  # group same-slot arrivals
+        rs, rt, rv = r_slot[order], r_tick[order], r_vals[order]
+        same = jnp.concatenate([jnp.array([False]), rs[1:] == rs[:-1]])
+        idx = jnp.arange(rs.shape[0], dtype=jnp.int32)
+        run_start = lax.associative_scan(
+            jnp.maximum, jnp.where(same, -1, idx))
+        rank = idx - run_start  # 0,1,2,... within each same-slot run
+        free = (stk[rs] < 0).astype(jnp.int32)      # [Nr, D]
+        base_free = jnp.cumsum(free, axis=1) - free  # rank of each free
+        want = rank[:, None]
+        pick = (stk[rs] < 0) & (base_free == want)
+        depth_idx = jnp.argmax(pick, axis=1)
+        ok_ins = pick.any(axis=1) & (rt >= 0) & (rs < cap)
+        stk = stk.at[jnp.where(ok_ins, rs, cap),
+                     jnp.where(ok_ins, depth_idx, D - 1)].set(
+                         jnp.where(ok_ins, rt, stk[cap, D - 1]))
+        sv = sv.at[jnp.where(ok_ins, rs, cap),
+                   jnp.where(ok_ins, depth_idx, D - 1)].set(
+                       jnp.where(ok_ins[:, None], rv, sv[cap, D - 1]))
+        slot_overflow = ((rt >= 0) & (rs < cap) & ~ok_ins).any()
+        slot_overflow = lax.pmax(slot_overflow.astype(jnp.int32),
+                                 axis) > 0  # replicated flag
 
-            # ---- POP dispatch: take max ticket <= bound at the slot ----
-            a_pop = matched & (~is_push)
-            g_slot = _build_send(owner, slot, a_pop, n_shards, jnp.int32(cap))
-            g_bound = _build_send(owner, tick, a_pop, n_shards, jnp.int32(-1))
-            q_slot = lax.all_to_all(g_slot, axis, 0, 0, tiled=True)
-            q_bound = lax.all_to_all(g_bound, axis, 0, 0, tiled=True)
-            cand = stk[q_slot]                                   # [n,L,D]
-            eligible = (cand >= 0) & (cand <= q_bound[..., None])
-            best = jnp.where(eligible, cand, -1).max(axis=-1)    # [n,L]
-            got = best >= 0
-            d_pick = jnp.argmax(jnp.where(eligible, cand, -1), axis=-1)
-            res_vals = sv[q_slot, d_pick]
-            # remove the picked entries (unique per pop: tickets are unique)
-            stk = stk.at[jnp.where(got, q_slot, cap),
-                         jnp.where(got, d_pick, D - 1)].set(
-                             jnp.where(got, -1, stk[cap, D - 1]))
-            back_vals = lax.all_to_all(res_vals, axis, 0, 0, tiled=True)
-            back_ok = lax.all_to_all(got, axis, 0, 0, tiled=True)
-            j = jnp.arange(owner.shape[0])
-            own_row = jnp.clip(owner, 0, n_shards - 1)
-            pop_vals = jnp.where(a_pop[:, None],
-                                 back_vals[own_row, j], jnp.int32(0))
-            pop_ok = a_pop & back_ok[own_row, j]
+        # ---- POP picks: take max ticket <= bound at the slot ----
+        is_pop_r = r_tag == self.TAG_POP
+        q_slot = jnp.where(is_pop_r, r_all_slot, cap)        # [n, L]
+        q_bound = jnp.where(is_pop_r, r_tb, -1)
+        cand = stk[q_slot]                                   # [n,L,D]
+        eligible = (cand >= 0) & (cand <= q_bound[..., None])
+        best = jnp.where(eligible, cand, -1).max(axis=-1)    # [n,L]
+        got = best >= 0
+        d_pick = jnp.argmax(jnp.where(eligible, cand, -1), axis=-1)
+        res_vals = sv[q_slot, d_pick]
+        # remove the picked entries (unique per pop: tickets are unique)
+        stk = stk.at[jnp.where(got, q_slot, cap),
+                     jnp.where(got, d_pick, D - 1)].set(
+                         jnp.where(got, -1, stk[cap, D - 1]))
+        reply = jnp.concatenate(
+            [got.astype(jnp.int32)[..., None], res_vals], axis=-1)
+        back = lax.all_to_all(reply, axis, 0, 0, tiled=True)
+        j = jnp.arange(owner.shape[0])
+        own_row = jnp.clip(owner, 0, n_shards - 1)
+        a_pop = matched & (~is_push)
+        pop_vals = jnp.where(a_pop[:, None],
+                             back[own_row, j, 1:], jnp.int32(0))
+        pop_ok = a_pop & (back[own_row, j, 0] > 0)
 
-            new_state = {"last": new_ss.last, "ticket": new_ss.ticket,
-                         "vals": sv[None], "ticks": stk[None]}
-            return new_state, pos, matched, pop_vals, pop_ok, slot_overflow
+        new_state = {"last": new_ss.last, "ticket": new_ss.ticket,
+                     "vals": sv[None], "ticks": stk[None]}
+        return new_state, pos, matched, pop_vals, pop_ok, slot_overflow
 
-        specs = {"last": P(), "ticket": P(), "vals": P(self.axis),
-                 "ticks": P(self.axis)}
-
-        @jax.jit
-        @functools.partial(
-            jax.shard_map, mesh=self.mesh,
-            in_specs=(specs, P(self.axis), P(self.axis), P(self.axis)),
-            out_specs=(specs, P(self.axis), P(self.axis), P(self.axis),
-                       P(self.axis), P()),
-            check_vma=False)
-        def step(state, is_push, valid, payload):
-            return body(state, is_push, valid, payload)
-
-        return step
+    def _build_step(self):
+        wrapped = shard_map(
+            self._wave, mesh=self.mesh,
+            in_specs=(self._specs, P(self.axis), P(self.axis), P(self.axis)),
+            out_specs=(self._specs, P(self.axis), P(self.axis), P(self.axis),
+                       P(self.axis), P()))
+        return jax.jit(wrapped, donate_argnums=(0,))
 
     def step(self, state, is_push, valid, payload):
+        """One wave; the state argument is DONATED."""
         return self._step(state, is_push, valid, payload)
+
+    def _build_run_waves(self):
+        def multi(state, is_push, valid, payload):
+            def wave(st, xs):
+                e, v, p = xs
+                st2, pos, matched, pv, pok, ovf = self._wave(st, e, v, p)
+                return st2, (pos, matched, pv, pok, ovf)
+            st, (pos, matched, pv, pok, ovf) = lax.scan(
+                wave, state, (is_push, valid, payload))
+            return st, pos, matched, pv, pok, ovf
+
+        wrapped = shard_map(
+            multi, mesh=self.mesh,
+            in_specs=(self._specs, P(None, self.axis), P(None, self.axis),
+                      P(None, self.axis)),
+            out_specs=(self._specs, P(None, self.axis), P(None, self.axis),
+                       P(None, self.axis), P(None, self.axis), P(None)))
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+    def run_waves(self, state, is_push, valid, payload):
+        """K pushes/pops waves in one lax.scan dispatch (state DONATED)."""
+        return self._run_waves(state, is_push, valid, payload)

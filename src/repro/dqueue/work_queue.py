@@ -12,12 +12,26 @@ order.  For fault tolerance at fleet scale:
 
 Runs host-side around a :class:`DeviceQueue` so the item payloads live
 sharded on device, and the global FIFO order is the queue's order ≺.
+
+Scheduling rides the multi-wave API (PR 1): :meth:`run_waves` stages a burst
+of K scheduling steps as ``[K, n]`` op batches and executes them in ONE
+``DeviceQueue.run_waves`` dispatch — no host round-trip between waves.
+Leases held at burst start have fully predictable expiry times, so their
+retries are pre-staged into exactly the wave where a per-step loop would
+have re-enqueued them; leases *granted inside* the burst cannot be observed
+until it returns, so they are re-checked at the next burst boundary.  A
+lease granted at wave j expires only after ``lease_steps`` further steps,
+so for bursts of ``K <= lease_steps + 1`` waves the burst schedule is
+*exactly* the per-step schedule — :meth:`run_waves` asserts that bound
+(split longer horizons into multiple bursts).  :meth:`step` is the K=1
+special case and matches the seed per-step behavior bit for bit.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from .device_queue import DeviceQueue
@@ -47,48 +61,75 @@ class WorkQueue:
         """Submit new items and serve dequeue requests of `want[w]` items per
         worker.  Returns (worker, payload) grants.  Expired leases are
         re-enqueued ahead of new submissions (FIFO fairness for retries)."""
-        self.step_no += 1
-        expired = [l for eid, l in self.leases.items()
-                   if self.step_no - l.issued_step > self.lease_steps
-                   and eid not in self.completed]
-        for l in expired:
-            self.stats["reissued"] += 1
-        retry_payloads = [l.item for l in expired]
-        for l in expired:
-            eid = int(l.item[0])
-            self.leases.pop(eid, None)
+        return self.run_waves([submit], [want])[0]
+
+    # -- a burst of K scheduling steps in one device dispatch ---------------
+    def run_waves(self, submits: List[List[np.ndarray]],
+                  wants: List[List[int]]
+                  ) -> List[List[Tuple[int, np.ndarray]]]:
+        """Execute ``K = len(submits)`` scheduling steps as one multi-wave
+        queue dispatch.  ``submits[k]`` are the items entering at wave k and
+        ``wants[k][w]`` the dequeue count for worker w at wave k.  Returns
+        per-wave grant lists.  A pre-burst lease whose expiry falls at wave
+        k is re-enqueued ahead of wave k's submissions, exactly as the
+        per-step loop would have."""
+        K = len(submits)
+        assert K == len(wants) and K >= 1
+        assert K <= self.lease_steps + 1, (
+            "burst longer than the lease horizon: a lease granted inside "
+            "this burst could expire before it ends and its retry would "
+            "silently defer to the next burst — split into shorter bursts")
+        first_step = self.step_no + 1
 
         n = self.dq.n_shards * self.dq.L
         W = self.dq.W
-        enq_items = retry_payloads + list(submit)
-        n_deq = int(sum(want))
-        assert len(enq_items) + n_deq <= n, "batch larger than queue step"
-        is_enq = np.zeros(n, bool)
-        valid = np.zeros(n, bool)
-        payload = np.zeros((n, W), np.int32)
-        for i, item in enumerate(enq_items):
-            is_enq[i] = True
-            valid[i] = True
-            payload[i, : len(item)] = item
-        for k in range(n_deq):
-            valid[len(enq_items) + k] = True
-        self.state, pos, matched, deq_vals, deq_ok, overflow = self.dq.step(
-            self.state, is_enq, valid, payload)
-        assert not bool(overflow), "work queue overflow"
+        is_enq = np.zeros((K, n), bool)
+        valid = np.zeros((K, n), bool)
+        payload = np.zeros((K, n, W), np.int32)
+        wave_meta: List[Tuple[int, List[int]]] = []
+        for k in range(K):
+            # pre-burst leases expiring at step first_step + k retry HERE
+            step_k = first_step + k
+            expired = [l for eid, l in self.leases.items()
+                       if step_k - l.issued_step > self.lease_steps
+                       and eid not in self.completed]
+            retry_payloads = []
+            for l in expired:
+                self.stats["reissued"] += 1
+                retry_payloads.append(l.item)
+                self.leases.pop(int(l.item[0]), None)
+            enq_items = retry_payloads + list(submits[k])
+            n_deq = int(sum(wants[k]))
+            assert len(enq_items) + n_deq <= n, "batch larger than queue wave"
+            for i, item in enumerate(enq_items):
+                is_enq[k, i] = valid[k, i] = True
+                payload[k, i, : len(item)] = item
+            for t in range(n_deq):
+                valid[k, len(enq_items) + t] = True
+            wave_meta.append((len(enq_items), list(wants[k])))
+
+        self.step_no += K
+        self.state, pos, matched, deq_vals, deq_ok, overflow = \
+            self.dq.run_waves(self.state, jnp.array(is_enq),
+                              jnp.array(valid), jnp.array(payload))
+        assert not bool(np.asarray(overflow).any()), "work queue overflow"
         deq_vals = np.asarray(deq_vals)
         deq_ok = np.asarray(deq_ok)
-        grants: List[Tuple[int, np.ndarray]] = []
-        workers = [w for w, k in enumerate(want) for _ in range(k)]
-        for k in range(n_deq):
-            i = len(enq_items) + k
-            if deq_ok[i]:
-                item = deq_vals[i]
-                eid = int(item[0])
-                self.leases[eid] = _Lease(item=item,
-                                          issued_step=self.step_no,
-                                          worker=workers[k])
-                grants.append((workers[k], item))
-        return grants
+        all_grants: List[List[Tuple[int, np.ndarray]]] = []
+        for k, (n_enq, want) in enumerate(wave_meta):
+            grants: List[Tuple[int, np.ndarray]] = []
+            workers = [w for w, c in enumerate(want) for _ in range(c)]
+            for t, w in enumerate(workers):
+                i = n_enq + t
+                if deq_ok[k, i]:
+                    item = deq_vals[k, i]
+                    eid = int(item[0])
+                    self.leases[eid] = _Lease(item=item,
+                                              issued_step=first_step + k,
+                                              worker=w)
+                    grants.append((w, item))
+            all_grants.append(grants)
+        return all_grants
 
     def make_item(self, data: List[int]) -> np.ndarray:
         """Items carry a unique id in word 0 (dedup across re-issues)."""

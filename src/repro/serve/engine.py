@@ -9,6 +9,14 @@ slot set with per-slot positions; finished slots are refilled from the queue eac
 decode path (slot-local), which shares one compiled step for prefill and
 decode at engine scale; the 32k-prefill fast path is the dedicated
 ``prefill`` lowering exercised by the dry-run.
+
+Queue traffic rides the multi-wave API (PR 1): ``submit`` stages arrivals
+host-side, and each engine step flushes staged enqueues *and* the free-slot
+dequeues as ONE fused queue wave (``DeviceQueue.run_waves``), chunked across
+K waves in a single device dispatch when a submission burst exceeds one
+wave's capacity.  The engine mirrors the queue size host-side
+(enqueues flushed minus dequeues granted), so ``run_until_drained`` never
+synchronizes on device state between steps.
 """
 from __future__ import annotations
 
@@ -52,6 +60,8 @@ class ServeEngine:
         self.slot_pos = np.zeros(max_slots, np.int64)
         self.cache, _ = model.init_cache(max_slots, max_seq)
         self.step_no = 0
+        self._staged: List[int] = []   # rids submitted but not yet flushed
+        self._host_qsize = 0           # host mirror of the device queue size
         # vmap over slots: each slot decodes at ITS OWN position (cache leaves
         # have batch on axis 1: [layers, B, ...]); re-add the unit batch dim
         # the model expects inside the map
@@ -67,37 +77,49 @@ class ServeEngine:
 
     # ---------------------------------------------------------- frontend ---
     def submit(self, reqs: List[Request]):
-        """Enqueue arrivals into the distributed FIFO (one step batch)."""
-        n = self.queue.n_shards * self.queue.L
-        is_enq = np.zeros(n, bool)
-        valid = np.zeros(n, bool)
-        payload = np.zeros((n, 2), np.int32)
-        for i, r in enumerate(reqs):
+        """Stage arrivals for the distributed FIFO.
+
+        They enter the queue on the next engine step, fused with that step's
+        refill dequeues; oversized bursts are chunked across as many queue
+        waves as needed (all inside one ``run_waves`` dispatch), so a submit
+        can exceed ``n_shards * L`` requests without overflowing a wave.
+        """
+        for r in reqs:
             self.requests[r.rid] = r
             r.enqueue_step = self.step_no
-            is_enq[i] = valid[i] = True
-            payload[i, 0] = r.rid
-        self._qstep(is_enq, valid, payload)
+            self._staged.append(r.rid)
 
-    def _qstep(self, is_enq, valid, payload):
-        self.qstate, pos, matched, dv, dok, ovf = self.queue.step(
-            self.qstate, jnp.array(is_enq), jnp.array(valid),
-            jnp.array(payload))
-        assert not bool(ovf)
-        return np.asarray(dv), np.asarray(dok)
-
-    def _refill(self):
+    def _flush_and_refill(self):
+        """ONE fused queue dispatch: staged enqueues + free-slot dequeues."""
         free = [i for i, s in enumerate(self.slots) if s is None]
-        if not free:
+        enq_rids, self._staged = self._staged, []
+        n_ops = len(enq_rids) + len(free)
+        if n_ops == 0:
             return
         n = self.queue.n_shards * self.queue.L
-        is_enq = np.zeros(n, bool)
-        valid = np.zeros(n, bool)
-        payload = np.zeros((n, 2), np.int32)
-        for k in range(min(len(free), n)):
-            valid[k] = True  # dequeue request
-        dv, dok = self._qstep(is_enq, valid, payload)
-        got = [int(dv[k, 0]) for k in range(n) if dok[k]]
+        n_waves = -(-n_ops // n)  # ceil: chunk oversized bursts
+        # pad the wave count to a power of two (extra waves are all-invalid
+        # no-ops) so fluctuating burst sizes only ever compile the scanned
+        # program for O(log K) distinct shapes
+        n_waves = 1 << (n_waves - 1).bit_length()
+        is_enq = np.zeros((n_waves, n), bool)
+        valid = np.zeros((n_waves, n), bool)
+        payload = np.zeros((n_waves, n, 2), np.int32)
+        for j, rid in enumerate(enq_rids):
+            k, i = divmod(j, n)
+            is_enq[k, i] = valid[k, i] = True
+            payload[k, i, 0] = rid
+        for m in range(len(free)):
+            k, i = divmod(len(enq_rids) + m, n)
+            valid[k, i] = True  # dequeue request
+        self.qstate, pos, matched, dv, dok, ovf = self.queue.run_waves(
+            self.qstate, jnp.array(is_enq), jnp.array(valid),
+            jnp.array(payload))
+        assert not bool(np.asarray(ovf).any())
+        dv = np.asarray(dv).reshape(n_waves * n, 2)
+        dok = np.asarray(dok).reshape(n_waves * n)
+        got = [int(dv[j, 0]) for j in range(n_waves * n) if dok[j]]
+        self._host_qsize += len(enq_rids) - len(got)
         for slot, rid in zip(free, got):
             r = self.requests[rid]
             r.start_step = self.step_no
@@ -107,9 +129,9 @@ class ServeEngine:
 
     # ------------------------------------------------------------ decode ---
     def step(self):
-        """One engine step: refill free slots, advance every active slot."""
+        """One engine step: flush+refill in one fused wave, advance slots."""
         self.step_no += 1
-        self._refill()
+        self._flush_and_refill()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
@@ -140,9 +162,11 @@ class ServeEngine:
                     self.slots[i] = None
 
     def run_until_drained(self, max_steps: int = 1000):
+        """Drive steps until everything is served.  Drain detection uses the
+        host-side queue-size mirror — no device synchronization per step."""
         for _ in range(max_steps):
             self.step()
-            if all(r.done for r in self.requests.values()) and \
-                    int(self.qstate.size) == 0:
+            if (all(r.done for r in self.requests.values())
+                    and not self._staged and self._host_qsize == 0):
                 return True
         return False

@@ -1,0 +1,88 @@
+"""Hypothesis shim: the real library when installed, else a seeded fallback.
+
+The tier-1 suite must collect and run green on a bare interpreter (jax +
+pytest only).  When ``hypothesis`` is importable we re-export it untouched —
+``pip install -r requirements-dev.txt`` gives the full property run with
+shrinking.  Otherwise this module provides drop-in ``given`` / ``settings``
+/ ``strategies`` that draw ``max_examples`` deterministic examples with
+``np.random.default_rng`` seeded from the test name — no shrinking, but the
+same assertions run over a stable example set either way.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # ---------------------------------- seeded fallback ---
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(min_value
+                                  + (max_value - min_value) * rng.random()))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    def settings(max_examples=20, deadline=None, **_ignored):
+        def decorate(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+        return decorate
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            def wrapper():
+                n_examples = getattr(fn, "_hyp_max_examples", 20)
+                name_seed = zlib.crc32(fn.__name__.encode())
+                for example in range(n_examples):
+                    rng = np.random.default_rng((name_seed, example))
+                    args = [s.draw(rng) for s in arg_strategies]
+                    kwargs = {k: s.draw(rng)
+                              for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except Exception:
+                        print(f"falsifying example #{example}: "
+                              f"args={args!r} kwargs={kwargs!r}")
+                        raise
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # zero-arg signature so pytest doesn't mistake the drawn
+            # parameters for fixtures
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return decorate

@@ -3,7 +3,7 @@ from collections import deque
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import batch as B
 from repro.core.intervals import (AnchorState, BOTTOM, assign_queue,

@@ -3,7 +3,7 @@ runtime scaling (Theorem 15), batch bounds (Theorems 18/20), membership
 (Section IV) — under both synchronous and adversarial-async schedulers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.consistency import check_sequential_consistency
 from repro.core.protocol import DEQ, ENQ, Skueue

@@ -1,0 +1,250 @@
+"""PR 1 fused Stage-4 dispatch: collective count, multi-wave scan driver,
+and cross-implementation equivalence (protocol sim == associative scan ==
+device queue) on a forced multi-device CPU mesh."""
+from multidev import run_multidev
+
+COLLECTIVE_COUNT = r"""
+import re
+import jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import DeviceQueue, DeviceStack
+def count_all_to_all(jitted, args):
+    txt = jitted.lower(*args).compile().as_text()
+    return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+mesh = make_mesh((8,), ("data",))
+dq = DeviceQueue(mesh, "data", cap=32, payload_width=2, ops_per_shard=4)
+n = dq.n_shards * dq.L
+args = (dq.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool),
+        jnp.zeros((n, 2), jnp.int32))
+c_fused = count_all_to_all(dq._step, args)
+assert c_fused <= 2, f"fused DeviceQueue.step has {c_fused} all-to-alls"
+legacy = DeviceQueue(mesh, "data", cap=32, payload_width=2, ops_per_shard=4,
+                     fused=False)
+args = (legacy.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool),
+        jnp.zeros((n, 2), jnp.int32))
+c_legacy = count_all_to_all(legacy._step, args)
+assert c_legacy == 5, f"seed baseline drifted: {c_legacy} all-to-alls"
+ds = DeviceStack(mesh, "data", cap=32, payload_width=2, ops_per_shard=4)
+args = (ds.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool),
+        jnp.zeros((n, 2), jnp.int32))
+c_stack = count_all_to_all(ds._step, args)
+assert c_stack <= 2, f"fused DeviceStack.step has {c_stack} all-to-alls"
+print("OK collectives", c_fused, c_legacy, c_stack)
+"""
+
+
+def test_step_compiles_to_two_all_to_alls_8dev():
+    """Acceptance: fused DeviceQueue.step <= 2 all-to-all ops per wave."""
+    out = run_multidev(COLLECTIVE_COUNT, n_dev=8)
+    assert "OK collectives 2 5 2" in out
+
+
+FUSED_EQUALS_LEGACY = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import DeviceQueue
+mesh = make_mesh((8,), ("data",))
+kw = dict(cap=64, payload_width=2, ops_per_shard=8)
+fused = DeviceQueue(mesh, "data", **kw)
+legacy = DeviceQueue(mesh, "data", fused=False, **kw)
+fs, ls = fused.init_state(), legacy.init_state()
+rng = np.random.default_rng(11)
+n = fused.n_shards * fused.L
+for it in range(10):
+    e = jnp.array(rng.random(n) < 0.6)
+    v = jnp.array(rng.random(n) < 0.85)
+    p = jnp.array(rng.integers(0, 1000, (n, 2)), jnp.int32)
+    fs, fpos, fm, fdv, fdok, fovf = fused.step(fs, e, v, p)
+    ls, lpos, lm, ldv, ldok, lovf = legacy.step(ls, e, v, p)
+    assert (np.asarray(fpos) == np.asarray(lpos)).all(), it
+    assert (np.asarray(fm) == np.asarray(lm)).all(), it
+    assert (np.asarray(fdv) == np.asarray(ldv)).all(), it
+    assert (np.asarray(fdok) == np.asarray(ldok)).all(), it
+    assert bool(fovf) == bool(lovf)
+assert int(fs.first) == int(ls.first) and int(fs.last) == int(ls.last)
+assert (np.asarray(fs.store_full) == np.asarray(ls.store_full)).all()
+print("OK fused == legacy")
+"""
+
+
+def test_fused_step_matches_seed_path_8dev():
+    """The two-collective wave is bit-identical to the five-collective one."""
+    out = run_multidev(FUSED_EQUALS_LEGACY, n_dev=8)
+    assert "OK fused == legacy" in out
+
+
+RUN_WAVES = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import DeviceQueue
+mesh = make_mesh((8,), ("data",))
+dq = DeviceQueue(mesh, "data", cap=64, payload_width=2, ops_per_shard=8)
+n = dq.n_shards * dq.L
+K = 6
+rng = np.random.default_rng(7)
+E = rng.random((K, n)) < 0.6
+V = rng.random((K, n)) < 0.9
+PW = rng.integers(0, 99, (K, n, 2)).astype(np.int32)
+sb = dq.init_state()
+outs = []
+for k in range(K):
+    sb, pos, m, dv, dok, ovf = dq.step(sb, jnp.array(E[k]), jnp.array(V[k]),
+                                       jnp.array(PW[k]))
+    outs.append((np.asarray(pos), np.asarray(m), np.asarray(dv),
+                 np.asarray(dok)))
+sa, pos, m, dv, dok, ovf = dq.run_waves(dq.init_state(), jnp.array(E),
+                                        jnp.array(V), jnp.array(PW))
+pos, m, dv, dok = map(np.asarray, (pos, m, dv, dok))
+for k in range(K):
+    assert (pos[k] == outs[k][0]).all() and (m[k] == outs[k][1]).all(), k
+    assert (dv[k] == outs[k][2]).all() and (dok[k] == outs[k][3]).all(), k
+assert int(sa.first) == int(sb.first) and int(sa.last) == int(sb.last)
+assert (np.asarray(sa.store_full) == np.asarray(sb.store_full)).all()
+assert not np.asarray(ovf).any()
+print("OK run_waves == K steps")
+"""
+
+
+def test_run_waves_equals_stepwise_8dev():
+    """K waves in one lax.scan dispatch == K host-driven single waves."""
+    out = run_multidev(RUN_WAVES, n_dev=8)
+    assert "OK run_waves == K steps" in out
+
+
+STACK_RUN_WAVES = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import DeviceStack
+mesh = make_mesh((4,), ("data",))
+ds = DeviceStack(mesh, "data", cap=64, payload_width=2, ops_per_shard=8,
+                 slot_depth=8)
+n = ds.n_shards * ds.L
+K = 5
+rng = np.random.default_rng(13)
+E = rng.random((K, n)) < 0.6
+V = rng.random((K, n)) < 0.9
+PW = rng.integers(0, 50, (K, n, 2)).astype(np.int32)
+sb = ds.init_state()
+outs = []
+for k in range(K):
+    sb, pos, m, pv, pok, ovf = ds.step(sb, jnp.array(E[k]), jnp.array(V[k]),
+                                       jnp.array(PW[k]))
+    outs.append((np.asarray(pos), np.asarray(m), np.asarray(pv),
+                 np.asarray(pok)))
+sa, pos, m, pv, pok, ovf = ds.run_waves(ds.init_state(), jnp.array(E),
+                                        jnp.array(V), jnp.array(PW))
+pos, m, pv, pok = map(np.asarray, (pos, m, pv, pok))
+for k in range(K):
+    assert (pos[k] == outs[k][0]).all() and (m[k] == outs[k][1]).all(), k
+    assert (pv[k] == outs[k][2]).all() and (pok[k] == outs[k][3]).all(), k
+assert int(sa["last"]) == int(sb["last"])
+assert int(sa["ticket"]) == int(sb["ticket"])
+print("OK stack run_waves == K steps")
+"""
+
+
+def test_stack_run_waves_equals_stepwise_4dev():
+    out = run_multidev(STACK_RUN_WAVES, n_dev=4)
+    assert "OK stack run_waves == K steps" in out
+
+
+CROSS_IMPL = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core.protocol import DEQ, ENQ, Skueue
+from repro.core.scan_queue import QueueState, queue_scan
+from repro.dqueue import DeviceQueue
+
+rng = np.random.default_rng(17)
+ops = (rng.random(40) < 0.6).tolist()
+
+# 1) paper protocol: all ops injected in order at ONE node, so the
+#    protocol's total order == the trace order.
+sk = Skueue(4, mode="queue", seed=0)
+nid = sk.ring.node_ids()[0]
+rids = [sk.inject(nid, ENQ if op else DEQ) for op in ops]
+sk.run_rounds(200)
+assert all(sk.requests[r].done for r in rids)
+sk_pos = [-1 if sk.requests[r].pos is None else sk.requests[r].pos
+          for r in rids]
+sk_bot = [sk.requests[r].kind == DEQ and sk.requests[r].result == -1
+          for r in rids]
+sk_first, sk_last = sk.anchor_state.first, sk.anchor_state.last
+
+# 2) flat associative scan
+pos_s, matched_s, fin = queue_scan(jnp.array(ops),
+                                   QueueState(jnp.int32(0), jnp.int32(-1)))
+pos_s = np.asarray(pos_s).tolist()
+bot_s = [(not op) and (p == -1) for op, p in zip(ops, pos_s)]
+
+# 3) device queue via the multi-wave driver on 8 shards (trace order =
+#    wave-major array order; trailing pad entries invalid)
+mesh = make_mesh((8,), ("data",))
+dq = DeviceQueue(mesh, "data", cap=16, payload_width=2, ops_per_shard=2)
+n = dq.n_shards * dq.L
+K = -(-len(ops) // n)
+E = np.zeros((K, n), bool)
+V = np.zeros((K, n), bool)
+PW = np.zeros((K, n, 2), np.int32)
+for j, op in enumerate(ops):
+    k, i = divmod(j, n)
+    E[k, i] = bool(op)
+    V[k, i] = True
+    PW[k, i, 0] = j  # element id = trace index
+st, pos_d, m_d, dv, dok, ovf = dq.run_waves(dq.init_state(), jnp.array(E),
+                                            jnp.array(V), jnp.array(PW))
+assert not np.asarray(ovf).any()
+pos_d = np.asarray(pos_d).reshape(-1)[:len(ops)].tolist()
+m_d = np.asarray(m_d).reshape(-1)[:len(ops)]
+bot_d = [(not op) and (not m) for op, m in zip(ops, m_d)]
+
+assert sk_pos == pos_s == pos_d, (sk_pos, pos_s, pos_d)
+assert sk_bot == bot_s == bot_d
+assert (sk_first, sk_last) == (int(fin.first), int(fin.last)) \
+    == (int(st.first), int(st.last))
+
+# matched dequeues return the element enqueued at their position, in FIFO
+# order, in all three implementations
+enq_at = {p: j for j, (op, p) in enumerate(zip(ops, pos_s)) if op}
+dv = np.asarray(dv).reshape(-1, 2)
+dok = np.asarray(dok).reshape(-1)
+for j, op in enumerate(ops):
+    if op or pos_s[j] == -1:
+        continue
+    exp = enq_at[pos_s[j]]
+    assert dok[j] and int(dv[j, 0]) == exp, (j, exp)
+    # protocol: result is the elem id of that enqueue request
+    assert sk.requests[rids[j]].result == sk.requests[rids[exp]].elem
+print("OK cross-impl", sk_first, sk_last)
+"""
+
+
+def test_cross_implementation_equivalence_8dev():
+    """Satellite: the same trace through Skueue.run_rounds, queue_scan, and
+    DeviceQueue.run_waves yields identical positions, identical ⊥ results,
+    and the same final (first, last)."""
+    out = run_multidev(CROSS_IMPL, n_dev=8)
+    assert "OK cross-impl" in out
+
+
+def test_work_queue_burst_expiry_matches_per_step():
+    """A pre-burst lease expiring at wave k of a run_waves burst is retried
+    at wave k, exactly where a per-step loop would have re-enqueued it."""
+    from repro.compat import make_mesh
+    from repro.dqueue import DeviceQueue, WorkQueue
+    mesh = make_mesh((1,), ("data",))
+    dq = DeviceQueue(mesh, "data", cap=32, payload_width=4, ops_per_shard=8)
+    wq = WorkQueue(dq, lease_steps=3)
+    item = wq.make_item([7])
+    grants = wq.step([item], [1])          # step 1: granted, never acked
+    assert len(grants) == 1
+    # steps 2-5 as one burst: the lease (issued step 1) expires at step 5
+    # (5 - 1 > 3), so the retry must surface in wave index 3 of the burst
+    bursts = wq.run_waves([[], [], [], []], [[1]] * 4)
+    assert [len(g) for g in bursts] == [0, 0, 0, 1]
+    assert int(bursts[3][0][1][0]) == int(item[0])
+    assert wq.stats["reissued"] == 1
+    # bursts beyond the lease horizon are rejected, not silently deferred
+    import pytest
+    with pytest.raises(AssertionError):
+        wq.run_waves([[]] * 6, [[0]] * 6)

@@ -66,14 +66,14 @@ def test_elastic_reshard_checkpoint():
 import tempfile, numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint, restore_sharded
-mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh8 = make_mesh((8,), ("data",))
 x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                    NamedSharding(mesh8, P("data", None)))
 d = tempfile.mkdtemp()
 save_checkpoint(d, 1, {"x": x})
 # restore onto a DIFFERENT mesh (2x4), sharded the other way
-mesh24 = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh24 = make_mesh((2, 4), ("data", "model"))
 sh = {"x": NamedSharding(mesh24, P("model", "data"))}
 restored, _ = restore_sharded(d, 1, {"x": x}, sh)
 np.testing.assert_array_equal(np.asarray(restored["x"]),

@@ -2,7 +2,7 @@
 reference AND with the paper protocol's interval machinery."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
@@ -156,8 +156,8 @@ from multidev import run_multidev  # noqa: E402
 SHARDED_EQUIV = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.scan_queue import QueueState, queue_scan, make_sharded_queue_scan
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 run = make_sharded_queue_scan(mesh, "data")
 rng = np.random.default_rng(0)
 state = QueueState(jnp.int32(0), jnp.int32(-1))
@@ -185,8 +185,8 @@ DEVICE_QUEUE = r"""
 import numpy as np, jax, jax.numpy as jnp
 from collections import deque
 from repro.dqueue import DeviceQueue
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 dq = DeviceQueue(mesh, "data", cap=64, payload_width=2, ops_per_shard=8)
 state = dq.init_state()
 rng = np.random.default_rng(1)
@@ -231,8 +231,8 @@ def test_device_queue_fifo_8dev():
 DEVICE_STACK = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.dqueue import DeviceStack
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("data",))
 ds = DeviceStack(mesh, "data", cap=64, payload_width=2, ops_per_shard=8,
                  slot_depth=6)
 state = ds.init_state()
@@ -276,8 +276,8 @@ def test_device_stack_lifo_4dev():
 WORK_QUEUE = r"""
 import numpy as np, jax
 from repro.dqueue import DeviceQueue, WorkQueue
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("data",))
 dq = DeviceQueue(mesh, "data", cap=128, payload_width=4, ops_per_shard=8)
 wq = WorkQueue(dq, lease_steps=3)
 items = [wq.make_item([i, i * i]) for i in range(20)]

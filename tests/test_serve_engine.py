@@ -50,6 +50,21 @@ def test_engine_fifo_admission(engine):
     assert max(f_starts) <= min(s_starts), (f_starts, s_starts)
 
 
+def test_engine_oversized_submit_chunks_across_waves(engine):
+    """Regression: a submit burst larger than one queue wave (n_shards * L
+    requests) used to index out of bounds; it must now be chunked across
+    multiple waves and served completely, preserving FIFO admission."""
+    eng, cfg = engine
+    n_wave = eng.queue.n_shards * eng.queue.L
+    reqs = [Request(rid=500 + i, prompt=[1, 2], max_new=2)
+            for i in range(2 * n_wave + 3)]
+    eng.submit(reqs)  # one oversized call
+    assert eng.run_until_drained(max_steps=600)
+    assert all(r.done for r in reqs)
+    starts = [r.start_step for r in reqs]
+    assert starts == sorted(starts), "FIFO admission across chunked waves"
+
+
 def test_engine_matches_sequential_decode():
     """Engine output == single-request greedy decode (cache isolation)."""
     cfg = get_config("llama3_8b").reduced(n_layers=2)
