@@ -8,7 +8,16 @@ are written to ``BENCH_PR1.json``; run directly with
 
     PYTHONPATH=src python -m benchmarks.micro --pr1 [path]
 
-(on fewer than 8 devices it re-execs itself on a forced 8-device CPU mesh).
+PR 2 adds the elastic-membership benchmark: steady-state waves/sec through
+the ``ElasticDeviceQueue`` wrapper vs. the raw PR 1 fused path (acceptance:
+within 10%), and the reshard cost of live grow/shrink migrations —
+elements moved, bytes, collectives per migration (one packed all_to_all),
+and wall time split into the jitted wave vs. the total including the
+host-staged mesh crossing.  Results go to ``BENCH_PR2.json``:
+
+    PYTHONPATH=src python -m benchmarks.micro --pr2 [path] [--quick]
+
+(each re-execs itself on a forced 8-device CPU mesh when needed).
 """
 from __future__ import annotations
 
@@ -200,6 +209,127 @@ def emit_bench_pr1(path: str = "BENCH_PR1.json", n_dev: int = 8,
     return data
 
 
+# ----------------------------------------- PR 2: elastic membership --------
+def _measure_elastic(n_dev: int, K: int, ops_per_shard: int = 64,
+                     iters: int = 10, quick: bool = False) -> dict:
+    from repro.compat import make_mesh
+    from repro.dqueue import DeviceQueue, ElasticDeviceQueue
+    if quick:
+        K, iters = min(K, 8), 3
+    cap = max(256, K * ops_per_shard // n_dev + 1)
+    kwargs = dict(cap=cap, payload_width=4, ops_per_shard=ops_per_shard)
+    n = n_dev * ops_per_shard
+    rng = np.random.default_rng(5)
+    E = jnp.array(rng.random((K, n)) < 0.5)
+    V = jnp.ones((K, n), bool)
+    PW = jnp.array(rng.integers(0, 100, (K, n, 4)), jnp.int32)
+
+    # ---- steady state: raw fused path vs. the elastic wrapper ----
+    mesh = make_mesh((n_dev,), ("data",))
+    dq = DeviceQueue(mesh, "data", **kwargs)
+    eq = ElasticDeviceQueue(n_dev, hlo_stats=True, **kwargs)
+
+    def run_fused():
+        state = dq.init_state()
+        out = dq.run_waves(state, E, V, PW)
+        jax.block_until_ready(out[0].store_full)
+
+    def run_elastic():
+        eq.state = eq.inner.init_state()  # fresh state (donated each burst)
+        eq.run_waves(E, V, PW)
+        jax.block_until_ready(eq.state.store_full)
+
+    def best_time(fn):
+        fn()  # warmup / compile
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_fused = best_time(run_fused)
+    t_elastic = best_time(run_elastic)
+
+    # ---- reshard cost: grow/shrink cycles with a loaded queue ----
+    P_lo = max(1, n_dev // 2)
+    eq2 = ElasticDeviceQueue(P_lo, hlo_stats=True, **kwargs)
+    fill = min(P_lo * cap, 256 if quick else 2048)
+    done = 0
+    while done < fill:
+        w = eq2.n_shards * eq2.L
+        k = min(w, fill - done)
+        e = np.zeros(w, bool)
+        e[:k] = True
+        pw = np.zeros((w, 4), np.int32)
+        pw[:k, 0] = np.arange(done, done + k)
+        eq2.step(e, e, pw)
+        done += k
+    eq2.resize(n_dev)  # warm both migration programs (compile outside timing)
+    eq2.resize(P_lo)
+    eq2.migrations.clear()
+    for _ in range(2 if quick else 5):
+        eq2.resize(n_dev)
+        eq2.resize(P_lo)
+
+    def summarize(kind):
+        ms = [m for m in eq2.migrations if m["kind"] == kind]
+        return {
+            "migrations": len(ms),
+            "moved_per_migration": ms[0]["moved"],
+            "bytes_per_migration": ms[0]["bytes_moved"],
+            "collectives_per_migration": ms[0]["collectives"],
+            "wave_ms_best": min(m["wave_s"] for m in ms) * 1e3,
+            "wave_ms_mean": sum(m["wave_s"] for m in ms) / len(ms) * 1e3,
+            "total_ms_mean": sum(m["total_s"] for m in ms) / len(ms) * 1e3,
+        }
+
+    return {
+        "n_dev": n_dev, "K": K, "ops_per_wave": n, "live_elements": fill,
+        "steady_state": {
+            "fused_device_queue_waves_per_sec": K / t_fused,
+            "elastic_wrapper_waves_per_sec": K / t_elastic,
+            "overhead_pct": (t_elastic - t_fused) / t_fused * 100.0,
+        },
+        "reshard": {
+            f"grow_{P_lo}_to_{n_dev}": summarize("grow"),
+            f"shrink_{n_dev}_to_{P_lo}": summarize("shrink"),
+        },
+        "hash_balance_last": eq2.migrations[-1].get("hash_balance"),
+    }
+
+
+def emit_bench_pr2(path: str = "BENCH_PR2.json", n_dev: int = 8,
+                   K: int = 32, quick: bool = False) -> dict:
+    """Measure elastic steady-state + reshard cost and write JSON
+    (re-execs on a forced ``n_dev``-device CPU mesh when needed)."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    in_child = os.environ.get("_REPRO_BENCH_PR2_CHILD") == "1"
+    if not in_child and (len(jax.devices()) != n_dev
+                         or jax.default_backend() != "cpu"):
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform_device_count")]
+        flags.append(f"--xla_force_host_platform_device_count={n_dev}")
+        env["XLA_FLAGS"] = " ".join(flags)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["_REPRO_BENCH_PR2_CHILD"] = "1"
+        env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        cmd = [sys.executable, "-m", "benchmarks.micro", "--pr2", path,
+               "--n-dev", str(n_dev), "--waves", str(K)]
+        if quick:
+            cmd.append("--quick")
+        subprocess.run(cmd, cwd=_REPO_ROOT, env=env, check=True)
+        with open(path) as f:
+            return json.load(f)
+    data = _measure_elastic(n_dev=n_dev, K=K, quick=quick)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
 def bench_wave_pipeline():
     try:
         data = emit_bench_pr1()
@@ -243,11 +373,20 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--pr1", nargs="?", const="BENCH_PR1.json", default=None,
                     help="measure the wave pipeline and write BENCH_PR1.json")
+    ap.add_argument("--pr2", nargs="?", const="BENCH_PR2.json", default=None,
+                    help="measure elastic reshard cost and write "
+                         "BENCH_PR2.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: fewer waves/iterations")
     ap.add_argument("--n-dev", type=int, default=8)
     ap.add_argument("--waves", type=int, default=32)
     cli = ap.parse_args()
     if cli.pr1:
         out = emit_bench_pr1(cli.pr1, n_dev=cli.n_dev, K=cli.waves)
+        print(json.dumps(out, indent=2))
+    elif cli.pr2:
+        out = emit_bench_pr2(cli.pr2, n_dev=cli.n_dev, K=cli.waves,
+                             quick=cli.quick)
         print(json.dumps(out, indent=2))
     else:
         for row in run_all():

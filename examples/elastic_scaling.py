@@ -1,14 +1,27 @@
-"""Elastic scaling, both layers of the system:
+"""Elastic scaling, all three layers of the system:
 
 1. the PAPER's JOIN/LEAVE: processes enter/leave the running queue overlay
    mid-traffic (update phases, anchor handoff, DHT data movement), with
    sequential consistency preserved throughout;
 2. the FRAMEWORK's elastic path: a checkpoint written under one device
-   layout restored under another (consistent-hash analogue for model state).
+   layout restored under another (consistent-hash analogue for model state);
+3. the DEVICE path's JOIN/LEAVE (PR 2): an ``ElasticDeviceQueue`` grows and
+   shrinks its shard mesh mid-traffic — one packed all_to_all migration
+   wave per membership change, FIFO order and every in-flight element
+   preserved.
 
 Run:  PYTHONPATH=src python examples/elastic_scaling.py
 """
+import os
 import tempfile
+
+# section 3 needs a multi-device mesh; force CPU devices before jax inits
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import numpy as np
 
@@ -58,6 +71,48 @@ def main():
         restored, _ = restore_sharded(d, 1, {"w": x}, sh)
         ok = bool(jnp.all(restored["w"] == x))
     print(f"[elastic]  checkpoint resharded onto a different mesh: ok={ok}")
+
+    # --- 3. device-path live resharding (PR 2) ------------------------------
+    if len(jax.devices()) < 4:
+        print("[device]   skipped (needs >= 4 devices)")
+        return
+    from repro.dqueue import ElasticDeviceQueue
+    eq = ElasticDeviceQueue(2, cap=64, payload_width=2, ops_per_shard=8,
+                            hlo_stats=True)
+    sent, got = 0, []
+
+    def traffic(n_enq, n_deq):
+        """One wave at the queue's CURRENT width (it changes under us)."""
+        nonlocal sent
+        n = eq.n_shards * eq.L
+        e = np.zeros(n, bool)
+        v = np.zeros(n, bool)
+        pw = np.zeros((n, 2), np.int32)
+        n_enq, n_deq = min(n_enq, n), min(n_deq, n - n_enq)
+        e[:n_enq] = v[:n_enq] = True
+        pw[:n_enq, 0] = np.arange(sent, sent + n_enq)
+        v[n_enq:n_enq + n_deq] = True
+        sent += n_enq
+        _, _, dv, dok, _ = eq.step(e, v, pw)
+        dv, dok = np.asarray(dv), np.asarray(dok)
+        got.extend(int(dv[i, 0]) for i in range(n) if dok[i])
+
+    traffic(16, 0)                      # load up on 2 shards
+    traffic(16, 4)
+    s = eq.grow(2)                      # JOIN: 2 -> 4 shards, live
+    print(f"[device]   grow  {s['P_from']}->{s['P_to']}: moved {s['moved']} "
+          f"elems in {s['collectives']} collective(s), "
+          f"{s['wave_s'] * 1e3:.1f} ms wave")
+    traffic(16, 8)                      # keep the traffic flowing
+    s = eq.shrink([1])                  # LEAVE of shard 1: 4 -> 3 shards
+    print(f"[device]   LEAVE {s['P_from']}->{s['P_to']}: moved {s['moved']} "
+          f"elems in {s['collectives']} collective(s), "
+          f"{s['wave_s'] * 1e3:.1f} ms wave")
+    while len(got) < sent:              # drain on the resized mesh
+        traffic(0, eq.n_shards * eq.L)
+    assert got == list(range(sent)), "FIFO broken by resharding!"
+    print(f"[device]   {sent} elements dequeued in exact FIFO order through "
+          f"grow+LEAVE; final mesh {eq.n_shards} shards")
 
 
 if __name__ == "__main__":

@@ -24,11 +24,6 @@ import jax
 import numpy as np
 
 
-def _flat(tree):
-    leaves, treedef = jax.tree.flatten_with_path(tree), None
-    return leaves
-
-
 def _key_str(path) -> str:
     out = []
     for p in path:

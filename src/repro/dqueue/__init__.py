@@ -1,4 +1,6 @@
 from .device_queue import DeviceQueue, DeviceQueueState, DeviceStack
+from .elastic import ElasticDeviceQueue, ElasticDeviceStack
 from .work_queue import WorkQueue
 
-__all__ = ["DeviceQueue", "DeviceQueueState", "DeviceStack", "WorkQueue"]
+__all__ = ["DeviceQueue", "DeviceQueueState", "DeviceStack",
+           "ElasticDeviceQueue", "ElasticDeviceStack", "WorkQueue"]

@@ -1,0 +1,619 @@
+"""Elastic membership for the device path: live JOIN/LEAVE resharding.
+
+The paper's distinguishing feature over prior distributed queues is dynamic
+membership — JOIN and LEAVE processed under sequential consistency (Sec. IV).
+In this repo that capability lived only in the host-side ``Skueue`` protocol
+simulator; the fused ``DeviceQueue``/``DeviceStack`` hot path (PR 1) assumed
+a fixed shard set for its entire lifetime.  This module makes the mesh shape
+a *runtime variable*: :class:`ElasticDeviceQueue` and
+:class:`ElasticDeviceStack` wrap the fixed-mesh implementations and support
+``grow(k)`` / ``shrink(ids)`` / ``resize(n)`` between wave bursts,
+re-materializing the sharded element store from a P-shard layout onto a
+P±k-shard mesh while preserving FIFO (resp. LIFO) order and every in-flight
+element.
+
+The migration wave
+------------------
+Between bursts the store is quiescent, and — because SKUEUE positions are
+dense integers and the device layout is round-robin (position ``p`` on shard
+``p % P`` at slot ``(p // P) % cap``) — the set of live positions is exactly
+the interval ``[first, last]``.  Each shard can therefore *recover* the
+position held by any of its occupied slots without scanning: slot ``t`` on
+shard ``s`` holds the unique ``p = s + P*j`` with ``j ≡ t (mod cap)`` and
+``p ∈ [first, last]`` (unique because the live window spans at most
+``P * cap`` positions).  One jitted shard_map wave then
+
+1. recomputes each live element's owner under the *new* shard count
+   (``p % P'`` — the device path's perfectly-fair specialization of the
+   paper's consistent hashing; the paper-faithful hashed owner distribution
+   for the same live set is reported via ``kernels/hash_route`` in the
+   migration stats),
+2. scatters ``new_slot ‖ payload`` columns into a packed per-destination
+   send buffer (the PR 1 ``_build_send_packed`` idiom, rank-within-
+   destination rows), moves everything with ONE ``lax.all_to_all``, and
+3. rewrites the receiving shards' stores; ``first``/``last`` (queue) and
+   ``last``/``ticket`` (stack) interval bookkeeping pass through unchanged —
+   membership changes never disturb the position order, which is the whole
+   point of the paper's Sec. IV design.
+
+The migration mesh is the *larger* of the two shard sets: a grow pads the
+old store with empty shards and routes on the new mesh; a shrink routes on
+the old mesh (every new owner is a surviving shard) and then drops the
+now-empty rows.  Crossing between meshes of different device counts is a
+host-staged ``device_put`` in this single-process container (a real
+deployment would stream shard state device-to-device); the part that scales
+with queue *contents* — owner routing, packing, the all_to_all, the store
+rewrite — runs jitted on device and is what ``benchmarks/micro.py --pr2``
+measures.
+
+Failure semantics: ``shrink`` is the paper's *graceful* LEAVE — the leaving
+shard participates in its own migration wave (like the leaving node handing
+its interval to its predecessor before departing).  A hard crash is outside
+the LEAVE protocol's model there too; its recovery path here is the
+checkpoint cold start (:meth:`save` / :meth:`restore` via
+``checkpoint.restore_sharded``), and ``fault.run_with_restarts`` composes
+both: LEAVE the dead shard and keep running, restore from checkpoint only
+when elasticity cannot help.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..compat import shard_map
+from .device_queue import DeviceQueue, DeviceQueueState, DeviceStack
+
+HASH_BALANCE_MAX_SIZE = 1 << 16  # skip the fidelity report for huge queues
+
+
+def _dest_rank(owner: jax.Array, live: jax.Array, n_mesh: int) -> jax.Array:
+    """Exclusive rank of each live entry among earlier entries with the same
+    destination — its row in the packed per-destination send buffer."""
+    ids = jnp.arange(n_mesh, dtype=jnp.int32)
+    oh = ((owner[:, None] == ids[None, :]) & live[:, None]).astype(jnp.int32)
+    excl = jnp.cumsum(oh, axis=0) - oh
+    return excl[jnp.arange(owner.shape[0]), jnp.clip(owner, 0, n_mesh - 1)]
+
+
+def _fanout_bound(P_old: int, P_new: int, cap: int) -> int:
+    """Max elements one source shard can owe one destination shard.
+
+    Live positions occupy a window of at most ``min(P_old, P_new) * cap``
+    consecutive integers (old occupancy and new capacity both bound it);
+    positions on shard ``s`` (mod P_old) owned by ``d`` (mod P_new) recur
+    with stride ``lcm(P_old, P_new)``."""
+    window = min(P_old, P_new) * cap
+    per_pair = -(-window // math.lcm(P_old, P_new))
+    return min(cap, per_pair + 1)  # +1 alignment slack
+
+
+def _mesh_key(devices) -> tuple:
+    return tuple(d.id for d in devices)
+
+
+class _ElasticBase:
+    """Shared machinery: device bookkeeping, mesh/inner/migration caches,
+    the resize driver, migration stats, and checkpoint save/restore."""
+
+    _kind: str  # "queue" | "stack"
+
+    def __init__(self, n_shards: int, *, axis_name: str = "data",
+                 cap: int = 1024, payload_width: int = 4,
+                 ops_per_shard: int = 64, devices=None,
+                 hlo_stats: bool = False):
+        self._pool = list(devices) if devices is not None else list(jax.devices())
+        if not 1 <= n_shards <= len(self._pool):
+            raise ValueError(f"n_shards={n_shards} outside the device pool "
+                             f"of {len(self._pool)}")
+        self.axis = axis_name
+        self.cap = cap
+        self.W = payload_width
+        self.L = ops_per_shard
+        self._hlo_stats = hlo_stats
+        self._active = list(self._pool[:n_shards])
+        self._mesh_cache: Dict[tuple, jax.sharding.Mesh] = {}
+        self._inner_cache: Dict[tuple, object] = {}
+        self._mig_cache: Dict[tuple, tuple] = {}
+        self.inner = self._get_inner(self._mesh_for(self._active))
+        self.state = self.inner.init_state()
+        self.migrations: List[dict] = []
+
+    # ------------------------------------------------------------ caches ---
+    def _mesh_for(self, devices) -> jax.sharding.Mesh:
+        key = _mesh_key(devices)
+        if key not in self._mesh_cache:
+            from ..launch.mesh import make_elastic_mesh
+            self._mesh_cache[key] = make_elastic_mesh(
+                len(devices), self.axis, devices)
+        return self._mesh_cache[key]
+
+    def _get_inner(self, mesh):
+        """Fixed-mesh DeviceQueue/DeviceStack per mesh, cached so that
+        bouncing between shard counts (grow 4→8, shrink 8→4, grow again)
+        never recompiles the wave programs."""
+        key = _mesh_key(mesh.devices.flat)
+        if key not in self._inner_cache:
+            self._inner_cache[key] = self._make_inner(mesh)
+        return self._inner_cache[key]
+
+    def _migration_for(self, mesh, P_old: int, P_new: int):
+        key = (_mesh_key(mesh.devices.flat), P_old, P_new)
+        if key not in self._mig_cache:
+            fn = self._build_migration(mesh, P_old, P_new)
+            self._mig_cache[key] = [fn, None]  # [jitted, collective count]
+        return self._mig_cache[key]
+
+    # -------------------------------------------------------- membership ---
+    @property
+    def n_shards(self) -> int:
+        return len(self._active)
+
+    @property
+    def mesh(self):
+        return self.inner.mesh
+
+    @property
+    def devices(self) -> list:
+        return list(self._active)
+
+    def grow(self, k: int = 1) -> dict:
+        """JOIN: add ``k`` shards from the device pool (P → P + k)."""
+        if k < 1:
+            raise ValueError("grow(k) needs k >= 1")
+        active_keys = {_mesh_key([d]) for d in self._active}
+        spare = [d for d in self._pool if _mesh_key([d]) not in active_keys]
+        if len(spare) < k:
+            raise ValueError(f"cannot grow by {k}: only {len(spare)} spare "
+                             f"devices in the pool")
+        return self._rematerialize(self._active + spare[:k], kind="grow")
+
+    def shrink(self, ids: Sequence[int]) -> dict:
+        """Graceful LEAVE of the shards with indices ``ids`` (P → P - |ids|).
+
+        The leaving shards participate in the migration wave (their elements
+        are routed out before they drop from the mesh), mirroring the
+        paper's LEAVE where the departing node hands its interval over
+        before disconnecting."""
+        ids = sorted(set(int(i) for i in ids))
+        if not ids:
+            raise ValueError("shrink(ids) needs at least one shard id")
+        if ids[0] < 0 or ids[-1] >= self.n_shards:
+            raise ValueError(f"shard ids {ids} out of range "
+                             f"[0, {self.n_shards})")
+        if len(ids) >= self.n_shards:
+            raise ValueError("cannot shrink to zero shards")
+        survivors = [d for i, d in enumerate(self._active) if i not in ids]
+        return self._rematerialize(survivors, kind="shrink")
+
+    def resize(self, n_new: int) -> dict:
+        """Reshape to ``n_new`` shards (grow or shrink as needed)."""
+        if n_new == self.n_shards:
+            return {"kind": "noop", "P_from": self.n_shards,
+                    "P_to": n_new, "moved": 0}
+        if n_new > self.n_shards:
+            return self.grow(n_new - self.n_shards)
+        return self.shrink(range(n_new, self.n_shards))
+
+    # ----------------------------------------------------- rematerialize ---
+    def _rematerialize(self, new_active: list, kind: str) -> dict:
+        P_old, P_new = self.n_shards, len(new_active)
+        need = self._live_span()
+        if need > P_new * self.cap:
+            raise ValueError(
+                f"cannot reshard to {P_new} shards: {need} live elements "
+                f"exceed the new capacity {P_new} * {self.cap}")
+        t_total = time.perf_counter()
+        a, b, X, Y = self._unpack(self.state)
+
+        if P_new > P_old:
+            # grow: pad empty shards, route on the NEW mesh
+            mig_mesh = self._mesh_for(new_active)
+            shard = NamedSharding(mig_mesh, P(self.axis))
+            rep = NamedSharding(mig_mesh, P())
+            fx, fy = self._pad_fill
+            Xh, Yh = np.asarray(X), np.asarray(Y)
+            pad = P_new - P_old
+            Xh = np.concatenate(
+                [Xh, np.full((pad,) + Xh.shape[1:], fx, Xh.dtype)])
+            Yh = np.concatenate(
+                [Yh, np.full((pad,) + Yh.shape[1:], fy, Yh.dtype)])
+            a = jax.device_put(np.asarray(a), rep)
+            b = jax.device_put(np.asarray(b), rep)
+            X, Y = jax.device_put(Xh, shard), jax.device_put(Yh, shard)
+        else:
+            # shrink: route on the OLD mesh (owners are surviving shards)
+            mig_mesh = self.mesh
+
+        entry = self._migration_for(mig_mesh, P_old, P_new)
+        if self._hlo_stats and entry[1] is None:
+            entry[1] = self._count_all_to_all(entry[0], (a, b, X, Y))
+        t_wave = time.perf_counter()
+        a, b, X, Y, moved, lost = entry[0](a, b, X, Y)
+        jax.block_until_ready(Y)
+        t_wave = time.perf_counter() - t_wave
+        if bool(np.asarray(lost)):
+            raise RuntimeError("migration fanout overflow — internal bound "
+                               "violated, elements would have been dropped")
+
+        if P_new < P_old:
+            # drop the emptied rows, land on the smaller mesh
+            new_mesh = self._mesh_for(new_active)
+            shard = NamedSharding(new_mesh, P(self.axis))
+            rep = NamedSharding(new_mesh, P())
+            a = jax.device_put(np.asarray(a), rep)
+            b = jax.device_put(np.asarray(b), rep)
+            X = jax.device_put(np.asarray(X)[:P_new], shard)
+            Y = jax.device_put(np.asarray(Y)[:P_new], shard)
+
+        self.state = self._pack(a, b, X, Y)
+        self._active = list(new_active)
+        self.inner = self._get_inner(self._mesh_for(new_active))
+        stats = {
+            "kind": kind, "P_from": P_old, "P_to": P_new,
+            "moved": int(np.asarray(moved)),
+            "bytes_moved": int(np.asarray(moved)) * self._entry_bytes,
+            "wave_s": t_wave,
+            "total_s": time.perf_counter() - t_total,
+            "collectives": entry[1],
+        }
+        hb = self._hash_balance(P_new)
+        if hb is not None:
+            stats["hash_balance"] = hb
+        self.migrations.append(stats)
+        return stats
+
+    @staticmethod
+    def _count_all_to_all(jitted, args) -> int:
+        import re
+        txt = jitted.lower(*args).compile().as_text()
+        return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+
+    def _hash_balance(self, P_new: int) -> Optional[dict]:
+        """Paper-fidelity report: what the consistent-hashing layer
+        (``kernels/hash_route``) would assign each shard for the SAME live
+        position set that round-robin just re-placed perfectly evenly."""
+        lo, hi = self._live_window()
+        size = hi - lo + 1
+        if size <= 0 or size > HASH_BALANCE_MAX_SIZE:
+            return None
+        from ..kernels.hash_route import hash_route_ref
+        pos = jnp.arange(lo, hi + 1, dtype=jnp.int32)
+        _, counts = hash_route_ref(pos, jnp.ones((size,), bool), P_new)
+        counts = np.asarray(counts)
+        return {"n": size, "max": int(counts.max()),
+                "min": int(counts.min()),
+                "roundrobin_max": -(-size // P_new)}
+
+    # ------------------------------------------------------- checkpoints ---
+    def _layout(self) -> dict:
+        return {"kind": self._kind, "n_shards": self.n_shards,
+                "cap": self.cap, "W": self.W, "L": self.L}
+
+    @classmethod
+    def _layout_kwargs(cls, lay: dict) -> dict:
+        return {"cap": lay["cap"], "payload_width": lay["W"],
+                "ops_per_shard": lay["L"]}
+
+    def save(self, ckpt_dir, step: int):
+        """Checkpoint the queue state (layout recorded in the manifest)."""
+        from ..checkpoint import save_checkpoint
+        return save_checkpoint(ckpt_dir, step, self._state_dict(),
+                               meta={"layout": self._layout()})
+
+    @classmethod
+    def restore(cls, ckpt_dir, step: Optional[int] = None, *,
+                n_shards: Optional[int] = None, devices=None, **kw):
+        """Cold-start analogue of the live migration: rebuild from a
+        checkpoint written under a possibly different shard count, via
+        ``checkpoint.restore_sharded`` + one migration wave.
+
+        Requires ``max(saved, target)`` shards' worth of devices (the
+        migration mesh is the larger of the two layouts)."""
+        from ..checkpoint import latest_step, restore_sharded
+        if step is None:
+            step = latest_step(ckpt_dir)
+        manifest = json.loads(
+            (Path(ckpt_dir) / f"step_{step}" / "manifest.json").read_text())
+        lay = manifest["meta"]["layout"]
+        if lay["kind"] != cls._kind:
+            raise ValueError(f"checkpoint holds a {lay['kind']}, "
+                             f"not a {cls._kind}")
+        inst = cls(lay["n_shards"], devices=devices,
+                   **cls._layout_kwargs(lay), **kw)
+        shard = NamedSharding(inst.mesh, P(inst.axis))
+        rep = NamedSharding(inst.mesh, P())
+        shardings = {k: (shard if np.ndim(v) else rep)
+                     for k, v in inst._state_dict().items()}
+        placed, _ = restore_sharded(ckpt_dir, step, inst._state_dict(),
+                                    shardings)
+        inst.state = inst._from_state_dict(placed)
+        if n_shards is not None and n_shards != lay["n_shards"]:
+            inst.resize(n_shards)
+        return inst
+
+    # ------------------------------------------------- subclass contract ---
+    _pad_fill: tuple  # fill values for (X, Y) padding rows
+
+    def _make_inner(self, mesh):
+        raise NotImplementedError
+
+    def _build_migration(self, mesh, P_old, P_new):
+        raise NotImplementedError
+
+    def _unpack(self, state):
+        raise NotImplementedError
+
+    def _pack(self, a, b, X, Y):
+        raise NotImplementedError
+
+    def _live_span(self) -> int:
+        raise NotImplementedError
+
+    def _live_window(self) -> tuple:
+        raise NotImplementedError
+
+    def _state_dict(self) -> dict:
+        raise NotImplementedError
+
+    def _from_state_dict(self, d: dict):
+        raise NotImplementedError
+
+    @property
+    def _entry_bytes(self) -> int:
+        raise NotImplementedError
+
+
+class ElasticDeviceQueue(_ElasticBase):
+    """Distributed FIFO whose shard count is a runtime variable.
+
+    Owns its state (the inner ``DeviceQueue``'s donated-state discipline is
+    internal): ``step``/``run_waves`` mirror :class:`DeviceQueue` minus the
+    state argument, and ``grow``/``shrink``/``resize`` re-materialize the
+    store between bursts.  See the module docstring for the mechanism."""
+
+    _kind = "queue"
+    _pad_fill = (0, False)
+
+    def __init__(self, n_shards: int, *, axis_name: str = "data",
+                 cap: int = 1024, payload_width: int = 4,
+                 ops_per_shard: int = 64, fused: bool = True,
+                 devices=None, hlo_stats: bool = False):
+        self.fused = fused
+        super().__init__(n_shards, axis_name=axis_name, cap=cap,
+                         payload_width=payload_width,
+                         ops_per_shard=ops_per_shard, devices=devices,
+                         hlo_stats=hlo_stats)
+
+    def _make_inner(self, mesh):
+        return DeviceQueue(mesh, self.axis, cap=self.cap,
+                           payload_width=self.W, ops_per_shard=self.L,
+                           fused=self.fused)
+
+    # ------------------------------------------------------------ waves ----
+    def step(self, is_enq, valid, payload):
+        """One wave on the current mesh; state is threaded internally.
+        Returns (positions, matched, deq_vals, deq_ok, overflow)."""
+        self.state, pos, m, dv, dok, ovf = self.inner.step(
+            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
+            jnp.asarray(payload))
+        return pos, m, dv, dok, ovf
+
+    def run_waves(self, is_enq, valid, payload):
+        """K pre-staged waves in one dispatch (shapes [K, n_shards * L])."""
+        self.state, pos, m, dv, dok, ovf = self.inner.run_waves(
+            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
+            jnp.asarray(payload))
+        return pos, m, dv, dok, ovf
+
+    @property
+    def size(self) -> int:
+        return int(self.state.last) - int(self.state.first) + 1
+
+    # -------------------------------------------------------- migration ----
+    def _unpack(self, state):
+        return state.first, state.last, state.store_vals, state.store_full
+
+    def _pack(self, a, b, X, Y):
+        return DeviceQueueState(a, b, X, Y)
+
+    def _live_window(self):
+        return int(self.state.first), int(self.state.last)
+
+    def _live_span(self) -> int:
+        lo, hi = self._live_window()
+        return max(0, hi - lo + 1)
+
+    @property
+    def _entry_bytes(self) -> int:
+        return 4 * (1 + self.W)  # slot ‖ payload columns
+
+    def _state_dict(self) -> dict:
+        return {"first": self.state.first, "last": self.state.last,
+                "store_vals": self.state.store_vals,
+                "store_full": self.state.store_full}
+
+    def _from_state_dict(self, d: dict):
+        return DeviceQueueState(d["first"], d["last"], d["store_vals"],
+                                d["store_full"])
+
+    def _build_migration(self, mesh, P_old: int, P_new: int):
+        axis, cap, W = self.axis, self.cap, self.W
+        n_mesh = mesh.shape[axis]
+        M = _fanout_bound(P_old, P_new, cap)
+
+        def body(first, last, sv, sf):
+            s = lax.axis_index(axis).astype(jnp.int32)
+            t = jnp.arange(cap, dtype=jnp.int32)
+            # recover the position each occupied slot holds (unique in the
+            # live window [first, last]; see module docstring)
+            j_lo = -((s - first) // P_old)
+            j = j_lo + jnp.mod(t - j_lo, cap)
+            p = s + P_old * j
+            live = sf[0, :cap] & (p >= first) & (p <= last)
+            owner = jnp.mod(p, P_new).astype(jnp.int32)
+            slot_new = jnp.mod(p // P_new, cap).astype(jnp.int32)
+            rank = _dest_rank(owner, live, n_mesh)
+            lost = lax.pmax(
+                (live & (rank >= M)).any().astype(jnp.int32), axis) > 0
+            # ---- packed request: new_slot ‖ payload, one all_to_all ----
+            cols = jnp.concatenate([slot_new[:, None], sv[0, :cap]], axis=1)
+            fill = jnp.zeros((1 + W,), jnp.int32).at[0].set(cap)
+            buf = jnp.zeros((n_mesh, M + 1, 1 + W), jnp.int32)
+            buf = buf.at[:, :, 0].set(cap)
+            d_i = jnp.where(live, owner, 0)
+            r_i = jnp.where(live, jnp.minimum(rank, M), M)
+            buf = buf.at[d_i, r_i].set(
+                jnp.where(live[:, None], cols, fill[None, :]))
+            recv = lax.all_to_all(buf[:, :M], axis, 0, 0, tiled=True)
+            # ---- rewrite the local store under the NEW layout ----
+            rs = recv[..., 0].reshape(-1)  # cap = junk row sentinel
+            rv = recv[..., 1:].reshape(-1, W)
+            nsv = jnp.zeros((cap + 1, W), jnp.int32).at[rs].set(rv)
+            nsv = nsv.at[cap].set(0)
+            nsf = jnp.zeros((cap + 1,), bool).at[rs].set(True)
+            nsf = nsf.at[cap].set(False)
+            moved = lax.psum(jnp.sum(live.astype(jnp.int32)), axis)
+            return first, last, nsv[None], nsf[None], moved, lost
+
+        specs = (P(), P(), P(axis), P(axis))
+        wrapped = shard_map(body, mesh=mesh, in_specs=specs,
+                            out_specs=specs + (P(), P()))
+        return jax.jit(wrapped, donate_argnums=(2, 3))
+
+
+class ElasticDeviceStack(_ElasticBase):
+    """Distributed LIFO with runtime-variable shard count.
+
+    Migration flattens the (slot, depth) entry set; an entry's position is
+    recovered from its slot exactly as for the queue (live window
+    ``[1, last]``), and its depth index travels with it — distinct positions
+    land on distinct new slots, so (new_slot, depth) addressing is
+    collision-free on the receiving side."""
+
+    _kind = "stack"
+    _pad_fill = (0, -1)  # vals pad 0, tickets pad -1 (= empty)
+
+    def __init__(self, n_shards: int, *, axis_name: str = "data",
+                 cap: int = 1024, payload_width: int = 4,
+                 ops_per_shard: int = 64, slot_depth: int = 4,
+                 devices=None, hlo_stats: bool = False):
+        self.D = slot_depth
+        super().__init__(n_shards, axis_name=axis_name, cap=cap,
+                         payload_width=payload_width,
+                         ops_per_shard=ops_per_shard, devices=devices,
+                         hlo_stats=hlo_stats)
+
+    def _make_inner(self, mesh):
+        return DeviceStack(mesh, self.axis, cap=self.cap,
+                           payload_width=self.W, ops_per_shard=self.L,
+                           slot_depth=self.D)
+
+    # ------------------------------------------------------------ waves ----
+    def step(self, is_push, valid, payload):
+        self.state, pos, m, pv, pok, ovf = self.inner.step(
+            self.state, jnp.asarray(is_push), jnp.asarray(valid),
+            jnp.asarray(payload))
+        return pos, m, pv, pok, ovf
+
+    def run_waves(self, is_push, valid, payload):
+        self.state, pos, m, pv, pok, ovf = self.inner.run_waves(
+            self.state, jnp.asarray(is_push), jnp.asarray(valid),
+            jnp.asarray(payload))
+        return pos, m, pv, pok, ovf
+
+    @property
+    def size(self) -> int:
+        return int(self.state["last"])
+
+    # -------------------------------------------------------- migration ----
+    def _unpack(self, state):
+        return state["last"], state["ticket"], state["vals"], state["ticks"]
+
+    def _pack(self, a, b, X, Y):
+        return {"last": a, "ticket": b, "vals": X, "ticks": Y}
+
+    def _live_window(self):
+        return 1, int(self.state["last"])
+
+    def _live_span(self) -> int:
+        return int(self.state["last"])
+
+    @property
+    def _entry_bytes(self) -> int:
+        return 4 * (3 + self.W)  # slot ‖ depth ‖ ticket ‖ payload
+
+    def _layout(self) -> dict:
+        return {**super()._layout(), "D": self.D}
+
+    @classmethod
+    def _layout_kwargs(cls, lay: dict) -> dict:
+        return {**super()._layout_kwargs(lay), "slot_depth": lay["D"]}
+
+    def _state_dict(self) -> dict:
+        return dict(self.state)
+
+    def _from_state_dict(self, d: dict):
+        return {"last": d["last"], "ticket": d["ticket"],
+                "vals": d["vals"], "ticks": d["ticks"]}
+
+    def _build_migration(self, mesh, P_old: int, P_new: int):
+        axis, cap, W, D = self.axis, self.cap, self.W, self.D
+        n_mesh = mesh.shape[axis]
+        M = min(cap * D, _fanout_bound(P_old, P_new, cap) * D)
+
+        def body(last, ticket, sv, stk):
+            s = lax.axis_index(axis).astype(jnp.int32)
+            t = jnp.arange(cap, dtype=jnp.int32)
+            j_lo = -((s - 1) // P_old)  # stack positions start at 1
+            j = j_lo + jnp.mod(t - j_lo, cap)
+            p = s + P_old * j
+            in_range = (p >= 1) & (p <= last)
+            owner = jnp.mod(p, P_new).astype(jnp.int32)
+            slot_new = jnp.mod(p // P_new, cap).astype(jnp.int32)
+            ticks = stk[0, :cap]                             # [cap, D]
+            live = ((ticks >= 0) & in_range[:, None]).reshape(-1)
+            dep = jnp.tile(jnp.arange(D, dtype=jnp.int32), cap)
+            own_f = jnp.repeat(owner, D)
+            slot_f = jnp.repeat(slot_new, D)
+            tick_f = ticks.reshape(-1)
+            vals_f = sv[0, :cap].reshape(-1, W)
+            rank = _dest_rank(own_f, live, n_mesh)
+            lost = lax.pmax(
+                (live & (rank >= M)).any().astype(jnp.int32), axis) > 0
+            # ---- packed request: slot ‖ depth ‖ ticket ‖ payload ----
+            cols = jnp.concatenate(
+                [slot_f[:, None], dep[:, None], tick_f[:, None], vals_f],
+                axis=1)
+            fill = jnp.zeros((3 + W,), jnp.int32).at[0].set(cap).at[2].set(-1)
+            buf = jnp.zeros((n_mesh, M + 1, 3 + W), jnp.int32)
+            buf = buf.at[:, :, 0].set(cap).at[:, :, 2].set(-1)
+            d_i = jnp.where(live, own_f, 0)
+            r_i = jnp.where(live, jnp.minimum(rank, M), M)
+            buf = buf.at[d_i, r_i].set(
+                jnp.where(live[:, None], cols, fill[None, :]))
+            recv = lax.all_to_all(buf[:, :M], axis, 0, 0, tiled=True)
+            rs = recv[..., 0].reshape(-1)
+            rd = recv[..., 1].reshape(-1)
+            rt = recv[..., 2].reshape(-1)
+            rv = recv[..., 3:].reshape(-1, W)
+            nstk = jnp.full((cap + 1, D), -1, jnp.int32).at[rs, rd].set(rt)
+            nstk = nstk.at[cap].set(-1)
+            nsv = jnp.zeros((cap + 1, D, W), jnp.int32).at[rs, rd].set(rv)
+            nsv = nsv.at[cap].set(0)
+            moved = lax.psum(jnp.sum(live.astype(jnp.int32)), axis)
+            return last, ticket, nsv[None], nstk[None], moved, lost
+
+        specs = (P(), P(), P(axis), P(axis))
+        wrapped = shard_map(body, mesh=mesh, in_specs=specs,
+                            out_specs=specs + (P(), P()))
+        return jax.jit(wrapped, donate_argnums=(2, 3))

@@ -22,9 +22,11 @@ have re-enqueued them; leases *granted inside* the burst cannot be observed
 until it returns, so they are re-checked at the next burst boundary.  A
 lease granted at wave j expires only after ``lease_steps`` further steps,
 so for bursts of ``K <= lease_steps + 1`` waves the burst schedule is
-*exactly* the per-step schedule — :meth:`run_waves` asserts that bound
-(split longer horizons into multiple bursts).  :meth:`step` is the K=1
-special case and matches the seed per-step behavior bit for bit.
+*exactly* the per-step schedule.  :meth:`run_waves` ENFORCES that bound by
+chunking longer horizons into consecutive sub-bursts of at most
+``lease_steps + 1`` waves (each chunk boundary re-checks leases, so the
+chunked schedule equals the per-step schedule for any K).  :meth:`step` is
+the K=1 special case and matches the seed per-step behavior bit for bit.
 """
 from __future__ import annotations
 
@@ -72,13 +74,22 @@ class WorkQueue:
         ``wants[k][w]`` the dequeue count for worker w at wave k.  Returns
         per-wave grant lists.  A pre-burst lease whose expiry falls at wave
         k is re-enqueued ahead of wave k's submissions, exactly as the
-        per-step loop would have."""
+        per-step loop would have.
+
+        Bursts longer than the lease horizon (``K > lease_steps + 1``) are
+        chunked into consecutive sub-bursts: a lease granted inside a burst
+        can only be observed at a burst boundary, so an unchunked oversized
+        burst would silently defer its expiry retries.  Chunk boundaries
+        re-check leases, making the chunked schedule identical to the
+        per-step schedule for any K."""
         K = len(submits)
         assert K == len(wants) and K >= 1
-        assert K <= self.lease_steps + 1, (
-            "burst longer than the lease horizon: a lease granted inside "
-            "this burst could expire before it ends and its retry would "
-            "silently defer to the next burst — split into shorter bursts")
+        H = self.lease_steps + 1
+        if K > H:
+            out: List[List[Tuple[int, np.ndarray]]] = []
+            for i in range(0, K, H):
+                out.extend(self.run_waves(submits[i:i + H], wants[i:i + H]))
+            return out
         first_step = self.step_no + 1
 
         n = self.dq.n_shards * self.dq.L

@@ -1,3 +1,5 @@
-from .failures import FailureInjector, run_with_restarts
+from .failures import (ElasticPolicy, FailureInjector, ShardFailure,
+                       SimulatedFailure, run_with_restarts)
 
-__all__ = ["FailureInjector", "run_with_restarts"]
+__all__ = ["ElasticPolicy", "FailureInjector", "ShardFailure",
+           "SimulatedFailure", "run_with_restarts"]

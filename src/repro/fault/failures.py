@@ -1,16 +1,28 @@
-"""Fault-tolerance runtime: failure injection + restart-from-checkpoint.
+"""Fault-tolerance runtime: failure injection, restart-from-checkpoint, and
+elastic shrink-on-failure.
 
-At fleet scale a node failure kills the whole SPMD step; recovery is
-checkpoint-restart (possibly on a resized slice — the elastic path through
-``checkpoint.restore_sharded``).  ``run_with_restarts`` is that control
-loop, made testable: a :class:`FailureInjector` raises ``SimulatedFailure``
-at chosen steps, and the loop restores from the last committed checkpoint
-and continues.  Determinism: the data pipeline is indexed by global step,
-so a restarted run replays identical batches (asserted in tests)."""
+At fleet scale a node failure kills the whole SPMD step.  Two recovery
+policies are provided, composable in one control loop:
+
+* **checkpoint-restart** (the classic): reload the last committed
+  checkpoint and replay.  Works for any failure, costs replayed steps.
+  ``checkpoint.restore_sharded`` makes the restart elastic at the training
+  level — the reload may land on a resized slice.
+* **shrink-on-failure** (the paper's LEAVE, PR 2): when the failure
+  identifies a dead shard (:class:`ShardFailure`) and the caller supplies an
+  :class:`ElasticPolicy`, the loop issues a LEAVE of that shard (state is
+  re-materialized onto the surviving mesh — e.g.
+  ``dqueue.ElasticDeviceQueue.shrink``) and retries the *same* step on the
+  smaller fleet: zero steps replayed, no checkpoint round-trip.  After
+  ``regrow_after`` consecutive healthy steps the policy's ``regrow`` hook
+  JOINs replacement capacity back in.
+
+Determinism: the data pipeline is indexed by global step, so a restarted
+run replays identical batches (asserted in tests)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, Optional
+from typing import Callable, Dict, Optional
 
 from ..checkpoint import latest_step, load_checkpoint, save_checkpoint
 
@@ -19,28 +31,72 @@ class SimulatedFailure(RuntimeError):
     pass
 
 
+class ShardFailure(SimulatedFailure):
+    """A failure attributable to one shard — eligible for LEAVE instead of
+    restart when an :class:`ElasticPolicy` is installed."""
+
+    def __init__(self, shard: int, step: int):
+        super().__init__(f"injected failure of shard {shard} at step {step}")
+        self.shard = shard
+        self.step = step
+
+
 @dataclasses.dataclass
 class FailureInjector:
+    """Raises at chosen steps: ``fail_at_steps`` raise plain
+    :class:`SimulatedFailure` (whole-job crash); ``shard_fail_at`` maps
+    step -> shard id and raises :class:`ShardFailure` (attributable)."""
+
     fail_at_steps: tuple = ()
+    shard_fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
     fired: set = dataclasses.field(default_factory=set)
 
     def maybe_fail(self, step: int):
+        if step in self.shard_fail_at and ("shard", step) not in self.fired:
+            self.fired.add(("shard", step))
+            raise ShardFailure(self.shard_fail_at[step], step)
         if step in self.fail_at_steps and step not in self.fired:
             self.fired.add(step)
             raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    """Shrink-on-failure / regrow-on-recovery hooks for
+    :func:`run_with_restarts`.
+
+    ``shrink(state, dead_shard) -> state`` issues the LEAVE (the state
+    carrier decides what that means — for an ``ElasticDeviceQueue``-backed
+    state it is ``queue.shrink([dead_shard])``).  ``regrow(state) -> state``
+    JOINs one replacement shard; it fires after ``regrow_after`` consecutive
+    healthy steps while capacity is degraded (0 disables regrowing)."""
+
+    shrink: Callable[[object, int], object]
+    regrow: Optional[Callable[[object], object]] = None
+    regrow_after: int = 0
 
 
 def run_with_restarts(*, init_state: Callable[[], tuple],
                       step_fn: Callable[[tuple, int], tuple],
                       n_steps: int, ckpt_dir, ckpt_every: int = 10,
                       injector: Optional[FailureInjector] = None,
+                      elastic: Optional[ElasticPolicy] = None,
                       max_restarts: int = 10, log: Callable = print):
     """Run ``step_fn(state, step) -> state`` for n_steps with checkpointing.
 
-    On failure: reload the latest checkpoint and resume from its step.
-    Returns (state, metrics: dict with restart/step accounting)."""
+    On a :class:`ShardFailure` with an ``elastic`` policy: LEAVE the dead
+    shard and retry the same step on the shrunk fleet (no replay).  On any
+    other failure (or without a policy): reload the latest checkpoint and
+    resume from its step.  Returns (state, metrics with restart/LEAVE/JOIN
+    accounting)."""
     restarts = 0
-    metrics = {"restarts": 0, "steps_replayed": 0, "steps_run": 0}
+    metrics = {"restarts": 0, "steps_replayed": 0, "steps_run": 0,
+               "leaves": 0, "joins": 0}
+    # LEAVEd-but-not-regrown capacity survives checkpoint restarts: the
+    # elastic state (e.g. a shrunk ElasticDeviceQueue captured by the
+    # policy hooks) lives outside the checkpointed tree, so forgetting the
+    # deficit on restart would permanently disable regrow.
+    degraded = 0
     while True:
         start = latest_step(ckpt_dir)
         state = init_state()
@@ -51,13 +107,36 @@ def run_with_restarts(*, init_state: Callable[[], tuple],
             step0 = int(manifest["step"])
             log(f"[fault] restored step {step0}")
         try:
-            for step in range(step0, n_steps):
-                if injector is not None:
-                    injector.maybe_fail(step)
-                state = step_fn(state, step)
+            step = step0
+            healthy = 0    # consecutive failure-free steps
+            while step < n_steps:
+                try:
+                    if injector is not None:
+                        injector.maybe_fail(step)
+                    state = step_fn(state, step)
+                except ShardFailure as e:
+                    if elastic is None:
+                        raise
+                    log(f"[fault] {e}; LEAVE instead of restart")
+                    state = elastic.shrink(state, e.shard)
+                    metrics["leaves"] += 1
+                    degraded += 1
+                    healthy = 0
+                    continue  # retry the SAME step on the smaller fleet
                 metrics["steps_run"] += 1
-                if (step + 1) % ckpt_every == 0 or step + 1 == n_steps:
-                    save_checkpoint(ckpt_dir, step + 1, state)
+                step += 1
+                healthy += 1
+                if step % ckpt_every == 0 or step == n_steps:
+                    save_checkpoint(ckpt_dir, step, state)
+                if (elastic is not None and degraded > 0
+                        and elastic.regrow is not None
+                        and elastic.regrow_after > 0
+                        and healthy >= elastic.regrow_after):
+                    log("[fault] recovered; JOIN of a replacement shard")
+                    state = elastic.regrow(state)
+                    metrics["joins"] += 1
+                    degraded -= 1
+                    healthy = 0
             metrics["restarts"] = restarts
             return state, metrics
         except SimulatedFailure as e:

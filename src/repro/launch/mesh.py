@@ -23,3 +23,23 @@ def make_host_mesh(n_data: int = 1, n_model: int = 1):
     n_data = min(n_data, n)
     n_model = max(1, min(n_model, n // n_data))
     return make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_elastic_mesh(n_shards: int, axis_name: str = "data", devices=None):
+    """One-axis mesh over an explicit device subset.
+
+    The elastic JOIN/LEAVE path (``dqueue.elastic``) re-materializes queue
+    state across meshes of *different* sizes, so unlike ``jax.make_mesh``
+    this helper must be able to build a mesh over fewer devices than the
+    process owns — and over a caller-chosen subset, so a LEAVE can exclude
+    the precise device that failed."""
+    import numpy as np
+
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if not 1 <= n_shards <= len(devs):
+        raise ValueError(
+            f"cannot build a {n_shards}-shard mesh from {len(devs)} devices")
+    arr = np.empty((n_shards,), dtype=object)
+    for i, d in enumerate(devs[:n_shards]):
+        arr[i] = d
+    return jax.sharding.Mesh(arr, (axis_name,))

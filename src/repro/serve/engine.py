@@ -12,11 +12,19 @@ decode at engine scale; the 32k-prefill fast path is the dedicated
 
 Queue traffic rides the multi-wave API (PR 1): ``submit`` stages arrivals
 host-side, and each engine step flushes staged enqueues *and* the free-slot
-dequeues as ONE fused queue wave (``DeviceQueue.run_waves``), chunked across
+dequeues as ONE fused queue wave (``run_waves``), chunked across
 K waves in a single device dispatch when a submission burst exceeds one
 wave's capacity.  The engine mirrors the queue size host-side
 (enqueues flushed minus dequeues granted), so ``run_until_drained`` never
 synchronizes on device state between steps.
+
+Elastic membership (PR 2): the request queue is an
+:class:`~repro.dqueue.ElasticDeviceQueue`, so the engine can JOIN/LEAVE
+queue shards at runtime — :meth:`resize` drains staged submissions into the
+queue, re-materializes it onto the new shard count (every queued request id
+survives, FIFO order intact), and resumes bursts on the new mesh.  This is
+the elastic-serving story: scale the admission fabric with traffic, shed a
+failed shard without dropping queued work.
 """
 from __future__ import annotations
 
@@ -27,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..dqueue import DeviceQueue
+from ..dqueue import ElasticDeviceQueue
 
 
 @dataclasses.dataclass
@@ -51,10 +59,9 @@ class ServeEngine:
         self.mesh = mesh
         self.max_slots = max_slots
         self.max_seq = max_seq
-        self.queue = DeviceQueue(mesh, "data", cap=queue_cap,
-                                 payload_width=2,
-                                 ops_per_shard=max(8, 2 * max_slots))
-        self.qstate = self.queue.init_state()
+        self.queue = ElasticDeviceQueue(mesh.shape["data"], cap=queue_cap,
+                                        payload_width=2,
+                                        ops_per_shard=max(8, 2 * max_slots))
         self.requests: Dict[int, Request] = {}
         self.slots: List[Optional[int]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)
@@ -89,13 +96,12 @@ class ServeEngine:
             r.enqueue_step = self.step_no
             self._staged.append(r.rid)
 
-    def _flush_and_refill(self):
-        """ONE fused queue dispatch: staged enqueues + free-slot dequeues."""
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        enq_rids, self._staged = self._staged, []
-        n_ops = len(enq_rids) + len(free)
+    def _queue_wave(self, enq_rids: List[int], n_deq: int) -> List[int]:
+        """Run enqueues + dequeues as chunked fused waves; returns granted
+        request ids.  Wave width tracks the queue's CURRENT shard count."""
+        n_ops = len(enq_rids) + n_deq
         if n_ops == 0:
-            return
+            return []
         n = self.queue.n_shards * self.queue.L
         n_waves = -(-n_ops // n)  # ceil: chunk oversized bursts
         # pad the wave count to a power of two (extra waves are all-invalid
@@ -109,23 +115,42 @@ class ServeEngine:
             k, i = divmod(j, n)
             is_enq[k, i] = valid[k, i] = True
             payload[k, i, 0] = rid
-        for m in range(len(free)):
+        for m in range(n_deq):
             k, i = divmod(len(enq_rids) + m, n)
             valid[k, i] = True  # dequeue request
-        self.qstate, pos, matched, dv, dok, ovf = self.queue.run_waves(
-            self.qstate, jnp.array(is_enq), jnp.array(valid),
-            jnp.array(payload))
+        pos, matched, dv, dok, ovf = self.queue.run_waves(
+            jnp.array(is_enq), jnp.array(valid), jnp.array(payload))
         assert not bool(np.asarray(ovf).any())
         dv = np.asarray(dv).reshape(n_waves * n, 2)
         dok = np.asarray(dok).reshape(n_waves * n)
         got = [int(dv[j, 0]) for j in range(n_waves * n) if dok[j]]
         self._host_qsize += len(enq_rids) - len(got)
+        return got
+
+    def _flush_and_refill(self):
+        """ONE fused queue dispatch: staged enqueues + free-slot dequeues."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        enq_rids, self._staged = self._staged, []
+        got = self._queue_wave(enq_rids, len(free))
         for slot, rid in zip(free, got):
             r = self.requests[rid]
             r.start_step = self.step_no
             self.stats["queue_waits"].append(r.start_step - r.enqueue_step)
             self.slots[slot] = rid
             self.slot_pos[slot] = 0
+
+    # ----------------------------------------------------------- elastic ---
+    def resize(self, n_shards: int) -> dict:
+        """Live JOIN/LEAVE of queue shards between engine steps.
+
+        Drains staged submissions into the device queue (so the migration
+        wave carries them too), re-materializes the queue onto ``n_shards``
+        shards, and resumes — queued request ids and FIFO admission order
+        are preserved exactly.  Returns the migration stats dict."""
+        enq_rids, self._staged = self._staged, []
+        got = self._queue_wave(enq_rids, 0)
+        assert not got  # enqueue-only wave grants nothing
+        return self.queue.resize(n_shards)
 
     # ------------------------------------------------------------ decode ---
     def step(self):

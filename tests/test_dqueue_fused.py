@@ -244,7 +244,36 @@ def test_work_queue_burst_expiry_matches_per_step():
     assert [len(g) for g in bursts] == [0, 0, 0, 1]
     assert int(bursts[3][0][1][0]) == int(item[0])
     assert wq.stats["reissued"] == 1
-    # bursts beyond the lease horizon are rejected, not silently deferred
-    import pytest
-    with pytest.raises(AssertionError):
-        wq.run_waves([[]] * 6, [[0]] * 6)
+
+
+def test_work_queue_oversized_burst_chunks_to_per_step_schedule():
+    """Regression (PR 2 satellite): a burst longer than the lease horizon
+    (K > lease_steps + 1) used to be a docstring-only constraint; it is now
+    chunked into sub-bursts whose schedule is EXACTLY the per-step one —
+    including a lease granted inside the burst that also expires inside it
+    (the case an unchunked burst would silently defer)."""
+    from repro.compat import make_mesh
+    from repro.dqueue import DeviceQueue, WorkQueue
+
+    def build():
+        mesh = make_mesh((1,), ("data",))
+        dq = DeviceQueue(mesh, "data", cap=32, payload_width=4,
+                         ops_per_shard=8)
+        return WorkQueue(dq, lease_steps=2)
+
+    K = 8  # >> lease_steps + 1 = 3
+    wq_burst, wq_step = build(), build()
+    submits = [[wq_burst.make_item([5])]] + [[] for _ in range(K - 1)]
+    submits_ref = [[wq_step.make_item([5])]] + [[] for _ in range(K - 1)]
+    wants = [[1]] * K  # one hungry worker every wave; grants never acked
+
+    grants_burst = wq_burst.run_waves(submits, wants)
+    grants_step = [wq_step.step(s, w) for s, w in zip(submits_ref, wants)]
+
+    flat = [[(w, int(item[0])) for w, item in g] for g in grants_burst]
+    flat_ref = [[(w, int(item[0])) for w, item in g] for g in grants_step]
+    assert flat == flat_ref, (flat, flat_ref)
+    # the item leases out, expires, and re-leases INSIDE the burst
+    assert sum(len(g) for g in grants_burst) >= 2
+    assert wq_burst.stats["reissued"] == wq_step.stats["reissued"] >= 1
+    assert wq_burst.step_no == wq_step.step_no == K
