@@ -17,7 +17,21 @@ host-staged mesh crossing.  Results go to ``BENCH_PR2.json``:
 
     PYTHONPATH=src python -m benchmarks.micro --pr2 [path] [--quick]
 
-(each re-execs itself on a forced 8-device CPU mesh when needed).
+PR 3 adds the priority-tier mixed-load benchmark: interactive + batch
+traffic at identical arrival schedules and identical service capacity
+through (a) the single-tier FIFO ``DeviceQueue`` and (b) the two-tier
+``DevicePriorityQueue`` — per-class wait distributions (p50/p99 in waves)
+show the tail-latency separation the priority fabric buys, plus the
+steady-state wave overhead of the priority path and its collective count.
+Results go to ``BENCH_PR3.json``:
+
+    PYTHONPATH=src python -m benchmarks.micro --pr3 [path] [--quick]
+
+``--all [--quick]`` runs EVERY emitter above (the CI bench-smoke entry
+point: one invocation emits every BENCH_PR*.json, and any emitter crash
+fails the run — future PRs add an emitter here instead of editing the
+workflow).  Each emitter re-execs itself on a forced 8-device CPU mesh
+when needed.
 """
 from __future__ import annotations
 
@@ -52,7 +66,6 @@ def bench_scan_queue():
         rng = np.random.default_rng(0)
         e = jnp.array(rng.random(n) < 0.6)
         v = jnp.ones((n,), bool)
-        st = QueueState.empty()
         f = jax.jit(lambda a, b: queue_scan(a, QueueState.empty(), valid=b))
         us = _time_us(f, e, v)
         rows.append((f"scan_queue_n{n}", us, f"{n/us:.1f} ops/us"))
@@ -175,35 +188,46 @@ def _measure_wave_pipeline(n_dev: int, K: int, ops_per_shard: int = 64,
     }
 
 
-def emit_bench_pr1(path: str = "BENCH_PR1.json", n_dev: int = 8,
-                   K: int = 32) -> dict:
-    """Measure the wave pipeline on an ``n_dev`` CPU mesh and write JSON.
+def _reexec_on_mesh(tag: str, path: str, n_dev: int, child_args: list):
+    """Re-run ``benchmarks.micro`` in a subprocess on a forced ``n_dev``
+    CPU mesh and return its JSON, or None if this process already has the
+    right mesh (or IS the child).  Drops any pre-existing device-count flag
+    (last one wins in XLA flag parsing) and marks the child so it never
+    re-execs itself."""
+    in_child = os.environ.get(f"_REPRO_BENCH_{tag}_CHILD") == "1"
+    if in_child or (len(jax.devices()) == n_dev
+                    and jax.default_backend() == "cpu"):
+        return None
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={n_dev}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env["JAX_PLATFORMS"] = "cpu"
+    env[f"_REPRO_BENCH_{tag}_CHILD"] = "1"
+    env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    subprocess.run([sys.executable, "-m", "benchmarks.micro"] + child_args,
+                   cwd=_REPO_ROOT, env=env, check=True)
+    with open(path) as f:
+        return json.load(f)
 
-    Re-execs in a subprocess with ``--xla_force_host_platform_device_count``
-    when the current process doesn't have exactly ``n_dev`` CPU devices."""
+
+def emit_bench_pr1(path: str = "BENCH_PR1.json", n_dev: int = 8,
+                   K: int = 32, quick: bool = False) -> dict:
+    """Measure the wave pipeline on an ``n_dev`` CPU mesh and write JSON."""
     if not os.path.isabs(path):
         path = os.path.join(_REPO_ROOT, path)
-    in_child = os.environ.get("_REPRO_BENCH_PR1_CHILD") == "1"
-    if not in_child and (len(jax.devices()) != n_dev
-                         or jax.default_backend() != "cpu"):
-        env = dict(os.environ)
-        # drop any pre-existing device-count flag (last one wins in XLA
-        # flag parsing) and mark the child so it never re-execs itself
-        flags = [f for f in env.get("XLA_FLAGS", "").split()
-                 if not f.startswith("--xla_force_host_platform_device_count")]
-        flags.append(f"--xla_force_host_platform_device_count={n_dev}")
-        env["XLA_FLAGS"] = " ".join(flags)
-        env["JAX_PLATFORMS"] = "cpu"
-        env["_REPRO_BENCH_PR1_CHILD"] = "1"
-        env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src") + os.pathsep
-                             + env.get("PYTHONPATH", ""))
-        subprocess.run(
-            [sys.executable, "-m", "benchmarks.micro", "--pr1", path,
-             "--n-dev", str(n_dev), "--waves", str(K)],
-            cwd=_REPO_ROOT, env=env, check=True)
-        with open(path) as f:
-            return json.load(f)
-    data = _measure_wave_pipeline(n_dev=n_dev, K=K)
+    if quick:
+        K = min(K, 8)
+    child = _reexec_on_mesh("PR1", path, n_dev,
+                            ["--pr1", path, "--n-dev", str(n_dev),
+                             "--waves", str(K)]
+                            + (["--quick"] if quick else []))
+    if child is not None:
+        return child
+    data = _measure_wave_pipeline(n_dev=n_dev, K=K,
+                                  iters=3 if quick else 10)
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
     return data
@@ -305,29 +329,200 @@ def emit_bench_pr2(path: str = "BENCH_PR2.json", n_dev: int = 8,
     (re-execs on a forced ``n_dev``-device CPU mesh when needed)."""
     if not os.path.isabs(path):
         path = os.path.join(_REPO_ROOT, path)
-    in_child = os.environ.get("_REPRO_BENCH_PR2_CHILD") == "1"
-    if not in_child and (len(jax.devices()) != n_dev
-                         or jax.default_backend() != "cpu"):
-        env = dict(os.environ)
-        flags = [f for f in env.get("XLA_FLAGS", "").split()
-                 if not f.startswith("--xla_force_host_platform_device_count")]
-        flags.append(f"--xla_force_host_platform_device_count={n_dev}")
-        env["XLA_FLAGS"] = " ".join(flags)
-        env["JAX_PLATFORMS"] = "cpu"
-        env["_REPRO_BENCH_PR2_CHILD"] = "1"
-        env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src") + os.pathsep
-                             + env.get("PYTHONPATH", ""))
-        cmd = [sys.executable, "-m", "benchmarks.micro", "--pr2", path,
-               "--n-dev", str(n_dev), "--waves", str(K)]
-        if quick:
-            cmd.append("--quick")
-        subprocess.run(cmd, cwd=_REPO_ROOT, env=env, check=True)
-        with open(path) as f:
-            return json.load(f)
+    child = _reexec_on_mesh(
+        "PR2", path, n_dev,
+        ["--pr2", path, "--n-dev", str(n_dev), "--waves", str(K)]
+        + (["--quick"] if quick else []))
+    if child is not None:
+        return child
     data = _measure_elastic(n_dev=n_dev, K=K, quick=quick)
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
     return data
+
+
+# -------------------------------- PR 3: priority tiers, mixed load ---------
+def _measure_priority_mixed(n_dev: int, quick: bool = False) -> dict:
+    """Interactive + batch traffic at the SAME arrival schedule and the
+    SAME per-wave service capacity through the single-tier FIFO queue vs.
+    the two-tier priority queue.  The total queue size evolves identically
+    in both runs (arrivals and dequeue capacity are equal), so throughput
+    is equal by construction — the difference is WHO waits: FIFO makes
+    interactive requests queue behind every batch burst, the priority wave
+    admits them first."""
+    from repro.compat import make_mesh
+    from repro.dqueue import DeviceQueue, DevicePriorityQueue
+
+    L, W, C = 16, 2, 8                 # wave width / payload / service cap
+    waves = 48 if quick else 160
+    inter_rate = 2                     # interactive arrivals per wave
+    batch_burst, batch_every = 32, 4   # avg 8/wave: with the interactive
+    #                                    traffic the arrival window is
+    #                                    oversubscribed (10 > C=8), so batch
+    #                                    backlog grows until the drain tail
+    iters = 3 if quick else 10
+    cap = 4096                         # per shard (and per tier) — ample
+    mesh = make_mesh((n_dev,), ("data",))
+    n = n_dev * L
+    INTER_BASE = 1_000_000             # rid space: class = rid >= base
+
+    def arrivals(w):
+        out = [(0, INTER_BASE + w * 64 + i) for i in range(inter_rate)]
+        if w % batch_every == 0:
+            out += [(1, w * 64 + i) for i in range(batch_burst)]
+        return out
+
+    def run(use_priority):
+        if use_priority:
+            q = DevicePriorityQueue(mesh, "data", n_prios=2, cap=cap,
+                                    payload_width=W, ops_per_shard=L)
+        else:
+            q = DeviceQueue(mesh, "data", cap=cap, payload_width=W,
+                            ops_per_shard=L)
+        state = q.init_state()
+        enq_wave = {}
+        waits = {0: [], 1: []}
+        backlog, w = 0, 0
+        while w < waves or backlog > 0:   # drain tail: serve EVERY request
+            arr = arrivals(w) if w < waves else []
+            e = np.zeros(n, bool)
+            v = np.zeros(n, bool)
+            pr = np.zeros(n, np.int32)
+            pw = np.zeros((n, W), np.int32)
+            for j, (p, rid) in enumerate(arr):
+                e[j] = v[j] = True
+                pr[j] = p
+                pw[j, 0] = rid
+                enq_wave[rid] = w
+            v[len(arr):len(arr) + C] = True          # C dequeue requests
+            if use_priority:
+                state, _, _, _, dv, dok, ovf, _ = q.step(
+                    state, jnp.array(e), jnp.array(v), jnp.array(pr),
+                    jnp.array(pw))
+            else:
+                state, _, _, dv, dok, ovf = q.step(
+                    state, jnp.array(e), jnp.array(v), jnp.array(pw))
+            assert not bool(np.asarray(ovf).any())
+            dv, dok = np.asarray(dv), np.asarray(dok)
+            served = 0
+            for i in range(n):
+                if dok[i]:
+                    rid = int(dv[i, 0])
+                    served += 1
+                    waits[0 if rid >= INTER_BASE else 1].append(
+                        w - enq_wave.pop(rid))
+            backlog += len(arr) - served
+            w += 1
+        return waits, w
+
+    def pct(xs):
+        a = np.asarray(xs, np.float64)
+        return {"n": len(xs), "mean": float(a.mean()),
+                "p50": float(np.percentile(a, 50)),
+                "p99": float(np.percentile(a, 99)),
+                "max": float(a.max())}
+
+    fifo_waits, fifo_total = run(False)
+    pq_waits, pq_total = run(True)
+    assert fifo_total == pq_total, "throughput diverged between runs"
+
+    # ---- steady-state wave rate + collective count of the priority path ---
+    K = 8 if quick else 32
+    rng = np.random.default_rng(5)
+    E = jnp.array(rng.random((K, n)) < 0.5)
+    V = jnp.ones((K, n), bool)
+    PR = jnp.array(rng.integers(0, 2, (K, n)), jnp.int32)
+    PW = jnp.array(rng.integers(0, 100, (K, n, W)), jnp.int32)
+    fifo = DeviceQueue(mesh, "data", cap=cap, payload_width=W,
+                       ops_per_shard=L)
+    pq = DevicePriorityQueue(mesh, "data", n_prios=2, cap=cap,
+                             payload_width=W, ops_per_shard=L)
+
+    def run_fifo():
+        out = fifo.run_waves(fifo.init_state(), E, V, PW)
+        jax.block_until_ready(out[0].store_full)
+
+    def run_pq():
+        out = pq.run_waves(pq.init_state(), E, V, PR, PW)
+        jax.block_until_ready(out[0].store_full)
+
+    def best_time(fn):
+        fn()  # warmup / compile
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_fifo = best_time(run_fifo)
+    t_pq = best_time(run_pq)
+    zeros = (fifo.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool),
+             jnp.zeros((n, W), jnp.int32))
+    coll_fifo = count_all_to_all(fifo._step, zeros)
+    zeros = (pq.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool),
+             jnp.zeros(n, jnp.int32), jnp.zeros((n, W), jnp.int32))
+    coll_pq = count_all_to_all(pq._step, zeros)
+
+    return {
+        "n_dev": n_dev, "waves": waves, "total_waves_to_drain": fifo_total,
+        "capacity_per_wave": C,
+        "arrivals": {"interactive_per_wave": inter_rate,
+                     "batch_burst": batch_burst,
+                     "batch_burst_every": batch_every},
+        "fifo_baseline": {"interactive": pct(fifo_waits[0]),
+                          "batch": pct(fifo_waits[1])},
+        "priority_2tier": {"interactive": pct(pq_waits[0]),
+                           "batch": pct(pq_waits[1])},
+        "interactive_p99_speedup": (pct(fifo_waits[0])["p99"]
+                                    / max(pct(pq_waits[0])["p99"], 0.5)),
+        "steady_state": {
+            "fifo_waves_per_sec": K / t_fifo,
+            "priority_waves_per_sec": K / t_pq,
+            "overhead_pct": (t_pq - t_fifo) / t_fifo * 100.0,
+            "collectives_per_wave": {"fifo": coll_fifo, "priority": coll_pq},
+        },
+    }
+
+
+def emit_bench_pr3(path: str = "BENCH_PR3.json", n_dev: int = 8,
+                   quick: bool = False) -> dict:
+    """Measure priority-tier tail-latency separation under mixed load and
+    write JSON (re-execs on a forced ``n_dev``-device CPU mesh)."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    child = _reexec_on_mesh(
+        "PR3", path, n_dev,
+        ["--pr3", path, "--n-dev", str(n_dev)]
+        + (["--quick"] if quick else []))
+    if child is not None:
+        return child
+    data = _measure_priority_mixed(n_dev=n_dev, quick=quick)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
+def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
+    """The CI bench-smoke entry point: run EVERY BENCH_PR*.json emitter.
+
+    Any emitter crash fails the whole run (after attempting the rest, so
+    one regression doesn't mask another's numbers)."""
+    emitters = [("BENCH_PR1.json", lambda p: emit_bench_pr1(
+                     p, n_dev=n_dev, quick=quick)),
+                ("BENCH_PR2.json", lambda p: emit_bench_pr2(
+                     p, n_dev=n_dev, quick=quick)),
+                ("BENCH_PR3.json", lambda p: emit_bench_pr3(
+                     p, n_dev=n_dev, quick=quick))]
+    out, failures = {}, []
+    for path, emit in emitters:
+        try:
+            out[path] = emit(path)
+        except Exception as e:
+            failures.append(f"{path}: {type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit("bench emitters failed:\n  " + "\n  ".join(failures))
+    return out
 
 
 def bench_wave_pipeline():
@@ -376,17 +571,29 @@ if __name__ == "__main__":
     ap.add_argument("--pr2", nargs="?", const="BENCH_PR2.json", default=None,
                     help="measure elastic reshard cost and write "
                          "BENCH_PR2.json")
+    ap.add_argument("--pr3", nargs="?", const="BENCH_PR3.json", default=None,
+                    help="measure priority-tier mixed-load latency and "
+                         "write BENCH_PR3.json")
+    ap.add_argument("--all", action="store_true",
+                    help="run every BENCH_PR*.json emitter (CI bench smoke)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: fewer waves/iterations")
     ap.add_argument("--n-dev", type=int, default=8)
     ap.add_argument("--waves", type=int, default=32)
     cli = ap.parse_args()
-    if cli.pr1:
-        out = emit_bench_pr1(cli.pr1, n_dev=cli.n_dev, K=cli.waves)
+    if cli.all:
+        out = emit_all(quick=cli.quick, n_dev=cli.n_dev)
+        print(json.dumps({k: "ok" for k in out}, indent=2))
+    elif cli.pr1:
+        out = emit_bench_pr1(cli.pr1, n_dev=cli.n_dev, K=cli.waves,
+                             quick=cli.quick)
         print(json.dumps(out, indent=2))
     elif cli.pr2:
         out = emit_bench_pr2(cli.pr2, n_dev=cli.n_dev, K=cli.waves,
                              quick=cli.quick)
+        print(json.dumps(out, indent=2))
+    elif cli.pr3:
+        out = emit_bench_pr3(cli.pr3, n_dev=cli.n_dev, quick=cli.quick)
         print(json.dumps(out, indent=2))
     else:
         for row in run_all():

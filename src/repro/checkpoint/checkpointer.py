@@ -15,10 +15,9 @@ from __future__ import annotations
 
 import json
 import os
-import shutil
 import threading
 from pathlib import Path
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

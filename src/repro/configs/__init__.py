@@ -6,8 +6,8 @@ Each config is an :class:`ArchConfig`; ``get_config(name)`` resolves by id.
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Optional
 
 ARCH_IDS = [
     "mamba2_130m", "zamba2_1p2b", "whisper_small", "granite_moe_1b",

@@ -18,7 +18,7 @@ from collections import deque
 from typing import List
 
 from .intervals import BOTTOM
-from .protocol import Request, Skueue
+from .protocol import Skueue
 
 
 class ConsistencyViolation(AssertionError):

@@ -78,7 +78,6 @@ class LDB:
 
         idx = np.arange(N)
         pred = (idx - 1) % N
-        succ = (idx + 1) % N
         # parent rule (Sec. III-B)
         parent = np.where(
             kinds == MIDDLE, co_by_node[:, 0],

@@ -10,7 +10,7 @@ to ``LDB`` — ``tests/test_ldb.py`` cross-checks them on static membership.
 from __future__ import annotations
 
 from bisect import bisect_right, insort
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

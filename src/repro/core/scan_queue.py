@@ -188,6 +188,104 @@ def stack_scan(is_push: jax.Array, state: StackState,
     return pos, tick, matched, new
 
 
+# -------------------------------------------------- priority-tier scan -----
+def priority_queue_scan(is_enq: jax.Array, prio: jax.Array, valid: jax.Array,
+                        firsts: jax.Array, lasts: jax.Array, *, n_prios: int,
+                        relaxation: int = 0, shard_of: jax.Array | None = None,
+                        n_shards: int | None = None):
+    """Batch position assignment for the P-tier constant-priority queue
+    (Skeap's constant-priority regime, arXiv:1805.03472).
+
+    The queue is P independent SKUEUE position intervals, tie-broken by
+    tier: each tier keeps its own dense ``[firsts[p], lasts[p]]`` window.
+    One wave applies all enqueues before all dequeues (the PR 1 PUT-before-
+    GET rule, lifted to tiers):
+
+      * enqueues — per-tier FIFO positions via the min-plus transforms of
+        :func:`queue_scan`, one masked scan per tier (P is a small static
+        constant);
+      * dequeues — resolved highest-priority-first *inside the wave*: the
+        d-th dequeue (wave order) takes the d-th element of the priority-
+        ordered pool, i.e. the wave's dequeue batch drains tier 0, then
+        tier 1, ...  With ``relaxation=k`` a dequeue may instead take the
+        head of a tier up to ``k`` below the currently-best non-empty tier
+        when that lower head is *locally owned* (``head % n_shards ==
+        shard_of[i]``) and the best tier's head is not — trading strict
+        priority order (never per-tier FIFO, and never by more than k
+        tiers) for a serve that avoids the cross-shard hop.
+
+    Args:
+      is_enq/valid: [n] bool (global wave order); prio: [n] int32 in
+        [0, n_prios) (ignored for dequeues); firsts/lasts: [n_prios] int32.
+      relaxation: static int k >= 0; 0 is the strict mode.
+      shard_of/n_shards: issuing shard per op and shard count — required
+        when relaxation > 0 (the locality rule needs owners).
+    Returns:
+      (tier [n] int32 (-1 unmatched), pos [n] int32 (⊥ = -1), matched [n]
+      bool, new_firsts, new_lasts, n_relaxed) — ``n_relaxed`` counts the
+      dequeues served from below the strictly-best tier (0 in strict mode).
+    """
+    P_ = n_prios
+    enq = is_enq & valid
+    deq = (~is_enq) & valid
+    tier = jnp.full(is_enq.shape, -1, jnp.int32)
+    pos = jnp.full(is_enq.shape, BOTTOM, jnp.int32)
+    new_lasts = []
+    for p in range(P_):
+        mask = enq & (prio == p)
+        pos_p, _, st_p = queue_scan(
+            mask, QueueState(firsts[p], lasts[p]), valid=mask)
+        tier = jnp.where(mask, p, tier)
+        pos = jnp.where(mask, pos_p, pos)
+        new_lasts.append(st_p.last)
+    new_lasts = jnp.stack(new_lasts)
+    avail = new_lasts - firsts + 1                      # sizes after enqueues
+
+    if relaxation == 0:
+        # strict: pure per-tier prefix arithmetic, no sequential loop
+        d_in = deq.astype(jnp.int32)
+        d_rank = jnp.cumsum(d_in) - d_in                # exclusive deq rank
+        cum = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(avail)])
+        t_d = (d_rank[:, None] >= cum[None, 1:]).sum(1).astype(jnp.int32)
+        d_matched = deq & (t_d < P_)
+        t_c = jnp.minimum(t_d, P_ - 1)
+        pos_d = firsts[t_c] + d_rank - cum[t_c]
+        taken = jnp.clip(d_in.sum() - cum[:-1], 0, avail)
+        tier = jnp.where(d_matched, t_c, tier)
+        pos = jnp.where(d_matched, pos_d, pos)
+        matched = enq | d_matched
+        n_relaxed = jnp.int32(0)
+    else:
+        if shard_of is None or n_shards is None:
+            raise ValueError("relaxation > 0 needs shard_of and n_shards")
+        ar = jnp.arange(P_, dtype=jnp.int32)
+
+        def step(taken, x):
+            d_i, s_i = x
+            sizes = avail - taken
+            ne = sizes > 0
+            pstar = jnp.argmax(ne).astype(jnp.int32)    # best non-empty tier
+            heads = firsts + taken
+            loc = (ne & (ar >= pstar) & (ar <= pstar + relaxation)
+                   & (jnp.mod(heads, n_shards) == s_i))
+            q = jnp.where(loc.any(), jnp.argmax(loc), pstar).astype(jnp.int32)
+            m = d_i & ne.any()
+            out = (jnp.where(m, q, -1), jnp.where(m, heads[q], BOTTOM),
+                   m, m & (q != pstar))
+            return taken + jnp.where(m, (ar == q).astype(jnp.int32), 0), out
+
+        taken, (t_d, pos_d, m_d, rel) = lax.scan(
+            step, jnp.zeros((P_,), jnp.int32),
+            (deq, shard_of.astype(jnp.int32)))
+        tier = jnp.where(m_d, t_d, tier)
+        pos = jnp.where(m_d, pos_d, pos)
+        matched = enq | m_d
+        n_relaxed = rel.astype(jnp.int32).sum()
+
+    return tier, pos, matched, firsts + taken, new_lasts, n_relaxed
+
+
 # ------------------------------------------------- shard_map distribution ---
 def sharded_queue_scan(is_enq_local: jax.Array, state: QueueState,
                        axis_name: str,

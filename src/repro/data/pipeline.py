@@ -16,12 +16,10 @@ loader would swap in at the ``sample_index -> tokens`` seam).
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
 
 import numpy as np
 
 from ..core.hashing import splitmix64
-from ..core.scan_queue import QueueState
 
 
 def synthetic_tokens(sample_idx: np.ndarray, seq_len: int,

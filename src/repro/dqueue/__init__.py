@@ -1,6 +1,10 @@
 from .device_queue import DeviceQueue, DeviceQueueState, DeviceStack
 from .elastic import ElasticDeviceQueue, ElasticDeviceStack
+from .priority_queue import (DevicePriorityQueue, ElasticDevicePriorityQueue,
+                             PriorityQueueState)
 from .work_queue import WorkQueue
 
 __all__ = ["DeviceQueue", "DeviceQueueState", "DeviceStack",
-           "ElasticDeviceQueue", "ElasticDeviceStack", "WorkQueue"]
+           "DevicePriorityQueue", "ElasticDeviceQueue",
+           "ElasticDevicePriorityQueue", "ElasticDeviceStack",
+           "PriorityQueueState", "WorkQueue"]

@@ -49,7 +49,7 @@ the serving engine keeps richer request metadata host-side keyed by payload.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -57,8 +57,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
-from ..core.scan_queue import (BOTTOM, QueueState, StackState, queue_scan,
-                               sharded_queue_scan, stack_scan)
+from ..core.scan_queue import (QueueState, StackState, sharded_queue_scan,
+                               stack_scan)
 
 TAG_INACTIVE = 0
 TAG_PUT = 1
@@ -78,7 +78,6 @@ class DeviceQueueState(NamedTuple):
 
 def _build_send(owner, col_payload, active, n_shards, sentinel):
     """Scatter local ops into a [n_shards, L, ...] send buffer by owner row."""
-    L = owner.shape[0]
     rows = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
     hit = (rows == owner[None, :]) & active[None, :]
     if col_payload.ndim == 1:
@@ -186,7 +185,11 @@ class DeviceQueue:
                              back[own_row, j, 1:], jnp.int32(0))
         deq_ok = want_get & (back[own_row, j, 0] > 0)
 
-        overflow = (new_qs.last - new_qs.first + 1) > n_shards * cap
+        # peak size is post-enqueue (PUTs apply before GETs): same-wave
+        # dequeues shrinking the size back under cap do not undo a head
+        # slot the wrapped-around enqueue already overwrote.  Only
+        # enqueues move ``last``, so new_qs.last - state.first is that peak.
+        overflow = (new_qs.last - state.first + 1) > n_shards * cap
         return (DeviceQueueState(new_qs.first, new_qs.last, sv[None],
                                  sf[None]),
                 pos, matched, deq_vals, deq_ok, overflow)
@@ -229,7 +232,7 @@ class DeviceQueue:
                              back_vals[own_row, j], jnp.int32(0))
         deq_ok = get_active & back_ok[own_row, j]
 
-        overflow = (new_qs.last - new_qs.first + 1) > n_shards * cap
+        overflow = (new_qs.last - state.first + 1) > n_shards * cap
         return (DeviceQueueState(new_qs.first, new_qs.last, sv[None],
                                  sf[None]),
                 pos, matched, deq_vals, deq_ok, overflow)

@@ -332,8 +332,8 @@ class _ElasticBase:
                    **cls._layout_kwargs(lay), **kw)
         shard = NamedSharding(inst.mesh, P(inst.axis))
         rep = NamedSharding(inst.mesh, P())
-        shardings = {k: (shard if np.ndim(v) else rep)
-                     for k, v in inst._state_dict().items()}
+        shardings = {k: (shard if k in cls._sharded_keys else rep)
+                     for k in inst._state_dict()}
         placed, _ = restore_sharded(ckpt_dir, step, inst._state_dict(),
                                     shardings)
         inst.state = inst._from_state_dict(placed)
@@ -343,6 +343,7 @@ class _ElasticBase:
 
     # ------------------------------------------------- subclass contract ---
     _pad_fill: tuple  # fill values for (X, Y) padding rows
+    _sharded_keys: frozenset = frozenset()  # state-dict keys on the axis
 
     def _make_inner(self, mesh):
         raise NotImplementedError
@@ -383,6 +384,7 @@ class ElasticDeviceQueue(_ElasticBase):
 
     _kind = "queue"
     _pad_fill = (0, False)
+    _sharded_keys = frozenset({"store_vals", "store_full"})
 
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
@@ -502,6 +504,7 @@ class ElasticDeviceStack(_ElasticBase):
 
     _kind = "stack"
     _pad_fill = (0, -1)  # vals pad 0, tickets pad -1 (= empty)
+    _sharded_keys = frozenset({"vals", "ticks"})
 
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,

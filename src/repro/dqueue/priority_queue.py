@@ -1,0 +1,396 @@
+"""Device-resident P-tier priority queue on the fused Stage-4 wave path.
+
+Skeap (arXiv:1805.03472) extends SKUEUE's batch-aggregation protocol to
+distributed priority queues; in the constant-priority regime the queue is
+P independent SKUEUE position intervals tie-broken by tier.  This module is
+that design on the PR 1 device path: the sharded ring store gains one
+round-robin slot *window per tier* — tier ``p``'s position ``q`` lives on
+shard ``q % n_shards`` at slot ``p * cap + (q // n_shards) % cap`` — and
+Stage-4 dispatch stays TWO fused ``all_to_all`` collectives per wave (one
+packed ``slot ‖ tag ‖ payload`` request, one ``ok ‖ value`` reply; the
+slot already encodes the tier window, so nothing else changes on the wire).
+
+Op descriptors (enq/valid/prio: 5 bits per op) ride one tiny ``all_gather``
+— the same trick :class:`~.device_queue.DeviceStack` uses for its global
+scan — after which position assignment is fully replicated:
+
+* enqueues get per-tier FIFO positions from P masked min-plus scans
+  (``core.scan_queue.priority_queue_scan``, reusing the PR 1 transforms);
+* the wave's dequeues are resolved highest-priority-first *inside the
+  wave*: the d-th dequeue (wave order) takes the d-th element of the
+  priority-ordered pool — Skeap's batch-DeleteMin assignment — via
+  per-tier prefix sums, no sequential loop in strict mode;
+* ``relaxation=k`` switches the resolution to a replicated in-wave scan
+  that lets a dequeue take a *locally owned* lower-tier head (at most k
+  tiers below the strictly-best one) instead of a remote best-tier head —
+  bounded tier skew (never per-tier FIFO violation) traded for serves
+  that avoid the cross-shard hop, after arXiv:2503.02164.
+
+Differentially tested op-by-op against the host
+:class:`repro.core.priority.PriorityOracle` (same wave semantics,
+independent implementation).  :class:`ElasticDevicePriorityQueue` adds the
+PR 2 membership story: grow/shrink re-materializes every tier window with
+ONE packed migration all_to_all, and the per-tier layout (n_prios, cap,
+relaxation) is recorded in checkpoint manifests for cold-start resharding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from ..core.scan_queue import priority_queue_scan
+from .device_queue import TAG_GET, TAG_INACTIVE, TAG_PUT, _build_send_packed
+from .elastic import _ElasticBase, _dest_rank, _fanout_bound
+
+HASH_BALANCE_MAX_SIZE = 1 << 16
+
+
+class PriorityQueueState(NamedTuple):
+    firsts: jax.Array         # [P] replicated int32
+    lasts: jax.Array          # [P] replicated int32
+    store_vals: jax.Array     # [n_shards(sharded), P*cap + 1, W] int32
+    store_full: jax.Array     # [n_shards(sharded), P*cap + 1] bool
+
+    @property
+    def sizes(self) -> jax.Array:
+        return self.lasts - self.firsts + 1
+
+
+class DevicePriorityQueue:
+    """Distributed constant-priority queue over one mesh axis.
+
+    Args:
+      mesh/axis_name: the shard axis; n_prios: number of priority tiers P
+        (0 = most urgent); cap: slots per shard PER TIER; payload_width:
+        int32 words per element; ops_per_shard: wave width L;
+      relaxation: 0 = strict priority order; k > 0 allows a dequeue to be
+        served from a locally-owned head up to k tiers below the best
+        non-empty tier (see module docstring).
+    """
+
+    def __init__(self, mesh, axis_name: str = "data", n_prios: int = 2,
+                 cap: int = 1024, payload_width: int = 4,
+                 ops_per_shard: int = 64, relaxation: int = 0):
+        if n_prios < 1:
+            raise ValueError("need at least one priority tier")
+        self.mesh = mesh
+        self.axis = axis_name
+        self.n_shards = mesh.shape[axis_name]
+        self.n_prios = n_prios
+        self.cap = cap
+        self.W = payload_width
+        self.L = ops_per_shard
+        self.relaxation = relaxation
+        self._state_specs = PriorityQueueState(P(), P(), P(self.axis),
+                                               P(self.axis))
+        self._step = self._build_step()
+        self._run_waves = self._build_run_waves()
+
+    def init_state(self) -> PriorityQueueState:
+        n, cap, W, P_ = self.n_shards, self.cap, self.W, self.n_prios
+        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
+        rep = jax.sharding.NamedSharding(self.mesh, P())
+        return PriorityQueueState(
+            firsts=jax.device_put(jnp.zeros((P_,), jnp.int32), rep),
+            lasts=jax.device_put(jnp.full((P_,), -1, jnp.int32), rep),
+            store_vals=jax.device_put(
+                jnp.zeros((n, P_ * cap + 1, W), jnp.int32), sharding),
+            store_full=jax.device_put(
+                jnp.zeros((n, P_ * cap + 1), bool), sharding),
+        )
+
+    # ------------------------------------------------------- wave body -----
+    def _wave(self, state: PriorityQueueState, is_enq, valid, prio, payload):
+        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
+        P_, L = self.n_prios, is_enq.shape[0]
+        junk = P_ * cap
+
+        # ---- gather the op descriptors (5ish bits/op) and assign
+        #      replicated: every shard runs the same per-tier scans ----
+        code = (prio.astype(jnp.int32) * 4
+                + is_enq.astype(jnp.int32) * 2 + valid.astype(jnp.int32))
+        g = lax.all_gather(code, axis, tiled=True)          # [n_shards * L]
+        g_valid = (g & 1) > 0
+        g_enq = (g & 2) > 0
+        g_prio = g >> 2
+        n = g.shape[0]
+        shard_of = (jnp.arange(n, dtype=jnp.int32) // L)
+        tier_g, pos_g, matched_g, new_firsts, new_lasts, n_relaxed = (
+            priority_queue_scan(
+                g_enq, g_prio, g_valid, state.firsts, state.lasts,
+                n_prios=P_, relaxation=self.relaxation,
+                shard_of=shard_of, n_shards=n_shards))
+
+        i0 = lax.axis_index(axis) * L
+        tier = lax.dynamic_slice_in_dim(tier_g, i0, L)
+        pos = lax.dynamic_slice_in_dim(pos_g, i0, L)
+        matched = lax.dynamic_slice_in_dim(matched_g, i0, L)
+
+        owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
+        slot = jnp.where(matched, tier * cap + (pos // n_shards) % cap,
+                         junk).astype(jnp.int32)
+
+        # ---- stage 4 request: slot ‖ tag ‖ payload in ONE all_to_all ----
+        tag = jnp.where(matched & is_enq, TAG_PUT,
+                        jnp.where(matched & ~is_enq, TAG_GET, TAG_INACTIVE))
+        cols = jnp.concatenate(
+            [slot[:, None], tag.astype(jnp.int32)[:, None], payload], axis=1)
+        fill = jnp.concatenate(
+            [jnp.full((2,), junk, jnp.int32).at[1].set(TAG_INACTIVE),
+             jnp.zeros((W,), jnp.int32)])
+        send = _build_send_packed(owner, cols, matched, n_shards, fill)
+        recv = lax.all_to_all(send, axis, 0, 0, tiled=True)  # [n, L, 2+W]
+        r_slot, r_tag, r_vals = recv[..., 0], recv[..., 1], recv[..., 2:]
+
+        # ---- apply PUTs before GETs (same-wave ENQ visible to DEQ) ----
+        sv = state.store_vals[0]
+        sf = state.store_full[0]
+        put_slot = jnp.where(r_tag == TAG_PUT, r_slot, junk).reshape(-1)
+        sv = sv.at[put_slot].set(r_vals.reshape(-1, W))     # junk row eats
+        sf = sf.at[put_slot].set(True)
+        sf = sf.at[junk].set(False)
+
+        # ---- serve GETs and build the packed reply ----
+        is_get = r_tag == TAG_GET
+        get_slot = jnp.where(is_get, r_slot, junk)          # [n, L]
+        res_vals = sv[get_slot]
+        res_ok = is_get & sf[get_slot] & (get_slot < junk)
+        sf = sf.at[get_slot.reshape(-1)].set(False)         # remove on read
+        sf = sf.at[junk].set(False)
+        reply = jnp.concatenate(
+            [res_ok.astype(jnp.int32)[..., None], res_vals], axis=-1)
+        back = lax.all_to_all(reply, axis, 0, 0, tiled=True)
+
+        j = jnp.arange(L)
+        own_row = jnp.clip(owner, 0, n_shards - 1)
+        want_get = matched & (~is_enq)
+        deq_vals = jnp.where(want_get[:, None],
+                             back[own_row, j, 1:], jnp.int32(0))
+        deq_ok = want_get & (back[own_row, j, 0] > 0)
+
+        # capacity must hold at the post-enqueue peak (PUTs apply before
+        # GETs): a same-wave dequeue shrinking the size back under cap
+        # does NOT undo the head slot its enqueue already overwrote
+        overflow = ((new_lasts - state.firsts + 1) > n_shards * cap).any()
+        new_state = PriorityQueueState(new_firsts, new_lasts, sv[None],
+                                       sf[None])
+        return (new_state, tier, pos, matched, deq_vals, deq_ok, overflow,
+                n_relaxed)
+
+    # ------------------------------------------------------------ step -----
+    def _build_step(self):
+        specs = self._state_specs
+        wrapped = shard_map(
+            self._wave, mesh=self.mesh,
+            in_specs=(specs, P(self.axis), P(self.axis), P(self.axis),
+                      P(self.axis)),
+            out_specs=(specs, P(self.axis), P(self.axis), P(self.axis),
+                       P(self.axis), P(self.axis), P(), P()))
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+    def step(self, state: PriorityQueueState, is_enq, valid, prio, payload):
+        """Process one global wave.  The state argument is DONATED.
+
+        is_enq/valid: [n_shards * L] bool; prio: [n_shards * L] int32 in
+        [0, n_prios) (ignored for dequeues); payload: [n_shards * L, W].
+        Returns (new_state, tier, pos, matched, deq_vals, deq_ok, overflow,
+        n_relaxed) — tier/pos are -1/⊥ for unmatched ops.
+        """
+        return self._step(state, is_enq, valid, prio, payload)
+
+    # ------------------------------------------------------- multi-wave ----
+    def _build_run_waves(self):
+        specs = self._state_specs
+
+        def multi(state, is_enq, valid, prio, payload):
+            def wave(st, xs):
+                e, v, pr, pw = xs
+                st2, *out = self._wave(st, e, v, pr, pw)
+                return st2, tuple(out)
+            st, outs = lax.scan(wave, state, (is_enq, valid, prio, payload))
+            return (st,) + outs
+
+        wrapped = shard_map(
+            multi, mesh=self.mesh,
+            in_specs=(specs, P(None, self.axis), P(None, self.axis),
+                      P(None, self.axis), P(None, self.axis)),
+            out_specs=(specs, P(None, self.axis), P(None, self.axis),
+                       P(None, self.axis), P(None, self.axis),
+                       P(None, self.axis), P(None), P(None)))
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+    def run_waves(self, state: PriorityQueueState, is_enq, valid, prio,
+                  payload):
+        """K pre-staged waves in ONE lax.scan dispatch (state DONATED).
+
+        Shapes: is_enq/valid/prio [K, n_shards * L]; payload [K, ..., W].
+        """
+        return self._run_waves(state, is_enq, valid, prio, payload)
+
+
+class ElasticDevicePriorityQueue(_ElasticBase):
+    """P-tier priority queue whose shard count is a runtime variable.
+
+    Owns its state like :class:`~.elastic.ElasticDeviceQueue`; ``grow`` /
+    ``shrink`` / ``resize`` re-materialize every tier window onto the new
+    mesh with one packed migration all_to_all (the PR 2 wave, vectorized
+    over the P tier windows), and checkpoint manifests record the per-tier
+    layout so cold starts can reshard."""
+
+    _kind = "pqueue"
+    _pad_fill = (0, False)
+    _sharded_keys = frozenset({"store_vals", "store_full"})
+
+    def __init__(self, n_shards: int, *, n_prios: int = 2,
+                 relaxation: int = 0, axis_name: str = "data",
+                 cap: int = 1024, payload_width: int = 4,
+                 ops_per_shard: int = 64, devices=None,
+                 hlo_stats: bool = False):
+        self.n_prios = n_prios
+        self.relaxation = relaxation
+        super().__init__(n_shards, axis_name=axis_name, cap=cap,
+                         payload_width=payload_width,
+                         ops_per_shard=ops_per_shard, devices=devices,
+                         hlo_stats=hlo_stats)
+
+    def _make_inner(self, mesh):
+        return DevicePriorityQueue(mesh, self.axis, n_prios=self.n_prios,
+                                   cap=self.cap, payload_width=self.W,
+                                   ops_per_shard=self.L,
+                                   relaxation=self.relaxation)
+
+    # ------------------------------------------------------------ waves ----
+    def step(self, is_enq, valid, prio, payload):
+        """One wave on the current mesh; state is threaded internally.
+        Returns (tier, pos, matched, deq_vals, deq_ok, overflow,
+        n_relaxed)."""
+        self.state, *out = self.inner.step(
+            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
+            jnp.asarray(prio), jnp.asarray(payload))
+        return tuple(out)
+
+    def run_waves(self, is_enq, valid, prio, payload):
+        """K pre-staged waves in one dispatch (shapes [K, n_shards * L])."""
+        self.state, *out = self.inner.run_waves(
+            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
+            jnp.asarray(prio), jnp.asarray(payload))
+        return tuple(out)
+
+    @property
+    def sizes(self) -> list:
+        f = np.asarray(self.state.firsts)
+        l = np.asarray(self.state.lasts)
+        return [int(x) for x in (l - f + 1)]
+
+    @property
+    def size(self) -> int:
+        return sum(self.sizes)
+
+    # -------------------------------------------------------- migration ----
+    def _unpack(self, state):
+        return state.firsts, state.lasts, state.store_vals, state.store_full
+
+    def _pack(self, a, b, X, Y):
+        return PriorityQueueState(a, b, X, Y)
+
+    def _live_span(self) -> int:
+        # capacity check is per tier (each tier owns its own slot window)
+        return max([0] + [l - f + 1
+                          for f, l in zip(np.asarray(self.state.firsts),
+                                          np.asarray(self.state.lasts))])
+
+    def _hash_balance(self, P_new: int):
+        """Combined consistent-hashing fidelity report over every tier's
+        live window (positions from different tiers hash independently)."""
+        f = np.asarray(self.state.firsts)
+        l = np.asarray(self.state.lasts)
+        pos = np.concatenate([np.arange(lo, hi + 1)
+                              for lo, hi in zip(f, l)] or [np.zeros(0)])
+        if pos.size == 0 or pos.size > HASH_BALANCE_MAX_SIZE:
+            return None
+        from ..kernels.hash_route import hash_route_ref
+        _, counts = hash_route_ref(jnp.asarray(pos, jnp.int32),
+                                   jnp.ones((pos.size,), bool), P_new)
+        counts = np.asarray(counts)
+        return {"n": int(pos.size), "max": int(counts.max()),
+                "min": int(counts.min()),
+                "roundrobin_max": -(-int(pos.size) // P_new)}
+
+    @property
+    def _entry_bytes(self) -> int:
+        return 4 * (1 + self.W)  # slot ‖ payload columns
+
+    def _layout(self) -> dict:
+        return {**super()._layout(), "P": self.n_prios,
+                "relaxation": self.relaxation}
+
+    @classmethod
+    def _layout_kwargs(cls, lay: dict) -> dict:
+        return {**super()._layout_kwargs(lay), "n_prios": lay["P"],
+                "relaxation": lay.get("relaxation", 0)}
+
+    def _state_dict(self) -> dict:
+        return {"firsts": self.state.firsts, "lasts": self.state.lasts,
+                "store_vals": self.state.store_vals,
+                "store_full": self.state.store_full}
+
+    def _from_state_dict(self, d: dict):
+        return PriorityQueueState(d["firsts"], d["lasts"], d["store_vals"],
+                                  d["store_full"])
+
+    def _build_migration(self, mesh, P_old: int, P_new: int):
+        axis, cap, W, P_ = self.axis, self.cap, self.W, self.n_prios
+        n_mesh = mesh.shape[axis]
+        M = min(P_ * cap, P_ * _fanout_bound(P_old, P_new, cap))
+
+        def body(firsts, lasts, sv, sf):
+            s = lax.axis_index(axis).astype(jnp.int32)
+            u = jnp.arange(P_ * cap, dtype=jnp.int32)
+            tier = u // cap
+            t = u % cap
+            fp = firsts[tier]
+            # recover the tier-local position each occupied slot holds
+            # (unique in the tier's live window; PR 2 invariant per tier)
+            j_lo = -((s - fp) // P_old)
+            j = j_lo + jnp.mod(t - j_lo, cap)
+            p = s + P_old * j
+            live = sf[0, :P_ * cap] & (p >= fp) & (p <= lasts[tier])
+            owner = jnp.mod(p, P_new).astype(jnp.int32)
+            slot_new = (tier * cap + jnp.mod(p // P_new, cap)).astype(
+                jnp.int32)
+            rank = _dest_rank(owner, live, n_mesh)
+            lost = lax.pmax(
+                (live & (rank >= M)).any().astype(jnp.int32), axis) > 0
+            # ---- packed request: new_slot ‖ payload, one all_to_all ----
+            cols = jnp.concatenate([slot_new[:, None], sv[0, :P_ * cap]],
+                                   axis=1)
+            junk = P_ * cap
+            fill = jnp.zeros((1 + W,), jnp.int32).at[0].set(junk)
+            buf = jnp.zeros((n_mesh, M + 1, 1 + W), jnp.int32)
+            buf = buf.at[:, :, 0].set(junk)
+            d_i = jnp.where(live, owner, 0)
+            r_i = jnp.where(live, jnp.minimum(rank, M), M)
+            buf = buf.at[d_i, r_i].set(
+                jnp.where(live[:, None], cols, fill[None, :]))
+            recv = lax.all_to_all(buf[:, :M], axis, 0, 0, tiled=True)
+            # ---- rewrite the local store under the NEW layout ----
+            rs = recv[..., 0].reshape(-1)
+            rv = recv[..., 1:].reshape(-1, W)
+            nsv = jnp.zeros((junk + 1, W), jnp.int32).at[rs].set(rv)
+            nsv = nsv.at[junk].set(0)
+            nsf = jnp.zeros((junk + 1,), bool).at[rs].set(True)
+            nsf = nsf.at[junk].set(False)
+            moved = lax.psum(jnp.sum(live.astype(jnp.int32)), axis)
+            return firsts, lasts, nsv[None], nsf[None], moved, lost
+
+        specs = (P(), P(), P(axis), P(axis))
+        wrapped = shard_map(body, mesh=mesh, in_specs=specs,
+                            out_specs=specs + (P(), P()))
+        return jax.jit(wrapped, donate_argnums=(2, 3))

@@ -30,8 +30,8 @@ the K=1 special case and matches the seed per-step behavior bit for bit.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
 
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,6 @@
 from .failures import (ElasticPolicy, FailureInjector, ShardFailure,
-                       SimulatedFailure, run_with_restarts)
+                       SimulatedFailure, elastic_queue_policy,
+                       run_with_restarts)
 
 __all__ = ["ElasticPolicy", "FailureInjector", "ShardFailure",
-           "SimulatedFailure", "run_with_restarts"]
+           "SimulatedFailure", "elastic_queue_policy", "run_with_restarts"]

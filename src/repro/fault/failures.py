@@ -76,6 +76,21 @@ class ElasticPolicy:
     regrow_after: int = 0
 
 
+def elastic_queue_policy(queue, regrow_after: int = 0) -> ElasticPolicy:
+    """An :class:`ElasticPolicy` wired to any elastic queue wrapper
+    (``ElasticDeviceQueue`` / ``ElasticDeviceStack`` /
+    ``ElasticDevicePriorityQueue``): a
+    :class:`ShardFailure` LEAVEs the dead shard out of the queue fabric,
+    and recovery JOINs one replacement shard back after ``regrow_after``
+    healthy steps.  The training/serving state passes through untouched —
+    the queue re-materializes itself."""
+    return ElasticPolicy(
+        shrink=lambda state, shard: (queue.shrink([shard]), state)[1],
+        regrow=((lambda state: (queue.grow(1), state)[1])
+                if regrow_after > 0 else None),
+        regrow_after=regrow_after)
+
+
 def run_with_restarts(*, init_state: Callable[[], tuple],
                       step_fn: Callable[[tuple, int], tuple],
                       n_steps: int, ckpt_dir, ckpt_every: int = 10,

@@ -1,4 +1,5 @@
-from .ops import queue_scan_pallas
+from .ops import priority_queue_scan_pallas, queue_scan_pallas
 from .ref import queue_scan_ref
 
-__all__ = ["queue_scan_pallas", "queue_scan_ref"]
+__all__ = ["priority_queue_scan_pallas", "queue_scan_pallas",
+           "queue_scan_ref"]

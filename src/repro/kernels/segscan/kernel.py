@@ -19,8 +19,6 @@ involved (this is a VPU kernel).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax import lax

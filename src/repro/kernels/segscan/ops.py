@@ -27,3 +27,48 @@ def queue_scan_pallas(is_enq: jax.Array, valid: jax.Array,
         is_enq, valid, jnp.asarray(first), jnp.asarray(last),
         interpret=interpret)
     return pos[:n], matched[:n], nf, nl
+
+
+@functools.partial(jax.jit, static_argnames=("n_prios", "interpret"))
+def priority_queue_scan_pallas(is_enq: jax.Array, prio: jax.Array,
+                               valid: jax.Array, firsts: jax.Array,
+                               lasts: jax.Array, n_prios: int,
+                               interpret: bool = True):
+    """P-tier priority position assignment (strict mode) on the pallas path.
+
+    The per-tier enqueue scans — the O(n) part — run through
+    :func:`queue_scan_pallas` (one masked kernel invocation per tier; P is
+    a small static constant), and the wave's dequeues are then resolved
+    highest-priority-first by the batch-drain prefix arithmetic of
+    ``core.scan_queue.priority_queue_scan`` on the tiny per-tier totals.
+
+    is_enq/valid: [n] bool; prio: [n] int32; firsts/lasts: [n_prios] int32.
+    Returns (tier [n] int32 (-1 unmatched), pos [n] int32 (⊥ = -1),
+    matched [n] bool, new_firsts, new_lasts).
+    """
+    enq = is_enq & valid
+    deq = (~is_enq) & valid
+    tier = jnp.full(is_enq.shape, -1, jnp.int32)
+    pos = jnp.full(is_enq.shape, -1, jnp.int32)
+    new_lasts = []
+    for p in range(n_prios):
+        mask = enq & (prio == p)
+        pos_p, _, _, nl_p = queue_scan_pallas(mask, mask, firsts[p],
+                                              lasts[p], interpret=interpret)
+        tier = jnp.where(mask, p, tier)
+        pos = jnp.where(mask, pos_p, pos)
+        new_lasts.append(nl_p)
+    new_lasts = jnp.stack(new_lasts)
+    avail = new_lasts - firsts + 1
+    d_in = deq.astype(jnp.int32)
+    d_rank = jnp.cumsum(d_in) - d_in
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(avail)])
+    t_d = (d_rank[:, None] >= cum[None, 1:]).sum(1).astype(jnp.int32)
+    d_matched = deq & (t_d < n_prios)
+    t_c = jnp.minimum(t_d, n_prios - 1)
+    pos_d = firsts[t_c] + d_rank - cum[t_c]
+    taken = jnp.clip(d_in.sum() - cum[:-1], 0, avail)
+    tier = jnp.where(d_matched, t_c, tier)
+    pos = jnp.where(d_matched, pos_d, pos)
+    matched = enq | d_matched
+    return tier, pos, matched, firsts + taken, new_lasts

@@ -95,7 +95,6 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False,
     if kind == "train":
         mb = microbatch or MICROBATCH.get(
             arch, MICROBATCH["default"]).get(shape, 1)
-        result_mb = mb
         train_step = make_train_step(model, num_microbatches=mb)
         opt = jax.eval_shape(adamw_init, params)
         opt_sh = type(opt)(m=jax.tree.map(lambda s: s, p_sh),

@@ -47,7 +47,6 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-collective-kind output bytes (per device), plus op counts."""
     out: Dict[str, int] = defaultdict(int)
     counts: Dict[str, int] = defaultdict(int)
-    seen_done = set()
     for m in _OP_RE.finditer(hlo_text):
         shape_str, kind = m.group(1), m.group(2)
         # avoid double counting async start/done pairs: count "-start" ops and

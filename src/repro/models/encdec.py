@@ -7,11 +7,10 @@ encoder output.  Sinusoidal positions, scan-over-layers, remat.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..sharding import constraint
 from .costing import scan as cscan

@@ -8,8 +8,6 @@ multi-pod dry-run: XLA fuses it); the Pallas kernels are switched in with
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -138,7 +136,6 @@ def _sdpa_chunked(qg, kk, vv, positions, kv_positions, causal, window,
 
     qg: [B, S, KV, G, hd]; kk/vv: [B, T, KV, hd]."""
     B, S, KV, G, hd = qg.shape
-    T = kk.shape[1]
     scale = hd ** -0.5
     kf = kk.astype(jnp.float32)
     vf = vv.astype(jnp.float32)

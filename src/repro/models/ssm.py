@@ -10,11 +10,10 @@ replace the KV cache entirely — this is why mamba2/zamba2 run long_500k.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from .costing import scan as cscan
 from .layers import _dense_init, rms_norm

@@ -11,12 +11,10 @@ the param trees for sharding (repro.sharding.specs).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..sharding import constraint
 from .costing import scan as cscan

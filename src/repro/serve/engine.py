@@ -25,6 +25,15 @@ queue, re-materializes it onto the new shard count (every queued request id
 survives, FIFO order intact), and resumes bursts on the new mesh.  This is
 the elastic-serving story: scale the admission fabric with traffic, shed a
 failed shard without dropping queued work.
+
+Priority tiers (PR 3): ``ServeEngine(priorities=P)`` swaps the admission
+fabric for an :class:`~repro.dqueue.ElasticDevicePriorityQueue` —
+``submit(reqs, prio=...)`` stages requests into SLA tiers (0 = interactive,
+higher = batch), each step's fused wave admits higher tiers first (the
+queue's highest-priority-first wave resolution, NOT a host scheduler
+heuristic), and per-tier queue waits are tracked so mixed-load tail-latency
+separation is measurable (``tier_wait_stats``).  ``relaxation=k`` forwards
+Skeap's bounded tier-relaxation knob to the queue.
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..dqueue import ElasticDeviceQueue
+from ..dqueue import ElasticDeviceQueue, ElasticDevicePriorityQueue
 
 
 @dataclasses.dataclass
@@ -43,6 +52,7 @@ class Request:
     rid: int
     prompt: List[int]
     max_new: int = 8
+    prio: int = 0
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     enqueue_step: int = -1
@@ -52,16 +62,24 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, mesh, *, max_slots: int = 4,
-                 max_seq: int = 64, queue_cap: int = 256):
+                 max_seq: int = 64, queue_cap: int = 256,
+                 priorities: int = 1, relaxation: int = 0):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.mesh = mesh
         self.max_slots = max_slots
         self.max_seq = max_seq
-        self.queue = ElasticDeviceQueue(mesh.shape["data"], cap=queue_cap,
-                                        payload_width=2,
-                                        ops_per_shard=max(8, 2 * max_slots))
+        self.priorities = priorities
+        if priorities > 1:
+            self.queue = ElasticDevicePriorityQueue(
+                mesh.shape["data"], n_prios=priorities,
+                relaxation=relaxation, cap=queue_cap, payload_width=2,
+                ops_per_shard=max(8, 2 * max_slots))
+        else:
+            self.queue = ElasticDeviceQueue(mesh.shape["data"],
+                                            cap=queue_cap, payload_width=2,
+                                            ops_per_shard=max(8, 2 * max_slots))
         self.requests: Dict[int, Request] = {}
         self.slots: List[Optional[int]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)
@@ -80,18 +98,28 @@ class ServeEngine:
 
         self._decode = jax.jit(jax.vmap(
             _one, in_axes=(None, 1, 0, 0), out_axes=(0, 1)))
-        self.stats = {"served": 0, "queue_waits": []}
+        self.stats = {"served": 0, "queue_waits": [],
+                      "queue_waits_by_prio": {p: [] for
+                                              p in range(priorities)}}
 
     # ---------------------------------------------------------- frontend ---
-    def submit(self, reqs: List[Request]):
-        """Stage arrivals for the distributed FIFO.
+    def submit(self, reqs: List[Request], prio: Optional[int] = None):
+        """Stage arrivals for the distributed queue.
 
         They enter the queue on the next engine step, fused with that step's
         refill dequeues; oversized bursts are chunked across as many queue
         waves as needed (all inside one ``run_waves`` dispatch), so a submit
         can exceed ``n_shards * L`` requests without overflowing a wave.
+
+        With ``priorities > 1``, ``prio`` (or each request's ``.prio``
+        field) selects the SLA tier: 0 is served ahead of 1, etc.
         """
         for r in reqs:
+            if prio is not None:
+                r.prio = prio
+            if not 0 <= r.prio < self.priorities:
+                raise ValueError(f"request {r.rid} prio {r.prio} outside "
+                                 f"[0, {self.priorities})")
             self.requests[r.rid] = r
             r.enqueue_step = self.step_no
             self._staged.append(r.rid)
@@ -110,16 +138,23 @@ class ServeEngine:
         n_waves = 1 << (n_waves - 1).bit_length()
         is_enq = np.zeros((n_waves, n), bool)
         valid = np.zeros((n_waves, n), bool)
+        prio = np.zeros((n_waves, n), np.int32)
         payload = np.zeros((n_waves, n, 2), np.int32)
         for j, rid in enumerate(enq_rids):
             k, i = divmod(j, n)
             is_enq[k, i] = valid[k, i] = True
+            prio[k, i] = self.requests[rid].prio
             payload[k, i, 0] = rid
         for m in range(n_deq):
             k, i = divmod(len(enq_rids) + m, n)
             valid[k, i] = True  # dequeue request
-        pos, matched, dv, dok, ovf = self.queue.run_waves(
-            jnp.array(is_enq), jnp.array(valid), jnp.array(payload))
+        if self.priorities > 1:
+            _, _, _, dv, dok, ovf, _ = self.queue.run_waves(
+                jnp.array(is_enq), jnp.array(valid), jnp.array(prio),
+                jnp.array(payload))
+        else:
+            _, _, dv, dok, ovf = self.queue.run_waves(
+                jnp.array(is_enq), jnp.array(valid), jnp.array(payload))
         assert not bool(np.asarray(ovf).any())
         dv = np.asarray(dv).reshape(n_waves * n, 2)
         dok = np.asarray(dok).reshape(n_waves * n)
@@ -136,8 +171,24 @@ class ServeEngine:
             r = self.requests[rid]
             r.start_step = self.step_no
             self.stats["queue_waits"].append(r.start_step - r.enqueue_step)
+            self.stats["queue_waits_by_prio"][r.prio].append(
+                r.start_step - r.enqueue_step)
             self.slots[slot] = rid
             self.slot_pos[slot] = 0
+
+    def tier_wait_stats(self) -> Dict[int, dict]:
+        """Per-tier admission latency (engine steps from submit to slot):
+        count / mean / p50 / p99 — the mixed-load separation the priority
+        fabric exists to provide."""
+        out = {}
+        for p, waits in self.stats["queue_waits_by_prio"].items():
+            if not waits:
+                continue
+            w = np.asarray(waits, np.float64)
+            out[p] = {"n": len(waits), "mean": float(w.mean()),
+                      "p50": float(np.percentile(w, 50)),
+                      "p99": float(np.percentile(w, 99))}
+        return out
 
     # ----------------------------------------------------------- elastic ---
     def resize(self, n_shards: int) -> dict:

@@ -18,8 +18,8 @@ code stays pure and runs unsharded on CPU tests.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -9,12 +9,8 @@ EXPERIMENTS.md §Perf for the measured collective schedule.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..models.costing import scan as cscan
 from .optimizer import AdamWState, adamw_update, cosine_lr
@@ -27,7 +23,6 @@ def make_train_step(model, *, num_microbatches: int = 1,
 
     batch leaves have leading dim = global_batch; with microbatching they are
     reshaped to [M, gb/M, ...] and grads accumulate over a lax.scan (f32)."""
-    cfg = model.cfg
 
     def loss_fn(params, mb):
         return model.loss_fn(params, mb, remat=remat)

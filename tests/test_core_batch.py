@@ -1,15 +1,10 @@
 """Batch algebra (Definition 5) and interval stages (Sections III-D/E, VI)."""
-from collections import deque
-
-import numpy as np
-import pytest
 from _hyp import given, settings, strategies as st
 
 from repro.core import batch as B
 from repro.core.intervals import (AnchorState, BOTTOM, assign_queue,
                                   assign_stack, decompose_queue,
-                                  decompose_stack, positions_queue,
-                                  positions_stack)
+                                  positions_queue, positions_stack)
 
 
 def test_append_and_totals():

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core.hashing import hash01, position_key
-from repro.core.ldb import LDB, LEFT, MIDDLE, RIGHT
+from repro.core.ldb import LDB, MIDDLE, RIGHT
 from repro.core.ring import DynamicRing
 
 

@@ -4,15 +4,12 @@ import tempfile
 from pathlib import Path
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import (latest_step, load_checkpoint, restore_sharded,
-                              save_checkpoint)
+from repro.checkpoint import (latest_step, load_checkpoint, save_checkpoint)
 from repro.data import GlobalOrderPipeline, synthetic_tokens
-from repro.fault import FailureInjector, run_with_restarts
 from repro.launch.train import train_loop
 
 

@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 from _hyp import given, settings, strategies as st
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import attention_ref, flash_attention

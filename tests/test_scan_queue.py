@@ -1,16 +1,14 @@
 """TPU-native scan queue: associativity, equivalence with the sequential
 reference AND with the paper protocol's interval machinery."""
 import numpy as np
-import pytest
 from _hyp import given, settings, strategies as st
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import batch as B
 from repro.core.intervals import AnchorState, BOTTOM as IV_BOTTOM
 from repro.core.intervals import assign_queue, positions_queue
-from repro.core.scan_queue import (INF, QueueState, StackState, queue_compose,
+from repro.core.scan_queue import (QueueState, StackState, queue_compose,
                                    queue_op_transforms, queue_scan,
                                    stack_compose, stack_op_transforms,
                                    stack_scan)

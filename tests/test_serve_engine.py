@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
@@ -35,7 +34,6 @@ def test_engine_serves_all_requests(engine):
 def test_engine_fifo_admission(engine):
     eng, cfg = engine
     base = 100
-    rng = np.random.default_rng(1)
     first = [Request(rid=base + i, prompt=[1, 2], max_new=2)
              for i in range(4)]
     second = [Request(rid=base + 10 + i, prompt=[3, 4], max_new=2)
