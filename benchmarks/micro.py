@@ -27,6 +27,21 @@ Results go to ``BENCH_PR3.json``:
 
     PYTHONPATH=src python -m benchmarks.micro --pr3 [path] [--quick]
 
+PR 4 adds two measurements.  (a) The wave-pipelining benchmark: K-wave
+bursts through the unified WaveEngine with the sequential schedule
+(``pipelined=False``: request + reply all_to_all per wave, one wave at a
+time) vs. the software-pipelined schedule (``pipelined=True``: wave k's
+dispatch overlaps wave k-1's store rewrite and the two collectives fuse
+into ONE all_to_all per wave) — waves/sec and static collective counts
+for all three disciplines.  Results go to ``BENCH_PR4.json``:
+
+    PYTHONPATH=src python -m benchmarks.micro --pr4 [path] [--quick]
+
+(b) The ROADMAP relaxation study, folded into ``BENCH_PR3.json``: a
+``relaxation=k`` sweep (k in {0, 1, 2}) under tier-skewed traffic with
+per-shard dequeues, reporting the local-serve fraction (serves that avoid
+the cross-shard hop) against the tier skew it costs.
+
 ``--all [--quick]`` runs EVERY emitter above (the CI bench-smoke entry
 point: one invocation emits every BENCH_PR*.json, and any emitter crash
 fails the run — future PRs add an emitter here instead of editing the
@@ -485,10 +500,79 @@ def _measure_priority_mixed(n_dev: int, quick: bool = False) -> dict:
     }
 
 
+def _measure_relaxation_sweep(n_dev: int, quick: bool = False) -> dict:
+    """The ROADMAP relaxation study: what does ``relaxation=k`` buy?
+
+    Tier-skewed traffic (most arrivals in the low-urgency tiers, so the
+    best non-empty tier's head is usually remote) with one dequeue per
+    shard per wave.  For k in {0, 1, 2}: the fraction of serves that were
+    *local* (head owned by the issuing shard — the hop the relaxation
+    exists to avoid) vs. the tier skew it costs (served tier minus the
+    strictly-best tier at serve time, replayed exactly host-side)."""
+    from repro.compat import make_mesh
+    from repro.dqueue import DevicePriorityQueue
+
+    P_, L, W = 4, 8, 2
+    waves = 24 if quick else 96
+    tier_probs = np.array([0.1, 0.2, 0.3, 0.4])
+    mesh = make_mesh((n_dev,), ("data",))
+    n = n_dev * L
+    out = {}
+    for k in (0, 1, 2):
+        q = DevicePriorityQueue(mesh, "data", n_prios=P_, cap=4096,
+                                payload_width=W, ops_per_shard=L,
+                                relaxation=k)
+        state = q.init_state()
+        rng = np.random.default_rng(17)        # same traffic for every k
+        sizes = [0] * P_                       # host mirror of tier sizes
+        serves = local = relaxed = 0
+        skews = []
+        for w in range(waves):
+            e = np.zeros(n, bool)
+            v = np.zeros(n, bool)
+            pr = np.zeros(n, np.int32)
+            pw = np.zeros((n, W), np.int32)
+            n_arr = int(rng.integers(n_dev, n_dev + 4))
+            for j in range(n_arr):             # arrivals, tier-skewed, kept
+                i = (j // (L - 1)) * L + j % (L - 1)  # off the last slot of
+                e[i] = v[i] = True                    # each shard (reserved
+                pr[i] = rng.choice(P_, p=tier_probs)  # for its dequeue)
+            for s in range(n_dev):             # one dequeue per shard
+                v[s * L + L - 1] = True
+            state, tier, pos, m, dv, dok, ovf, nrel = q.step(
+                state, jnp.array(e), jnp.array(v), jnp.array(pr),
+                jnp.array(pw))
+            assert not bool(np.asarray(ovf))
+            tier, pos, m = map(np.asarray, (tier, pos, m))
+            relaxed += int(np.asarray(nrel))
+            # exact host replay, in wave order: enqueues first, then each
+            # dequeue sees the sizes left by the previous ones
+            for i in range(n):
+                if e[i] and m[i]:
+                    sizes[int(tier[i])] += 1
+            for i in range(n):
+                if v[i] and not e[i] and m[i]:
+                    best = next(p for p in range(P_) if sizes[p] > 0)
+                    t = int(tier[i])
+                    skews.append(t - best)
+                    sizes[t] -= 1
+                    serves += 1
+                    local += int(int(pos[i]) % n_dev == i // L)
+        out[f"k={k}"] = {
+            "serves": serves,
+            "local_serve_fraction": local / max(serves, 1),
+            "relaxed_fraction": relaxed / max(serves, 1),
+            "tier_skew_mean": float(np.mean(skews)) if skews else 0.0,
+            "tier_skew_max": int(max(skews)) if skews else 0,
+        }
+    return out
+
+
 def emit_bench_pr3(path: str = "BENCH_PR3.json", n_dev: int = 8,
                    quick: bool = False) -> dict:
-    """Measure priority-tier tail-latency separation under mixed load and
-    write JSON (re-execs on a forced ``n_dev``-device CPU mesh)."""
+    """Measure priority-tier tail-latency separation under mixed load plus
+    the relaxation=k sweep, and write JSON (re-execs on a forced
+    ``n_dev``-device CPU mesh)."""
     if not os.path.isabs(path):
         path = os.path.join(_REPO_ROOT, path)
     child = _reexec_on_mesh(
@@ -498,6 +582,93 @@ def emit_bench_pr3(path: str = "BENCH_PR3.json", n_dev: int = 8,
     if child is not None:
         return child
     data = _measure_priority_mixed(n_dev=n_dev, quick=quick)
+    data["relaxation_sweep"] = _measure_relaxation_sweep(n_dev=n_dev,
+                                                         quick=quick)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
+# ------------------------------ PR 4: unified engine, wave pipelining ------
+def _measure_pipelining(n_dev: int, K: int, ops_per_shard: int = 64,
+                        iters: int = 10, quick: bool = False) -> dict:
+    """K-wave bursts through the unified WaveEngine: the sequential burst
+    schedule vs. the software-pipelined one (wave k's dispatch overlapped
+    with wave k-1's store rewrite; request_k ‖ reply_{k-1} fused into ONE
+    all_to_all per wave), for all three disciplines.  Identical op
+    schedules, identical results — only the wave schedule differs."""
+    from repro.compat import make_mesh
+    from repro.dqueue import (DevicePriorityQueue, DeviceQueue, DeviceStack)
+    if quick:
+        K, iters = min(K, 8), 3
+    mesh = make_mesh((n_dev,), ("data",))
+    n = n_dev * ops_per_shard
+    cap = max(256, K * ops_per_shard // n_dev + 1)
+    rng = np.random.default_rng(5)
+    E = jnp.array(rng.random((K, n)) < 0.5)
+    V = jnp.ones((K, n), bool)
+    PR = jnp.array(rng.integers(0, 2, (K, n)), jnp.int32)
+    PW = jnp.array(rng.integers(0, 100, (K, n, 4)), jnp.int32)
+
+    def best_time(fn):
+        fn()  # warmup / compile
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    cases = {
+        "queue": (lambda p: DeviceQueue(
+            mesh, "data", cap=cap, payload_width=4,
+            ops_per_shard=ops_per_shard, pipelined=p), (E, V, PW)),
+        "stack": (lambda p: DeviceStack(
+            mesh, "data", cap=cap, payload_width=4,
+            ops_per_shard=ops_per_shard, slot_depth=4, pipelined=p),
+            (E, V, PW)),
+        "priority": (lambda p: DevicePriorityQueue(
+            mesh, "data", n_prios=2, cap=cap, payload_width=4,
+            ops_per_shard=ops_per_shard, pipelined=p), (E, V, PR, PW)),
+    }
+    out = {"n_dev": n_dev, "K": K, "ops_per_wave": n, "disciplines": {}}
+    for name, (make, args) in cases.items():
+        row = {}
+        for mode, q in (("sequential", make(False)),
+                        ("pipelined", make(True))):
+            def run(q=q):
+                res = q.run_waves(q.init_state(), *args)
+                jax.block_until_ready(jax.tree.leaves(res[0])[0])
+            t = best_time(run)
+            hlo_args = (q.init_state(),) + args
+            row[mode] = {
+                "waves_per_sec": K / t,
+                "us_per_wave": t / K * 1e6,
+                # static count for the whole K-wave program: sequential =
+                # 2 in the scan body; pipelined = 1 fused in the body + 1
+                # drain epilogue (amortized (K+1)/K per wave)
+                "all_to_all_static": count_all_to_all(q._run_waves,
+                                                      hlo_args),
+            }
+        row["speedup_waves_per_sec"] = (row["pipelined"]["waves_per_sec"]
+                                        / row["sequential"]["waves_per_sec"])
+        out["disciplines"][name] = row
+    return out
+
+
+def emit_bench_pr4(path: str = "BENCH_PR4.json", n_dev: int = 8,
+                   K: int = 32, quick: bool = False) -> dict:
+    """Measure pipelined vs. sequential burst schedules on the unified
+    engine and write JSON (re-execs on a forced ``n_dev`` CPU mesh)."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    child = _reexec_on_mesh(
+        "PR4", path, n_dev,
+        ["--pr4", path, "--n-dev", str(n_dev), "--waves", str(K)]
+        + (["--quick"] if quick else []))
+    if child is not None:
+        return child
+    data = _measure_pipelining(n_dev=n_dev, K=K, quick=quick)
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
     return data
@@ -513,6 +684,8 @@ def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
                 ("BENCH_PR2.json", lambda p: emit_bench_pr2(
                      p, n_dev=n_dev, quick=quick)),
                 ("BENCH_PR3.json", lambda p: emit_bench_pr3(
+                     p, n_dev=n_dev, quick=quick)),
+                ("BENCH_PR4.json", lambda p: emit_bench_pr4(
                      p, n_dev=n_dev, quick=quick))]
     out, failures = {}, []
     for path, emit in emitters:
@@ -574,6 +747,9 @@ if __name__ == "__main__":
     ap.add_argument("--pr3", nargs="?", const="BENCH_PR3.json", default=None,
                     help="measure priority-tier mixed-load latency and "
                          "write BENCH_PR3.json")
+    ap.add_argument("--pr4", nargs="?", const="BENCH_PR4.json", default=None,
+                    help="measure pipelined vs sequential wave bursts and "
+                         "write BENCH_PR4.json")
     ap.add_argument("--all", action="store_true",
                     help="run every BENCH_PR*.json emitter (CI bench smoke)")
     ap.add_argument("--quick", action="store_true",
@@ -594,6 +770,10 @@ if __name__ == "__main__":
         print(json.dumps(out, indent=2))
     elif cli.pr3:
         out = emit_bench_pr3(cli.pr3, n_dev=cli.n_dev, quick=cli.quick)
+        print(json.dumps(out, indent=2))
+    elif cli.pr4:
+        out = emit_bench_pr4(cli.pr4, n_dev=cli.n_dev, K=cli.waves,
+                             quick=cli.quick)
         print(json.dumps(out, indent=2))
     else:
         for row in run_all():

@@ -28,8 +28,10 @@ def section_1_priority_wave():
     print("== §1 priority wave: interactive ahead of a batch flood ==")
     n_dev = len(jax.devices())
     mesh = make_mesh((n_dev,), ("data",))
+    # the wave must fit the 12-element flood on ANY device count
     q = DevicePriorityQueue(mesh, "data", n_prios=2, cap=64,
-                            payload_width=1, ops_per_shard=8)
+                            payload_width=1,
+                            ops_per_shard=max(8, -(-12 // n_dev)))
     n = q.n_shards * q.L
     state = q.init_state()
 

@@ -189,6 +189,36 @@ def stack_scan(is_push: jax.Array, state: StackState,
 
 
 # -------------------------------------------------- priority-tier scan -----
+def strict_batch_deletemin(deq: jax.Array, avail: jax.Array,
+                           firsts: jax.Array, n_prios: int):
+    """Skeap's strict batch-DeleteMin assignment as prefix arithmetic.
+
+    The d-th dequeue of the wave (wave order) takes the d-th element of
+    the priority-ordered pool: dequeue ranks index into the per-tier
+    cumulative availability, no sequential loop.  Shared by
+    :func:`priority_queue_scan` and the pallas path
+    (``kernels.segscan.priority_queue_scan_pallas``).
+
+    Args:
+      deq: [n] bool — the wave's dequeue ops (global wave order);
+      avail: [n_prios] int32 — per-tier sizes AFTER the wave's enqueues;
+      firsts: [n_prios] int32 — per-tier head positions.
+    Returns:
+      (tier [n] int32 (clamped; gate with matched), pos [n] int32,
+      matched [n] bool, taken [n_prios] int32 — heads consumed per tier).
+    """
+    d_in = deq.astype(jnp.int32)
+    d_rank = jnp.cumsum(d_in) - d_in                # exclusive deq rank
+    cum = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(avail)])
+    t_d = (d_rank[:, None] >= cum[None, 1:]).sum(1).astype(jnp.int32)
+    matched = deq & (t_d < n_prios)
+    t_c = jnp.minimum(t_d, n_prios - 1)
+    pos = firsts[t_c] + d_rank - cum[t_c]
+    taken = jnp.clip(d_in.sum() - cum[:-1], 0, avail)
+    return t_c, pos, matched, taken
+
+
 def priority_queue_scan(is_enq: jax.Array, prio: jax.Array, valid: jax.Array,
                         firsts: jax.Array, lasts: jax.Array, *, n_prios: int,
                         relaxation: int = 0, shard_of: jax.Array | None = None,
@@ -243,15 +273,8 @@ def priority_queue_scan(is_enq: jax.Array, prio: jax.Array, valid: jax.Array,
 
     if relaxation == 0:
         # strict: pure per-tier prefix arithmetic, no sequential loop
-        d_in = deq.astype(jnp.int32)
-        d_rank = jnp.cumsum(d_in) - d_in                # exclusive deq rank
-        cum = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32), jnp.cumsum(avail)])
-        t_d = (d_rank[:, None] >= cum[None, 1:]).sum(1).astype(jnp.int32)
-        d_matched = deq & (t_d < P_)
-        t_c = jnp.minimum(t_d, P_ - 1)
-        pos_d = firsts[t_c] + d_rank - cum[t_c]
-        taken = jnp.clip(d_in.sum() - cum[:-1], 0, avail)
+        t_c, pos_d, d_matched, taken = strict_batch_deletemin(
+            deq, avail, firsts, P_)
         tier = jnp.where(d_matched, t_c, tier)
         pos = jnp.where(d_matched, pos_d, pos)
         matched = enq | d_matched

@@ -1,10 +1,15 @@
-from .device_queue import DeviceQueue, DeviceQueueState, DeviceStack
+from .device_queue import (DeviceQueue, DeviceQueueState, DeviceStack,
+                           FifoDiscipline, LifoDiscipline)
 from .elastic import ElasticDeviceQueue, ElasticDeviceStack
 from .priority_queue import (DevicePriorityQueue, ElasticDevicePriorityQueue,
-                             PriorityQueueState)
+                             PriorityDiscipline, PriorityQueueState)
+from .wave_engine import (Discipline, WaveEngine,
+                          post_enqueue_peak_overflow)
 from .work_queue import WorkQueue
 
 __all__ = ["DeviceQueue", "DeviceQueueState", "DeviceStack",
-           "DevicePriorityQueue", "ElasticDeviceQueue",
+           "DevicePriorityQueue", "Discipline", "ElasticDeviceQueue",
            "ElasticDevicePriorityQueue", "ElasticDeviceStack",
-           "PriorityQueueState", "WorkQueue"]
+           "FifoDiscipline", "LifoDiscipline", "PriorityDiscipline",
+           "PriorityQueueState", "WaveEngine", "WorkQueue",
+           "post_enqueue_peak_overflow"]

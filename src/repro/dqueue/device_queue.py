@@ -1,4 +1,4 @@
-"""Device-resident distributed queue: SKUEUE Stage 4 as fused all_to_all waves.
+"""Device-resident distributed queue/stack: disciplines over the WaveEngine.
 
 The element store is sharded across a mesh axis: position ``p`` lives on
 shard ``p % n_shards`` at slot ``(p // n_shards) % cap`` — a dense sharded
@@ -15,35 +15,28 @@ paper's GET-outruns-PUT asynchrony *by construction*; FIFO consistency
 guarantees a matched GET's element is present (enqueued this step or
 earlier).
 
-Fused-collective layout (PR 1)
-------------------------------
-Stage 4 costs exactly **two** ``all_to_all`` collectives per wave:
+As of PR 4 the wave body itself — packed two-collective Stage-4 layout,
+capacity check, store rewrite, multi-wave ``lax.scan`` driver, and the
+pipelined burst schedule — lives ONCE in
+:class:`~.wave_engine.WaveEngine`; this module defines only what is
+FIFO/LIFO-specific:
 
-* *request* direction — PUT and GET traffic share one int32 send buffer of
-  shape ``[n_shards, L, 2 + W]``; each op column packs
-  ``slot ‖ tag ‖ payload`` where ``tag`` is 0 = inactive, 1 = PUT,
-  2 = GET (payload words are don't-care for GETs).  Inactive entries carry
-  ``slot = cap``, the junk row every shard reserves past its ring.
-* *reply* direction — one ``[n_shards, L, 1 + W]`` buffer packing
-  ``ok ‖ value`` for GET responses (PUT entries reply with ``ok = 0``).
+* :class:`FifoDiscipline` — positions from the min-plus hypercube scan
+  (``core.scan_queue.sharded_queue_scan``), the shared dense-ring commit,
+  and the post-enqueue-peak capacity check;
+* :class:`LifoDiscipline` — positions/tickets from the max-plus stack
+  scan over one packed descriptor ``all_gather``, plus the (slot, depth)
+  ticket-set commit that makes concurrent pops conflict-free (each pop
+  takes the unique max ticket <= its bound).
 
-The seed implementation issued five collectives per wave (PUT slot, PUT
-vals, GET slot, GET reply vals, GET reply ok); that path is preserved as
-``fused=False`` so benchmarks and differential tests can compare against it.
+``run_waves`` executes K waves inside one device dispatch; with
+``pipelined=True`` (default) wave k's dispatch overlaps wave k-1's store
+rewrite and the request/reply collectives fuse to ONE ``all_to_all`` per
+wave in steady state (see the engine docstring) — bit-identical results,
+``pipelined=False`` keeps the sequential schedule for differential tests.
 
-Buffer donation and multi-wave scan driver
-------------------------------------------
-The jitted ``step``/``run_waves`` entry points donate the queue state
-(``donate_argnums=(0,)``), so the ``[n_shards, cap+1, W]`` store is updated
-in place instead of being copied every wave — callers must treat the
-passed-in state as consumed (every driver in this repo replaces it).
-
-``run_waves`` executes K waves inside one ``lax.scan`` over pre-staged
-``[K, n, ...]`` op batches and returns all K results at once: no host
-round-trip between waves, one device dispatch per K-wave burst.  Wave k's
-global order follows wave k-1's, so a [K, n] staging is exactly K
-back-to-back waves of the sequential queue semantics.
-
+The seed five-collective Stage 4 is preserved as ``DeviceQueue(fused=
+False)`` so benchmarks and differential tests can compare against it.
 Payloads are fixed-width int32 vectors (token ids / request descriptors);
 the serving engine keeps richer request metadata host-side keyed by payload.
 """
@@ -59,10 +52,9 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from ..core.scan_queue import (QueueState, StackState, sharded_queue_scan,
                                stack_scan)
-
-TAG_INACTIVE = 0
-TAG_PUT = 1
-TAG_GET = 2
+from .wave_engine import (TAG_GET, TAG_INACTIVE, TAG_PUT, Discipline,
+                          Dispatch, WaveEngine, build_send,
+                          post_enqueue_peak_overflow, ring_commit)
 
 
 class DeviceQueueState(NamedTuple):
@@ -76,21 +68,49 @@ class DeviceQueueState(NamedTuple):
         return self.last - self.first + 1
 
 
-def _build_send(owner, col_payload, active, n_shards, sentinel):
-    """Scatter local ops into a [n_shards, L, ...] send buffer by owner row."""
-    rows = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
-    hit = (rows == owner[None, :]) & active[None, :]
-    if col_payload.ndim == 1:
-        return jnp.where(hit, col_payload[None, :], sentinel)
-    return jnp.where(hit[..., None], col_payload[None, :, :], sentinel)
+# ------------------------------------------------------------ FIFO ---------
+class FifoDiscipline(Discipline):
+    """SKUEUE FIFO order: min-plus hypercube scan + dense-ring commit."""
 
+    n_ops = 3           # (is_enq, valid, payload)
+    n_disp_outs = 2     # (pos, matched)
 
-def _build_send_packed(owner, cols, active, n_shards, fill):
-    """Fused scatter: cols [L, C] into a [n_shards, L, C] send buffer; rows
-    not owned by a shard carry the ``fill`` [C] sentinel column."""
-    rows = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
-    hit = (rows == owner[None, :]) & active[None, :]
-    return jnp.where(hit[..., None], cols[None, :, :], fill[None, None, :])
+    def __init__(self, axis: str, n_shards: int, cap: int, W: int):
+        self.axis = axis
+        self.n_shards = n_shards
+        self.cap = cap
+        self.W = W
+        self.junk = cap
+        self.state_specs = DeviceQueueState(P(), P(), P(axis), P(axis))
+
+    def split(self, state):
+        return (state.first, state.last), (state.store_vals,
+                                           state.store_full)
+
+    def merge(self, carry, store):
+        return DeviceQueueState(carry[0], carry[1], store[0], store[1])
+
+    def dispatch(self, carry, ops) -> Dispatch:
+        is_enq, valid, payload = ops
+        pos, matched, new_qs = sharded_queue_scan(
+            is_enq, QueueState(carry[0], carry[1]), self.axis,
+            valid_local=valid)
+        owner = jnp.where(matched, pos % self.n_shards, -1).astype(jnp.int32)
+        slot = jnp.where(matched, (pos // self.n_shards) % self.cap,
+                         self.cap).astype(jnp.int32)
+        tag = jnp.where(matched & is_enq, TAG_PUT,
+                        jnp.where(matched & ~is_enq, TAG_GET, TAG_INACTIVE))
+        ovf = post_enqueue_peak_overflow(carry[0], new_qs.last,
+                                         self.n_shards * self.cap)
+        return Dispatch(owner, slot, tag, (), payload, matched,
+                        matched & ~is_enq, (pos, matched),
+                        (new_qs.first, new_qs.last), ovf, ())
+
+    def commit(self, store, recv):
+        return ring_commit(store, recv, self.junk, self.W)
+
+    def zero_outs(self, L: int) -> tuple:
+        return (jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
 
 
 class DeviceQueue:
@@ -99,13 +119,19 @@ class DeviceQueue:
     Args:
       mesh: jax Mesh; axis_name: the shard axis; cap: slots per shard;
       payload_width: int32 words per element; ops_per_shard: wave width L;
-      fused: two-collective fused Stage 4 (default) vs. the five-collective
-        seed path (kept for benchmarking and differential tests).
+      fused: two-collective fused Stage 4 via the WaveEngine (default) vs.
+        the five-collective seed path (kept for benchmarking and
+        differential tests);
+      pipelined: multi-wave bursts overlap wave k's dispatch with wave
+        k-1's store rewrite (one fused all_to_all per wave); False keeps
+        the sequential burst schedule.  Results are identical either way.
+        Only meaningful with ``fused=True`` — the seed path is always
+        sequential, and ``self.pipelined`` reports False there.
     """
 
     def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
                  payload_width: int = 4, ops_per_shard: int = 64,
-                 fused: bool = True):
+                 fused: bool = True, pipelined: bool = True):
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -113,10 +139,19 @@ class DeviceQueue:
         self.W = payload_width
         self.L = ops_per_shard
         self.fused = fused
+        self.pipelined = pipelined and fused  # the seed path is sequential
         self._state_specs = DeviceQueueState(P(), P(), P(self.axis),
                                              P(self.axis))
-        self._step = self._build_step()
-        self._run_waves = self._build_run_waves()
+        if fused:
+            self.engine = WaveEngine(
+                mesh, axis_name,
+                FifoDiscipline(axis_name, self.n_shards, cap, payload_width),
+                pipelined=pipelined)
+            self._step = self.engine._step
+            self._run_waves = self.engine._run_waves
+        else:
+            self._step = self._build_legacy_step()
+            self._run_waves = self._build_legacy_run_waves()
 
     def init_state(self) -> DeviceQueueState:
         n, cap, W = self.n_shards, self.cap, self.W
@@ -131,126 +166,7 @@ class DeviceQueue:
                 jnp.zeros((n, cap + 1), bool), sharding),
         )
 
-    # ------------------------------------------------------- wave bodies ---
-    def _assign(self, state: DeviceQueueState, is_enq, valid):
-        """Stages 1-3: position assignment by associative scan."""
-        qs = QueueState(state.first, state.last)
-        pos, matched, new_qs = sharded_queue_scan(
-            is_enq, qs, self.axis, valid_local=valid)
-        owner = jnp.where(matched, pos % self.n_shards, -1).astype(jnp.int32)
-        slot = jnp.where(matched, (pos // self.n_shards) % self.cap, self.cap)
-        return pos, matched, new_qs, owner, slot.astype(jnp.int32)
-
-    def _fused_wave(self, state: DeviceQueueState, is_enq, valid, payload):
-        """One wave, two collectives: packed request + packed reply."""
-        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
-        pos, matched, new_qs, owner, slot = self._assign(state, is_enq, valid)
-
-        # ---- stage 4 request: slot ‖ tag ‖ payload in ONE all_to_all ----
-        tag = jnp.where(matched & is_enq, TAG_PUT,
-                        jnp.where(matched & ~is_enq, TAG_GET, TAG_INACTIVE))
-        cols = jnp.concatenate(
-            [slot[:, None], tag.astype(jnp.int32)[:, None], payload], axis=1)
-        fill = jnp.concatenate(
-            [jnp.full((2,), cap, jnp.int32).at[1].set(TAG_INACTIVE),
-             jnp.zeros((W,), jnp.int32)])
-        send = _build_send_packed(owner, cols, matched, n_shards, fill)
-        recv = lax.all_to_all(send, axis, 0, 0, tiled=True)  # [n, L, 2+W]
-        r_slot, r_tag, r_vals = recv[..., 0], recv[..., 1], recv[..., 2:]
-
-        # ---- apply PUTs (before GETs: same-wave ENQ visible to DEQ) ----
-        sv = state.store_vals[0]   # local shard view inside shard_map
-        sf = state.store_full[0]
-        put_slot = jnp.where(r_tag == TAG_PUT, r_slot, cap).reshape(-1)
-        sv = sv.at[put_slot].set(r_vals.reshape(-1, W))  # cap row is junk
-        sf = sf.at[put_slot].set(True)
-        sf = sf.at[cap].set(False)
-
-        # ---- serve GETs and build the packed reply ----
-        is_get = r_tag == TAG_GET
-        get_slot = jnp.where(is_get, r_slot, cap)        # [n, L]
-        res_vals = sv[get_slot]                          # [n, L, W]
-        res_ok = is_get & sf[get_slot] & (get_slot < cap)
-        sf = sf.at[get_slot.reshape(-1)].set(False)      # remove on read
-        sf = sf.at[cap].set(False)
-        reply = jnp.concatenate(
-            [res_ok.astype(jnp.int32)[..., None], res_vals], axis=-1)
-        back = lax.all_to_all(reply, axis, 0, 0, tiled=True)  # [n, L, 1+W]
-
-        # local op j's reply sits at [owner[j], j]
-        j = jnp.arange(owner.shape[0])
-        own_row = jnp.clip(owner, 0, n_shards - 1)
-        want_get = matched & (~is_enq)
-        deq_vals = jnp.where(want_get[:, None],
-                             back[own_row, j, 1:], jnp.int32(0))
-        deq_ok = want_get & (back[own_row, j, 0] > 0)
-
-        # peak size is post-enqueue (PUTs apply before GETs): same-wave
-        # dequeues shrinking the size back under cap do not undo a head
-        # slot the wrapped-around enqueue already overwrote.  Only
-        # enqueues move ``last``, so new_qs.last - state.first is that peak.
-        overflow = (new_qs.last - state.first + 1) > n_shards * cap
-        return (DeviceQueueState(new_qs.first, new_qs.last, sv[None],
-                                 sf[None]),
-                pos, matched, deq_vals, deq_ok, overflow)
-
-    def _legacy_wave(self, state: DeviceQueueState, is_enq, valid, payload):
-        """The seed five-collective wave (benchmark/differential baseline)."""
-        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
-        pos, matched, new_qs, owner, slot = self._assign(state, is_enq, valid)
-
-        # ---- stage 4a: PUT dispatch (enqueues) ----
-        put_active = matched & is_enq
-        send_slot = _build_send(owner, slot, put_active, n_shards,
-                                jnp.int32(cap))
-        send_vals = _build_send(owner, payload, put_active, n_shards,
-                                jnp.int32(0))
-        recv_slot = lax.all_to_all(send_slot, axis, 0, 0, tiled=True)
-        recv_vals = lax.all_to_all(send_vals, axis, 0, 0, tiled=True)
-        flat_slot = recv_slot.reshape(-1)
-        flat_vals = recv_vals.reshape(-1, W)
-        sv = state.store_vals[0]
-        sf = state.store_full[0]
-        sv = sv.at[flat_slot].set(flat_vals)     # cap row is the junk row
-        sf = sf.at[flat_slot].set(True)
-        sf = sf.at[cap].set(False)
-
-        # ---- stage 4b: GET dispatch (dequeues) ----
-        get_active = matched & (~is_enq)
-        gsend = _build_send(owner, slot, get_active, n_shards,
-                            jnp.int32(cap))
-        grecv = lax.all_to_all(gsend, axis, 0, 0, tiled=True)
-        res_vals = sv[grecv]                      # [n_shards, L, W]
-        res_ok = sf[grecv] & (grecv < cap)
-        sf = sf.at[grecv.reshape(-1)].set(False)  # remove on read
-        sf = sf.at[cap].set(False)
-        back_vals = lax.all_to_all(res_vals, axis, 0, 0, tiled=True)
-        back_ok = lax.all_to_all(res_ok, axis, 0, 0, tiled=True)
-        j = jnp.arange(owner.shape[0])
-        own_row = jnp.clip(owner, 0, n_shards - 1)
-        deq_vals = jnp.where(get_active[:, None],
-                             back_vals[own_row, j], jnp.int32(0))
-        deq_ok = get_active & back_ok[own_row, j]
-
-        overflow = (new_qs.last - state.first + 1) > n_shards * cap
-        return (DeviceQueueState(new_qs.first, new_qs.last, sv[None],
-                                 sf[None]),
-                pos, matched, deq_vals, deq_ok, overflow)
-
-    def _wave_body(self):
-        return self._fused_wave if self.fused else self._legacy_wave
-
     # ------------------------------------------------------------ step -----
-    def _build_step(self):
-        body = self._wave_body()
-        state_specs = self._state_specs
-        wrapped = shard_map(
-            body, mesh=self.mesh,
-            in_specs=(state_specs, P(self.axis), P(self.axis), P(self.axis)),
-            out_specs=(state_specs, P(self.axis), P(self.axis), P(self.axis),
-                       P(self.axis), P()))
-        return jax.jit(wrapped, donate_argnums=(0,))
-
     def step(self, state: DeviceQueueState, is_enq: jax.Array,
              valid: jax.Array, payload: jax.Array):
         """Process one global batch.  The state argument is DONATED.
@@ -259,29 +175,6 @@ class DeviceQueue:
         Returns (new_state, positions, matched, deq_vals, deq_ok, overflow).
         """
         return self._step(state, is_enq, valid, payload)
-
-    # ------------------------------------------------------- multi-wave ----
-    def _build_run_waves(self):
-        body = self._wave_body()
-        state_specs = self._state_specs
-
-        def multi(state, is_enq, valid, payload):
-            # local shapes: is_enq/valid [K, L]; payload [K, L, W]
-            def wave(st, xs):
-                e, v, p = xs
-                st2, pos, matched, dv, dok, ovf = body(st, e, v, p)
-                return st2, (pos, matched, dv, dok, ovf)
-            st, (pos, matched, dv, dok, ovf) = lax.scan(
-                wave, state, (is_enq, valid, payload))
-            return st, pos, matched, dv, dok, ovf
-
-        wrapped = shard_map(
-            multi, mesh=self.mesh,
-            in_specs=(state_specs, P(None, self.axis), P(None, self.axis),
-                      P(None, self.axis)),
-            out_specs=(state_specs, P(None, self.axis), P(None, self.axis),
-                       P(None, self.axis), P(None, self.axis), P(None)))
-        return jax.jit(wrapped, donate_argnums=(0,))
 
     def run_waves(self, state: DeviceQueueState, is_enq: jax.Array,
                   valid: jax.Array, payload: jax.Array):
@@ -295,88 +188,152 @@ class DeviceQueue:
         """
         return self._run_waves(state, is_enq, valid, payload)
 
-
-class DeviceStack:
-    """Distributed LIFO (paper Sec. VI) over one mesh axis.
-
-    Positions are reused, so each store slot keeps a small (ticket, payload)
-    set of depth ``slot_depth``; the monotone ticket bound makes concurrent
-    pops conflict-free (each pop takes the unique max ticket <= its bound).
-
-    Stage 4 uses the same fused two-collective layout as :class:`DeviceQueue`
-    (request buffer packs ``slot ‖ ticket/bound ‖ tag ‖ payload``; reply
-    packs ``ok ‖ value``), replacing the seed's seven collectives per wave,
-    and the jitted entry points donate the stack state.  ``run_waves``
-    mirrors the queue's multi-wave lax.scan driver.
-    """
-
-    TAG_PUSH = 1
-    TAG_POP = 2
-
-    def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
-                 payload_width: int = 4, ops_per_shard: int = 64,
-                 slot_depth: int = 4):
-        self.mesh = mesh
-        self.axis = axis_name
-        self.n_shards = mesh.shape[axis_name]
-        self.cap = cap
-        self.W = payload_width
-        self.L = ops_per_shard
-        self.D = slot_depth
-        self._specs = {"last": P(), "ticket": P(), "vals": P(self.axis),
-                       "ticks": P(self.axis)}
-        self._step = self._build_step()
-        self._run_waves = self._build_run_waves()
-
-    def init_state(self):
-        n, cap, W, D = self.n_shards, self.cap, self.W, self.D
-        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
-        rep = jax.sharding.NamedSharding(self.mesh, P())
-        return {
-            "last": jax.device_put(jnp.int32(0), rep),
-            "ticket": jax.device_put(jnp.int32(0), rep),
-            "vals": jax.device_put(jnp.zeros((n, cap + 1, D, W), jnp.int32),
-                                   sharding),
-            "ticks": jax.device_put(jnp.full((n, cap + 1, D), -1, jnp.int32),
-                                    sharding),
-        }
-
-    def _wave(self, state, is_push, valid, payload):
-        axis, n_shards, cap, W, D = (self.axis, self.n_shards, self.cap,
-                                     self.W, self.D)
-        ss = StackState(state["last"], state["ticket"])
-        # global order over shards: reuse the queue hypercube by running
-        # the scan on the concatenated view via all_gather of transforms.
-        # (stack_scan is cheap: carries are 3 ints)
-        is_push_g = lax.all_gather(is_push, axis, tiled=True)
-        valid_g = lax.all_gather(valid, axis, tiled=True)
-        pos_g, tick_g, matched_g, new_ss = stack_scan(
-            is_push_g, ss, valid=valid_g)
-        i0 = lax.axis_index(axis) * is_push.shape[0]
-        pos = lax.dynamic_slice_in_dim(pos_g, i0, is_push.shape[0])
-        tick = lax.dynamic_slice_in_dim(tick_g, i0, is_push.shape[0])
-        matched = lax.dynamic_slice_in_dim(matched_g, i0,
-                                           is_push.shape[0])
-
+    # ------------------------------------------- legacy five-collective ----
+    def _legacy_wave(self, state: DeviceQueueState, is_enq, valid, payload):
+        """The seed five-collective wave (benchmark/differential baseline)."""
+        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
+        qs = QueueState(state.first, state.last)
+        pos, matched, new_qs = sharded_queue_scan(
+            is_enq, qs, axis, valid_local=valid)
         owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
         slot = jnp.where(matched, (pos // n_shards) % cap,
                          cap).astype(jnp.int32)
 
-        sv = state["vals"][0]    # [cap+1, D, W]
-        stk = state["ticks"][0]  # [cap+1, D]
+        # ---- stage 4a: PUT dispatch (enqueues) ----
+        put_active = matched & is_enq
+        send_slot = build_send(owner, slot, put_active, n_shards,
+                               jnp.int32(cap))
+        send_vals = build_send(owner, payload, put_active, n_shards,
+                               jnp.int32(0))
+        recv_slot = lax.all_to_all(send_slot, axis, 0, 0, tiled=True)
+        recv_vals = lax.all_to_all(send_vals, axis, 0, 0, tiled=True)
+        flat_slot = recv_slot.reshape(-1)
+        flat_vals = recv_vals.reshape(-1, W)
+        sv = state.store_vals[0]
+        sf = state.store_full[0]
+        sv = sv.at[flat_slot].set(flat_vals)     # cap row is the junk row
+        sf = sf.at[flat_slot].set(True)
+        sf = sf.at[cap].set(False)
 
-        # ---- fused request: slot ‖ ticket/bound ‖ tag ‖ payload ----
+        # ---- stage 4b: GET dispatch (dequeues) ----
+        get_active = matched & (~is_enq)
+        gsend = build_send(owner, slot, get_active, n_shards,
+                           jnp.int32(cap))
+        grecv = lax.all_to_all(gsend, axis, 0, 0, tiled=True)
+        res_vals = sv[grecv]                      # [n_shards, L, W]
+        res_ok = sf[grecv] & (grecv < cap)
+        sf = sf.at[grecv.reshape(-1)].set(False)  # remove on read
+        sf = sf.at[cap].set(False)
+        back_vals = lax.all_to_all(res_vals, axis, 0, 0, tiled=True)
+        back_ok = lax.all_to_all(res_ok, axis, 0, 0, tiled=True)
+        j = jnp.arange(owner.shape[0])
+        own_row = jnp.clip(owner, 0, n_shards - 1)
+        deq_vals = jnp.where(get_active[:, None],
+                             back_vals[own_row, j], jnp.int32(0))
+        deq_ok = get_active & back_ok[own_row, j]
+
+        overflow = post_enqueue_peak_overflow(state.first, new_qs.last,
+                                              n_shards * cap)
+        return (DeviceQueueState(new_qs.first, new_qs.last, sv[None],
+                                 sf[None]),
+                pos, matched, deq_vals, deq_ok, overflow)
+
+    def _build_legacy_step(self):
+        state_specs = self._state_specs
+        wrapped = shard_map(
+            self._legacy_wave, mesh=self.mesh,
+            in_specs=(state_specs, P(self.axis), P(self.axis), P(self.axis)),
+            out_specs=(state_specs, P(self.axis), P(self.axis), P(self.axis),
+                       P(self.axis), P()))
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+    def _build_legacy_run_waves(self):
+        state_specs = self._state_specs
+
+        def multi(state, is_enq, valid, payload):
+            def wave(st, xs):
+                e, v, p = xs
+                st2, pos, matched, dv, dok, ovf = self._legacy_wave(
+                    st, e, v, p)
+                return st2, (pos, matched, dv, dok, ovf)
+            st, (pos, matched, dv, dok, ovf) = lax.scan(
+                wave, state, (is_enq, valid, payload))
+            return st, pos, matched, dv, dok, ovf
+
+        wrapped = shard_map(
+            multi, mesh=self.mesh,
+            in_specs=(state_specs, P(None, self.axis), P(None, self.axis),
+                      P(None, self.axis)),
+            out_specs=(state_specs, P(None, self.axis), P(None, self.axis),
+                       P(None, self.axis), P(None, self.axis), P(None)))
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+
+# ------------------------------------------------------------ LIFO ---------
+class LifoDiscipline(Discipline):
+    """Stack order (paper Sec. VI): max-plus ticket scan + (slot, depth)
+    ticket-set commit.
+
+    Positions are reused, so each store slot keeps a small (ticket,
+    payload) set of depth ``D``; the monotone ticket bound makes
+    concurrent pops conflict-free (each pop takes the unique max ticket
+    <= its bound)."""
+
+    n_ops = 3           # (is_push, valid, payload)
+    n_disp_outs = 2     # (pos, matched)
+    extra_fill = (-1,)  # the ticket/bound request column
+
+    TAG_PUSH = TAG_PUT
+    TAG_POP = TAG_GET
+
+    def __init__(self, axis: str, n_shards: int, cap: int, W: int, D: int):
+        self.axis = axis
+        self.n_shards = n_shards
+        self.cap = cap
+        self.W = W
+        self.D = D
+        self.junk = cap
+        self.state_specs = {"last": P(), "ticket": P(), "vals": P(axis),
+                            "ticks": P(axis)}
+
+    def split(self, state):
+        return (state["last"], state["ticket"]), (state["vals"],
+                                                  state["ticks"])
+
+    def merge(self, carry, store):
+        return {"last": carry[0], "ticket": carry[1],
+                "vals": store[0], "ticks": store[1]}
+
+    def dispatch(self, carry, ops) -> Dispatch:
+        is_push, valid, payload = ops
+        n_shards, cap = self.n_shards, self.cap
+        # global order over shards: one packed descriptor all_gather, then
+        # the replicated max-plus scan (its carries are 3 ints — cheap)
+        code = (is_push.astype(jnp.int32) * 2 + valid.astype(jnp.int32))
+        g = lax.all_gather(code, self.axis, tiled=True)
+        pos_g, tick_g, matched_g, new_ss = stack_scan(
+            (g & 2) > 0, StackState(carry[0], carry[1]), valid=(g & 1) > 0)
+        L = is_push.shape[0]
+        i0 = lax.axis_index(self.axis) * L
+        pos = lax.dynamic_slice_in_dim(pos_g, i0, L)
+        tick = lax.dynamic_slice_in_dim(tick_g, i0, L)
+        matched = lax.dynamic_slice_in_dim(matched_g, i0, L)
+
+        owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
+        slot = jnp.where(matched, (pos // n_shards) % cap,
+                         cap).astype(jnp.int32)
         tag = jnp.where(matched & is_push, self.TAG_PUSH,
                         jnp.where(matched & ~is_push, self.TAG_POP,
                                   TAG_INACTIVE))
-        cols = jnp.concatenate(
-            [slot[:, None], tick[:, None], tag.astype(jnp.int32)[:, None],
-             payload], axis=1)
-        fill = jnp.concatenate(
-            [jnp.array([cap, -1, TAG_INACTIVE], jnp.int32),
-             jnp.zeros((W,), jnp.int32)])
-        send = _build_send_packed(owner, cols, matched, n_shards, fill)
-        recv = lax.all_to_all(send, axis, 0, 0, tiled=True)  # [n, L, 3+W]
+        return Dispatch(owner, slot, tag, (tick,), payload, matched,
+                        matched & ~is_push, (pos, matched),
+                        (new_ss.last, new_ss.ticket),
+                        jnp.zeros((), bool), ())   # capacity is commit-time
+
+    def commit(self, store, recv):
+        cap, W, D = self.cap, self.W, self.D
+        sv = store[0][0]     # [cap+1, D, W]
+        stk = store[1][0]    # [cap+1, D]
         r_all_slot, r_tb, r_tag = recv[..., 0], recv[..., 1], recv[..., 2]
         r_all_vals = recv[..., 3:]
 
@@ -409,7 +366,7 @@ class DeviceStack:
                        jnp.where(ok_ins[:, None], rv, sv[cap, D - 1]))
         slot_overflow = ((rt >= 0) & (rs < cap) & ~ok_ins).any()
         slot_overflow = lax.pmax(slot_overflow.astype(jnp.int32),
-                                 axis) > 0  # replicated flag
+                                 self.axis) > 0  # replicated flag
 
         # ---- POP picks: take max ticket <= bound at the slot ----
         is_pop_r = r_tag == self.TAG_POP
@@ -427,47 +384,60 @@ class DeviceStack:
                          jnp.where(got, -1, stk[cap, D - 1]))
         reply = jnp.concatenate(
             [got.astype(jnp.int32)[..., None], res_vals], axis=-1)
-        back = lax.all_to_all(reply, axis, 0, 0, tiled=True)
-        j = jnp.arange(owner.shape[0])
-        own_row = jnp.clip(owner, 0, n_shards - 1)
-        a_pop = matched & (~is_push)
-        pop_vals = jnp.where(a_pop[:, None],
-                             back[own_row, j, 1:], jnp.int32(0))
-        pop_ok = a_pop & (back[own_row, j, 0] > 0)
+        return (sv[None], stk[None]), reply, slot_overflow
 
-        new_state = {"last": new_ss.last, "ticket": new_ss.ticket,
-                     "vals": sv[None], "ticks": stk[None]}
-        return new_state, pos, matched, pop_vals, pop_ok, slot_overflow
+    def zero_outs(self, L: int) -> tuple:
+        return (jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
 
-    def _build_step(self):
-        wrapped = shard_map(
-            self._wave, mesh=self.mesh,
-            in_specs=(self._specs, P(self.axis), P(self.axis), P(self.axis)),
-            out_specs=(self._specs, P(self.axis), P(self.axis), P(self.axis),
-                       P(self.axis), P()))
-        return jax.jit(wrapped, donate_argnums=(0,))
+
+class DeviceStack:
+    """Distributed LIFO (paper Sec. VI) over one mesh axis.
+
+    Stage 4 uses the same fused two-collective layout as
+    :class:`DeviceQueue` (request packs ``slot ‖ ticket/bound ‖ tag ‖
+    payload``; reply packs ``ok ‖ value``) via the shared WaveEngine, and
+    the jitted entry points donate the stack state.  ``run_waves`` is the
+    engine's multi-wave driver — pipelined by default.
+    """
+
+    TAG_PUSH = LifoDiscipline.TAG_PUSH
+    TAG_POP = LifoDiscipline.TAG_POP
+
+    def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
+                 payload_width: int = 4, ops_per_shard: int = 64,
+                 slot_depth: int = 4, pipelined: bool = True):
+        self.mesh = mesh
+        self.axis = axis_name
+        self.n_shards = mesh.shape[axis_name]
+        self.cap = cap
+        self.W = payload_width
+        self.L = ops_per_shard
+        self.D = slot_depth
+        self.pipelined = pipelined
+        self.engine = WaveEngine(
+            mesh, axis_name,
+            LifoDiscipline(axis_name, self.n_shards, cap, payload_width,
+                           slot_depth),
+            pipelined=pipelined)
+        self._step = self.engine._step
+        self._run_waves = self.engine._run_waves
+
+    def init_state(self):
+        n, cap, W, D = self.n_shards, self.cap, self.W, self.D
+        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
+        rep = jax.sharding.NamedSharding(self.mesh, P())
+        return {
+            "last": jax.device_put(jnp.int32(0), rep),
+            "ticket": jax.device_put(jnp.int32(0), rep),
+            "vals": jax.device_put(jnp.zeros((n, cap + 1, D, W), jnp.int32),
+                                   sharding),
+            "ticks": jax.device_put(jnp.full((n, cap + 1, D), -1, jnp.int32),
+                                    sharding),
+        }
 
     def step(self, state, is_push, valid, payload):
         """One wave; the state argument is DONATED."""
         return self._step(state, is_push, valid, payload)
-
-    def _build_run_waves(self):
-        def multi(state, is_push, valid, payload):
-            def wave(st, xs):
-                e, v, p = xs
-                st2, pos, matched, pv, pok, ovf = self._wave(st, e, v, p)
-                return st2, (pos, matched, pv, pok, ovf)
-            st, (pos, matched, pv, pok, ovf) = lax.scan(
-                wave, state, (is_push, valid, payload))
-            return st, pos, matched, pv, pok, ovf
-
-        wrapped = shard_map(
-            multi, mesh=self.mesh,
-            in_specs=(self._specs, P(None, self.axis), P(None, self.axis),
-                      P(None, self.axis)),
-            out_specs=(self._specs, P(None, self.axis), P(None, self.axis),
-                       P(None, self.axis), P(None, self.axis), P(None)))
-        return jax.jit(wrapped, donate_argnums=(0,))
 
     def run_waves(self, state, is_push, valid, payload):
         """K pushes/pops waves in one lax.scan dispatch (state DONATED)."""

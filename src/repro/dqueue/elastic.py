@@ -29,8 +29,9 @@ shard ``s`` holds the unique ``p = s + P*j`` with ``j ≡ t (mod cap)`` and
    for the same live set is reported via ``kernels/hash_route`` in the
    migration stats),
 2. scatters ``new_slot ‖ payload`` columns into a packed per-destination
-   send buffer (the PR 1 ``_build_send_packed`` idiom, rank-within-
-   destination rows), moves everything with ONE ``lax.all_to_all``, and
+   send buffer (``wave_engine.migrate_packed``, the engine's packed-send
+   idiom with rank-within-destination rows), moves everything with ONE
+   ``lax.all_to_all``, and
 3. rewrites the receiving shards' stores; ``first``/``last`` (queue) and
    ``last``/``ticket`` (stack) interval bookkeeping pass through unchanged —
    membership changes never disturb the position order, which is the whole
@@ -58,7 +59,6 @@ when elasticity cannot help.
 from __future__ import annotations
 
 import json
-import math
 import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
@@ -72,29 +72,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from .device_queue import DeviceQueue, DeviceQueueState, DeviceStack
+from .wave_engine import (fanout_bound, migrate_packed, recover_positions,
+                          rewrite_ring_store)
 
 HASH_BALANCE_MAX_SIZE = 1 << 16  # skip the fidelity report for huge queues
-
-
-def _dest_rank(owner: jax.Array, live: jax.Array, n_mesh: int) -> jax.Array:
-    """Exclusive rank of each live entry among earlier entries with the same
-    destination — its row in the packed per-destination send buffer."""
-    ids = jnp.arange(n_mesh, dtype=jnp.int32)
-    oh = ((owner[:, None] == ids[None, :]) & live[:, None]).astype(jnp.int32)
-    excl = jnp.cumsum(oh, axis=0) - oh
-    return excl[jnp.arange(owner.shape[0]), jnp.clip(owner, 0, n_mesh - 1)]
-
-
-def _fanout_bound(P_old: int, P_new: int, cap: int) -> int:
-    """Max elements one source shard can owe one destination shard.
-
-    Live positions occupy a window of at most ``min(P_old, P_new) * cap``
-    consecutive integers (old occupancy and new capacity both bound it);
-    positions on shard ``s`` (mod P_old) owned by ``d`` (mod P_new) recur
-    with stride ``lcm(P_old, P_new)``."""
-    window = min(P_old, P_new) * cap
-    per_pair = -(-window // math.lcm(P_old, P_new))
-    return min(cap, per_pair + 1)  # +1 alignment slack
 
 
 def _mesh_key(devices) -> tuple:
@@ -110,7 +91,7 @@ class _ElasticBase:
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, devices=None,
-                 hlo_stats: bool = False):
+                 hlo_stats: bool = False, pipelined: bool = True):
         self._pool = list(devices) if devices is not None else list(jax.devices())
         if not 1 <= n_shards <= len(self._pool):
             raise ValueError(f"n_shards={n_shards} outside the device pool "
@@ -119,6 +100,7 @@ class _ElasticBase:
         self.cap = cap
         self.W = payload_width
         self.L = ops_per_shard
+        self.pipelined = pipelined
         self._hlo_stats = hlo_stats
         self._active = list(self._pool[:n_shards])
         self._mesh_cache: Dict[tuple, jax.sharding.Mesh] = {}
@@ -389,17 +371,18 @@ class ElasticDeviceQueue(_ElasticBase):
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, fused: bool = True,
-                 devices=None, hlo_stats: bool = False):
+                 devices=None, hlo_stats: bool = False,
+                 pipelined: bool = True):
         self.fused = fused
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
-                         hlo_stats=hlo_stats)
+                         hlo_stats=hlo_stats, pipelined=pipelined)
 
     def _make_inner(self, mesh):
         return DeviceQueue(mesh, self.axis, cap=self.cap,
                            payload_width=self.W, ops_per_shard=self.L,
-                           fused=self.fused)
+                           fused=self.fused, pipelined=self.pipelined)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, payload):
@@ -451,41 +434,24 @@ class ElasticDeviceQueue(_ElasticBase):
     def _build_migration(self, mesh, P_old: int, P_new: int):
         axis, cap, W = self.axis, self.cap, self.W
         n_mesh = mesh.shape[axis]
-        M = _fanout_bound(P_old, P_new, cap)
+        M = fanout_bound(P_old, P_new, cap)
 
         def body(first, last, sv, sf):
             s = lax.axis_index(axis).astype(jnp.int32)
             t = jnp.arange(cap, dtype=jnp.int32)
             # recover the position each occupied slot holds (unique in the
             # live window [first, last]; see module docstring)
-            j_lo = -((s - first) // P_old)
-            j = j_lo + jnp.mod(t - j_lo, cap)
-            p = s + P_old * j
+            p = recover_positions(s, t, first, P_old, cap)
             live = sf[0, :cap] & (p >= first) & (p <= last)
             owner = jnp.mod(p, P_new).astype(jnp.int32)
             slot_new = jnp.mod(p // P_new, cap).astype(jnp.int32)
-            rank = _dest_rank(owner, live, n_mesh)
-            lost = lax.pmax(
-                (live & (rank >= M)).any().astype(jnp.int32), axis) > 0
             # ---- packed request: new_slot ‖ payload, one all_to_all ----
             cols = jnp.concatenate([slot_new[:, None], sv[0, :cap]], axis=1)
             fill = jnp.zeros((1 + W,), jnp.int32).at[0].set(cap)
-            buf = jnp.zeros((n_mesh, M + 1, 1 + W), jnp.int32)
-            buf = buf.at[:, :, 0].set(cap)
-            d_i = jnp.where(live, owner, 0)
-            r_i = jnp.where(live, jnp.minimum(rank, M), M)
-            buf = buf.at[d_i, r_i].set(
-                jnp.where(live[:, None], cols, fill[None, :]))
-            recv = lax.all_to_all(buf[:, :M], axis, 0, 0, tiled=True)
-            # ---- rewrite the local store under the NEW layout ----
-            rs = recv[..., 0].reshape(-1)  # cap = junk row sentinel
-            rv = recv[..., 1:].reshape(-1, W)
-            nsv = jnp.zeros((cap + 1, W), jnp.int32).at[rs].set(rv)
-            nsv = nsv.at[cap].set(0)
-            nsf = jnp.zeros((cap + 1,), bool).at[rs].set(True)
-            nsf = nsf.at[cap].set(False)
-            moved = lax.psum(jnp.sum(live.astype(jnp.int32)), axis)
-            return first, last, nsv[None], nsf[None], moved, lost
+            rows, moved, lost = migrate_packed(axis, n_mesh, M, live, owner,
+                                               cols, fill)
+            nsv, nsf = rewrite_ring_store(rows, cap, W)
+            return first, last, nsv, nsf, moved, lost
 
         specs = (P(), P(), P(axis), P(axis))
         wrapped = shard_map(body, mesh=mesh, in_specs=specs,
@@ -509,17 +475,18 @@ class ElasticDeviceStack(_ElasticBase):
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, slot_depth: int = 4,
-                 devices=None, hlo_stats: bool = False):
+                 devices=None, hlo_stats: bool = False,
+                 pipelined: bool = True):
         self.D = slot_depth
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
-                         hlo_stats=hlo_stats)
+                         hlo_stats=hlo_stats, pipelined=pipelined)
 
     def _make_inner(self, mesh):
         return DeviceStack(mesh, self.axis, cap=self.cap,
                            payload_width=self.W, ops_per_shard=self.L,
-                           slot_depth=self.D)
+                           slot_depth=self.D, pipelined=self.pipelined)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_push, valid, payload):
@@ -572,48 +539,32 @@ class ElasticDeviceStack(_ElasticBase):
     def _build_migration(self, mesh, P_old: int, P_new: int):
         axis, cap, W, D = self.axis, self.cap, self.W, self.D
         n_mesh = mesh.shape[axis]
-        M = min(cap * D, _fanout_bound(P_old, P_new, cap) * D)
+        M = min(cap * D, fanout_bound(P_old, P_new, cap) * D)
 
         def body(last, ticket, sv, stk):
             s = lax.axis_index(axis).astype(jnp.int32)
             t = jnp.arange(cap, dtype=jnp.int32)
-            j_lo = -((s - 1) // P_old)  # stack positions start at 1
-            j = j_lo + jnp.mod(t - j_lo, cap)
-            p = s + P_old * j
+            p = recover_positions(s, t, 1, P_old, cap)  # positions start at 1
             in_range = (p >= 1) & (p <= last)
             owner = jnp.mod(p, P_new).astype(jnp.int32)
             slot_new = jnp.mod(p // P_new, cap).astype(jnp.int32)
             ticks = stk[0, :cap]                             # [cap, D]
             live = ((ticks >= 0) & in_range[:, None]).reshape(-1)
             dep = jnp.tile(jnp.arange(D, dtype=jnp.int32), cap)
-            own_f = jnp.repeat(owner, D)
-            slot_f = jnp.repeat(slot_new, D)
-            tick_f = ticks.reshape(-1)
-            vals_f = sv[0, :cap].reshape(-1, W)
-            rank = _dest_rank(own_f, live, n_mesh)
-            lost = lax.pmax(
-                (live & (rank >= M)).any().astype(jnp.int32), axis) > 0
             # ---- packed request: slot ‖ depth ‖ ticket ‖ payload ----
             cols = jnp.concatenate(
-                [slot_f[:, None], dep[:, None], tick_f[:, None], vals_f],
+                [jnp.repeat(slot_new, D)[:, None], dep[:, None],
+                 ticks.reshape(-1)[:, None], sv[0, :cap].reshape(-1, W)],
                 axis=1)
             fill = jnp.zeros((3 + W,), jnp.int32).at[0].set(cap).at[2].set(-1)
-            buf = jnp.zeros((n_mesh, M + 1, 3 + W), jnp.int32)
-            buf = buf.at[:, :, 0].set(cap).at[:, :, 2].set(-1)
-            d_i = jnp.where(live, own_f, 0)
-            r_i = jnp.where(live, jnp.minimum(rank, M), M)
-            buf = buf.at[d_i, r_i].set(
-                jnp.where(live[:, None], cols, fill[None, :]))
-            recv = lax.all_to_all(buf[:, :M], axis, 0, 0, tiled=True)
-            rs = recv[..., 0].reshape(-1)
-            rd = recv[..., 1].reshape(-1)
-            rt = recv[..., 2].reshape(-1)
-            rv = recv[..., 3:].reshape(-1, W)
+            rows, moved, lost = migrate_packed(
+                axis, n_mesh, M, live, jnp.repeat(owner, D), cols, fill)
+            rs, rd, rt = rows[:, 0], rows[:, 1], rows[:, 2]
+            rv = rows[:, 3:]
             nstk = jnp.full((cap + 1, D), -1, jnp.int32).at[rs, rd].set(rt)
             nstk = nstk.at[cap].set(-1)
             nsv = jnp.zeros((cap + 1, D, W), jnp.int32).at[rs, rd].set(rv)
             nsv = nsv.at[cap].set(0)
-            moved = lax.psum(jnp.sum(live.astype(jnp.int32)), axis)
             return last, ticket, nsv[None], nstk[None], moved, lost
 
         specs = (P(), P(), P(axis), P(axis))

@@ -3,17 +3,20 @@
 Skeap (arXiv:1805.03472) extends SKUEUE's batch-aggregation protocol to
 distributed priority queues; in the constant-priority regime the queue is
 P independent SKUEUE position intervals tie-broken by tier.  This module is
-that design on the PR 1 device path: the sharded ring store gains one
-round-robin slot *window per tier* — tier ``p``'s position ``q`` lives on
-shard ``q % n_shards`` at slot ``p * cap + (q // n_shards) % cap`` — and
-Stage-4 dispatch stays TWO fused ``all_to_all`` collectives per wave (one
-packed ``slot ‖ tag ‖ payload`` request, one ``ok ‖ value`` reply; the
-slot already encodes the tier window, so nothing else changes on the wire).
+that design as a :class:`~.wave_engine.WaveEngine` discipline: the sharded
+ring store gains one round-robin slot *window per tier* — tier ``p``'s
+position ``q`` lives on shard ``q % n_shards`` at slot
+``p * cap + (q // n_shards) % cap`` — and Stage-4 dispatch stays TWO fused
+``all_to_all`` collectives per wave (ONE per wave in the pipelined burst
+schedule; the slot already encodes the tier window, so nothing else
+changes on the wire).
 
-Op descriptors (enq/valid/prio: 5 bits per op) ride one tiny ``all_gather``
-— the same trick :class:`~.device_queue.DeviceStack` uses for its global
-scan — after which position assignment is fully replicated:
+Only the *dispatch* differs from FIFO (the commit is the shared dense-ring
+rewrite, :func:`~.wave_engine.ring_commit`):
 
+* op descriptors (enq/valid/prio: 5 bits per op) ride one tiny
+  ``all_gather`` — the same trick the stack discipline uses — after which
+  position assignment is fully replicated;
 * enqueues get per-tier FIFO positions from P masked min-plus scans
   (``core.scan_queue.priority_queue_scan``, reusing the PR 1 transforms);
 * the wave's dequeues are resolved highest-priority-first *inside the
@@ -46,8 +49,11 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
 from ..core.scan_queue import priority_queue_scan
-from .device_queue import TAG_GET, TAG_INACTIVE, TAG_PUT, _build_send_packed
-from .elastic import _ElasticBase, _dest_rank, _fanout_bound
+from .elastic import _ElasticBase
+from .wave_engine import (Discipline, Dispatch, TAG_GET, TAG_INACTIVE,
+                          TAG_PUT, WaveEngine, fanout_bound, migrate_packed,
+                          post_enqueue_peak_overflow, recover_positions,
+                          rewrite_ring_store, ring_commit)
 
 HASH_BALANCE_MAX_SIZE = 1 << 16
 
@@ -63,6 +69,77 @@ class PriorityQueueState(NamedTuple):
         return self.lasts - self.firsts + 1
 
 
+class PriorityDiscipline(Discipline):
+    """Skeap constant-priority order: P masked min-plus scans + in-wave
+    batch-DeleteMin dequeue resolution over the shared dense-ring store."""
+
+    n_ops = 4           # (is_enq, valid, prio, payload)
+    n_disp_outs = 3     # (tier, pos, matched)
+    n_aux = 1           # n_relaxed
+
+    def __init__(self, axis: str, n_shards: int, n_prios: int, cap: int,
+                 W: int, relaxation: int):
+        self.axis = axis
+        self.n_shards = n_shards
+        self.n_prios = n_prios
+        self.cap = cap
+        self.W = W
+        self.relaxation = relaxation
+        self.junk = n_prios * cap
+        self.state_specs = PriorityQueueState(P(), P(), P(axis), P(axis))
+
+    def split(self, state):
+        return (state.firsts, state.lasts), (state.store_vals,
+                                             state.store_full)
+
+    def merge(self, carry, store):
+        return PriorityQueueState(carry[0], carry[1], store[0], store[1])
+
+    def dispatch(self, carry, ops) -> Dispatch:
+        is_enq, valid, prio, payload = ops
+        firsts, lasts = carry
+        n_shards, cap, P_ = self.n_shards, self.cap, self.n_prios
+        L = is_enq.shape[0]
+
+        # ---- gather the op descriptors (5ish bits/op) and assign
+        #      replicated: every shard runs the same per-tier scans ----
+        code = (prio.astype(jnp.int32) * 4
+                + is_enq.astype(jnp.int32) * 2 + valid.astype(jnp.int32))
+        g = lax.all_gather(code, self.axis, tiled=True)     # [n_shards * L]
+        shard_of = (jnp.arange(g.shape[0], dtype=jnp.int32) // L)
+        tier_g, pos_g, matched_g, new_firsts, new_lasts, n_relaxed = (
+            priority_queue_scan(
+                (g & 2) > 0, g >> 2, (g & 1) > 0, firsts, lasts,
+                n_prios=P_, relaxation=self.relaxation,
+                shard_of=shard_of, n_shards=n_shards))
+
+        i0 = lax.axis_index(self.axis) * L
+        tier = lax.dynamic_slice_in_dim(tier_g, i0, L)
+        pos = lax.dynamic_slice_in_dim(pos_g, i0, L)
+        matched = lax.dynamic_slice_in_dim(matched_g, i0, L)
+
+        owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
+        slot = jnp.where(matched, tier * cap + (pos // n_shards) % cap,
+                         self.junk).astype(jnp.int32)
+        tag = jnp.where(matched & is_enq, TAG_PUT,
+                        jnp.where(matched & ~is_enq, TAG_GET, TAG_INACTIVE))
+        # capacity holds per tier (each tier owns its own slot window)
+        ovf = post_enqueue_peak_overflow(firsts, new_lasts, n_shards * cap)
+        return Dispatch(owner, slot, tag, (), payload, matched,
+                        matched & ~is_enq, (tier, pos, matched),
+                        (new_firsts, new_lasts), ovf, (n_relaxed,))
+
+    def commit(self, store, recv):
+        return ring_commit(store, recv, self.junk, self.W)
+
+    def zero_outs(self, L: int) -> tuple:
+        return (jnp.full((L,), -1, jnp.int32),
+                jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
+
+    def zero_aux(self) -> tuple:
+        return (jnp.int32(0),)
+
+
 class DevicePriorityQueue:
     """Distributed constant-priority queue over one mesh axis.
 
@@ -72,12 +149,15 @@ class DevicePriorityQueue:
         int32 words per element; ops_per_shard: wave width L;
       relaxation: 0 = strict priority order; k > 0 allows a dequeue to be
         served from a locally-owned head up to k tiers below the best
-        non-empty tier (see module docstring).
+        non-empty tier (see module docstring);
+      pipelined: multi-wave bursts use the engine's software-pipelined
+        schedule (False = sequential; results identical).
     """
 
     def __init__(self, mesh, axis_name: str = "data", n_prios: int = 2,
                  cap: int = 1024, payload_width: int = 4,
-                 ops_per_shard: int = 64, relaxation: int = 0):
+                 ops_per_shard: int = 64, relaxation: int = 0,
+                 pipelined: bool = True):
         if n_prios < 1:
             raise ValueError("need at least one priority tier")
         self.mesh = mesh
@@ -88,10 +168,14 @@ class DevicePriorityQueue:
         self.W = payload_width
         self.L = ops_per_shard
         self.relaxation = relaxation
-        self._state_specs = PriorityQueueState(P(), P(), P(self.axis),
-                                               P(self.axis))
-        self._step = self._build_step()
-        self._run_waves = self._build_run_waves()
+        self.pipelined = pipelined
+        self.engine = WaveEngine(
+            mesh, axis_name,
+            PriorityDiscipline(axis_name, self.n_shards, n_prios, cap,
+                               payload_width, relaxation),
+            pipelined=pipelined)
+        self._step = self.engine._step
+        self._run_waves = self.engine._run_waves
 
     def init_state(self) -> PriorityQueueState:
         n, cap, W, P_ = self.n_shards, self.cap, self.W, self.n_prios
@@ -106,95 +190,6 @@ class DevicePriorityQueue:
                 jnp.zeros((n, P_ * cap + 1), bool), sharding),
         )
 
-    # ------------------------------------------------------- wave body -----
-    def _wave(self, state: PriorityQueueState, is_enq, valid, prio, payload):
-        axis, n_shards, cap, W = self.axis, self.n_shards, self.cap, self.W
-        P_, L = self.n_prios, is_enq.shape[0]
-        junk = P_ * cap
-
-        # ---- gather the op descriptors (5ish bits/op) and assign
-        #      replicated: every shard runs the same per-tier scans ----
-        code = (prio.astype(jnp.int32) * 4
-                + is_enq.astype(jnp.int32) * 2 + valid.astype(jnp.int32))
-        g = lax.all_gather(code, axis, tiled=True)          # [n_shards * L]
-        g_valid = (g & 1) > 0
-        g_enq = (g & 2) > 0
-        g_prio = g >> 2
-        n = g.shape[0]
-        shard_of = (jnp.arange(n, dtype=jnp.int32) // L)
-        tier_g, pos_g, matched_g, new_firsts, new_lasts, n_relaxed = (
-            priority_queue_scan(
-                g_enq, g_prio, g_valid, state.firsts, state.lasts,
-                n_prios=P_, relaxation=self.relaxation,
-                shard_of=shard_of, n_shards=n_shards))
-
-        i0 = lax.axis_index(axis) * L
-        tier = lax.dynamic_slice_in_dim(tier_g, i0, L)
-        pos = lax.dynamic_slice_in_dim(pos_g, i0, L)
-        matched = lax.dynamic_slice_in_dim(matched_g, i0, L)
-
-        owner = jnp.where(matched, pos % n_shards, -1).astype(jnp.int32)
-        slot = jnp.where(matched, tier * cap + (pos // n_shards) % cap,
-                         junk).astype(jnp.int32)
-
-        # ---- stage 4 request: slot ‖ tag ‖ payload in ONE all_to_all ----
-        tag = jnp.where(matched & is_enq, TAG_PUT,
-                        jnp.where(matched & ~is_enq, TAG_GET, TAG_INACTIVE))
-        cols = jnp.concatenate(
-            [slot[:, None], tag.astype(jnp.int32)[:, None], payload], axis=1)
-        fill = jnp.concatenate(
-            [jnp.full((2,), junk, jnp.int32).at[1].set(TAG_INACTIVE),
-             jnp.zeros((W,), jnp.int32)])
-        send = _build_send_packed(owner, cols, matched, n_shards, fill)
-        recv = lax.all_to_all(send, axis, 0, 0, tiled=True)  # [n, L, 2+W]
-        r_slot, r_tag, r_vals = recv[..., 0], recv[..., 1], recv[..., 2:]
-
-        # ---- apply PUTs before GETs (same-wave ENQ visible to DEQ) ----
-        sv = state.store_vals[0]
-        sf = state.store_full[0]
-        put_slot = jnp.where(r_tag == TAG_PUT, r_slot, junk).reshape(-1)
-        sv = sv.at[put_slot].set(r_vals.reshape(-1, W))     # junk row eats
-        sf = sf.at[put_slot].set(True)
-        sf = sf.at[junk].set(False)
-
-        # ---- serve GETs and build the packed reply ----
-        is_get = r_tag == TAG_GET
-        get_slot = jnp.where(is_get, r_slot, junk)          # [n, L]
-        res_vals = sv[get_slot]
-        res_ok = is_get & sf[get_slot] & (get_slot < junk)
-        sf = sf.at[get_slot.reshape(-1)].set(False)         # remove on read
-        sf = sf.at[junk].set(False)
-        reply = jnp.concatenate(
-            [res_ok.astype(jnp.int32)[..., None], res_vals], axis=-1)
-        back = lax.all_to_all(reply, axis, 0, 0, tiled=True)
-
-        j = jnp.arange(L)
-        own_row = jnp.clip(owner, 0, n_shards - 1)
-        want_get = matched & (~is_enq)
-        deq_vals = jnp.where(want_get[:, None],
-                             back[own_row, j, 1:], jnp.int32(0))
-        deq_ok = want_get & (back[own_row, j, 0] > 0)
-
-        # capacity must hold at the post-enqueue peak (PUTs apply before
-        # GETs): a same-wave dequeue shrinking the size back under cap
-        # does NOT undo the head slot its enqueue already overwrote
-        overflow = ((new_lasts - state.firsts + 1) > n_shards * cap).any()
-        new_state = PriorityQueueState(new_firsts, new_lasts, sv[None],
-                                       sf[None])
-        return (new_state, tier, pos, matched, deq_vals, deq_ok, overflow,
-                n_relaxed)
-
-    # ------------------------------------------------------------ step -----
-    def _build_step(self):
-        specs = self._state_specs
-        wrapped = shard_map(
-            self._wave, mesh=self.mesh,
-            in_specs=(specs, P(self.axis), P(self.axis), P(self.axis),
-                      P(self.axis)),
-            out_specs=(specs, P(self.axis), P(self.axis), P(self.axis),
-                       P(self.axis), P(self.axis), P(), P()))
-        return jax.jit(wrapped, donate_argnums=(0,))
-
     def step(self, state: PriorityQueueState, is_enq, valid, prio, payload):
         """Process one global wave.  The state argument is DONATED.
 
@@ -204,27 +199,6 @@ class DevicePriorityQueue:
         n_relaxed) — tier/pos are -1/⊥ for unmatched ops.
         """
         return self._step(state, is_enq, valid, prio, payload)
-
-    # ------------------------------------------------------- multi-wave ----
-    def _build_run_waves(self):
-        specs = self._state_specs
-
-        def multi(state, is_enq, valid, prio, payload):
-            def wave(st, xs):
-                e, v, pr, pw = xs
-                st2, *out = self._wave(st, e, v, pr, pw)
-                return st2, tuple(out)
-            st, outs = lax.scan(wave, state, (is_enq, valid, prio, payload))
-            return (st,) + outs
-
-        wrapped = shard_map(
-            multi, mesh=self.mesh,
-            in_specs=(specs, P(None, self.axis), P(None, self.axis),
-                      P(None, self.axis), P(None, self.axis)),
-            out_specs=(specs, P(None, self.axis), P(None, self.axis),
-                       P(None, self.axis), P(None, self.axis),
-                       P(None, self.axis), P(None), P(None)))
-        return jax.jit(wrapped, donate_argnums=(0,))
 
     def run_waves(self, state: PriorityQueueState, is_enq, valid, prio,
                   payload):
@@ -252,19 +226,20 @@ class ElasticDevicePriorityQueue(_ElasticBase):
                  relaxation: int = 0, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, devices=None,
-                 hlo_stats: bool = False):
+                 hlo_stats: bool = False, pipelined: bool = True):
         self.n_prios = n_prios
         self.relaxation = relaxation
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
-                         hlo_stats=hlo_stats)
+                         hlo_stats=hlo_stats, pipelined=pipelined)
 
     def _make_inner(self, mesh):
         return DevicePriorityQueue(mesh, self.axis, n_prios=self.n_prios,
                                    cap=self.cap, payload_width=self.W,
                                    ops_per_shard=self.L,
-                                   relaxation=self.relaxation)
+                                   relaxation=self.relaxation,
+                                   pipelined=self.pipelined)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, prio, payload):
@@ -348,47 +323,26 @@ class ElasticDevicePriorityQueue(_ElasticBase):
     def _build_migration(self, mesh, P_old: int, P_new: int):
         axis, cap, W, P_ = self.axis, self.cap, self.W, self.n_prios
         n_mesh = mesh.shape[axis]
-        M = min(P_ * cap, P_ * _fanout_bound(P_old, P_new, cap))
+        M = min(P_ * cap, P_ * fanout_bound(P_old, P_new, cap))
+        junk = P_ * cap
 
         def body(firsts, lasts, sv, sf):
             s = lax.axis_index(axis).astype(jnp.int32)
-            u = jnp.arange(P_ * cap, dtype=jnp.int32)
+            u = jnp.arange(junk, dtype=jnp.int32)
             tier = u // cap
-            t = u % cap
-            fp = firsts[tier]
             # recover the tier-local position each occupied slot holds
             # (unique in the tier's live window; PR 2 invariant per tier)
-            j_lo = -((s - fp) // P_old)
-            j = j_lo + jnp.mod(t - j_lo, cap)
-            p = s + P_old * j
-            live = sf[0, :P_ * cap] & (p >= fp) & (p <= lasts[tier])
+            p = recover_positions(s, u % cap, firsts[tier], P_old, cap)
+            live = sf[0, :junk] & (p >= firsts[tier]) & (p <= lasts[tier])
             owner = jnp.mod(p, P_new).astype(jnp.int32)
             slot_new = (tier * cap + jnp.mod(p // P_new, cap)).astype(
                 jnp.int32)
-            rank = _dest_rank(owner, live, n_mesh)
-            lost = lax.pmax(
-                (live & (rank >= M)).any().astype(jnp.int32), axis) > 0
-            # ---- packed request: new_slot ‖ payload, one all_to_all ----
-            cols = jnp.concatenate([slot_new[:, None], sv[0, :P_ * cap]],
-                                   axis=1)
-            junk = P_ * cap
+            cols = jnp.concatenate([slot_new[:, None], sv[0, :junk]], axis=1)
             fill = jnp.zeros((1 + W,), jnp.int32).at[0].set(junk)
-            buf = jnp.zeros((n_mesh, M + 1, 1 + W), jnp.int32)
-            buf = buf.at[:, :, 0].set(junk)
-            d_i = jnp.where(live, owner, 0)
-            r_i = jnp.where(live, jnp.minimum(rank, M), M)
-            buf = buf.at[d_i, r_i].set(
-                jnp.where(live[:, None], cols, fill[None, :]))
-            recv = lax.all_to_all(buf[:, :M], axis, 0, 0, tiled=True)
-            # ---- rewrite the local store under the NEW layout ----
-            rs = recv[..., 0].reshape(-1)
-            rv = recv[..., 1:].reshape(-1, W)
-            nsv = jnp.zeros((junk + 1, W), jnp.int32).at[rs].set(rv)
-            nsv = nsv.at[junk].set(0)
-            nsf = jnp.zeros((junk + 1,), bool).at[rs].set(True)
-            nsf = nsf.at[junk].set(False)
-            moved = lax.psum(jnp.sum(live.astype(jnp.int32)), axis)
-            return firsts, lasts, nsv[None], nsf[None], moved, lost
+            rows, moved, lost = migrate_packed(axis, n_mesh, M, live, owner,
+                                               cols, fill)
+            nsv, nsf = rewrite_ring_store(rows, junk, W)
+            return firsts, lasts, nsv, nsf, moved, lost
 
         specs = (P(), P(), P(axis), P(axis))
         wrapped = shard_map(body, mesh=mesh, in_specs=specs,

@@ -1,0 +1,398 @@
+"""The unified fused-wave engine: Stages 1-4 once, disciplines plug in.
+
+Before this module, ``DeviceQueue``, ``DeviceStack`` and
+``DevicePriorityQueue`` each carried a full copy of the fused wave body —
+position assignment, the packed two-collective Stage-4 request/reply
+layout, the post-enqueue-peak capacity check, and the store rewrite — so
+every wave-level fix had to land three times (the PR 3 capacity bug did).
+:class:`WaveEngine` owns that body once; the three structures are now thin
+:class:`Discipline` plug-ins that only answer the questions that actually
+differ between FIFO, LIFO and P-tier priority semantics:
+
+* **dispatch** (Stages 1-3): assign each op of the wave a position, an
+  owner shard and a store slot — FIFO via the min-plus hypercube scan,
+  LIFO via the max-plus ticket scan, priority via P masked min-plus scans
+  plus the batch-DeleteMin drain;
+* **commit** (Stage-4 store rewrite): apply the received PUT/GET rows to
+  the local store and build the packed ``ok ‖ value`` reply — the dense
+  ring rewrite (queue/priority share :func:`ring_commit`) or the
+  (slot, depth) ticket-set rewrite (stack).
+
+Everything else — the ``slot ‖ extra ‖ tag ‖ payload`` request packing,
+the collectives, reply extraction, the overflow surfacing, the multi-wave
+``lax.scan`` driver — is engine code, written once.
+
+Wave pipelining
+---------------
+``run_waves(pipelined=True)`` (the default) software-pipelines the burst:
+the scan carry holds **both buffers** of a double-buffered wave — the
+committed store *and* the in-flight request buffer of the previous wave —
+so iteration k dispatches wave k (scans + request packing, which never
+read the store) while committing wave k-1's store rewrite.  Because wave
+k-1's reply becomes available exactly when wave k's request is packed,
+the two ride ONE fused ``all_to_all`` (request columns of wave k ‖ reply
+columns of wave k-1): a K-wave burst costs K+1 ``all_to_all`` launches
+instead of 2K, and the dispatch collectives of wave k (ppermute hypercube
+/ descriptor all_gather) overlap wave k-1's store scatter.  The schedule
+is a pure reordering of the same integer operations, so results are
+bit-identical to the sequential path — ``pipelined=False`` keeps the
+one-wave-at-a-time schedule for differential testing.
+
+    wave k:    dispatch_k ──┐                     ┌─> outputs k-1
+                            ├─ ONE all_to_all ────┤
+    wave k-1:  commit_{k-1}─┘   (req_k ‖ rep_k-1) └─> in-flight k
+
+``step`` is always the sequential single wave (two collectives, the PR 1
+contract, HLO-tested).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+
+TAG_INACTIVE = 0
+TAG_PUT = 1
+TAG_GET = 2
+
+
+# ------------------------------------------------------ shared helpers -----
+def post_enqueue_peak_overflow(first, new_last, capacity):
+    """THE post-enqueue-peak capacity check (one copy; was fixed three
+    times in PR 3 across the fused queue, the legacy queue, and the
+    priority queue).
+
+    A wave applies PUTs before GETs, so capacity must hold at the
+    *post-enqueue peak*: a same-wave dequeue that shrinks the size back
+    under ``capacity`` does NOT undo the head slot a wrapped-around
+    enqueue already overwrote.  Only enqueues move ``last``, so
+    ``new_last - first`` (with ``first`` from *before* the wave) is that
+    peak.  Accepts scalars (queue) or per-tier ``[P]`` vectors (priority,
+    where ``capacity`` is per tier); returns one replicated bool.
+    """
+    return jnp.any((new_last - first + 1) > capacity)
+
+
+def build_send(owner, col_payload, active, n_shards, sentinel):
+    """Scatter local ops into a [n_shards, L, ...] send buffer by owner
+    row (one column per collective — the legacy five-collective path)."""
+    rows = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
+    hit = (rows == owner[None, :]) & active[None, :]
+    if col_payload.ndim == 1:
+        return jnp.where(hit, col_payload[None, :], sentinel)
+    return jnp.where(hit[..., None], col_payload[None, :, :], sentinel)
+
+
+def build_send_packed(owner, cols, active, n_shards, fill):
+    """Fused scatter: cols [L, C] into a [n_shards, L, C] send buffer;
+    rows not owned by a shard carry the ``fill`` [C] sentinel column."""
+    rows = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
+    hit = (rows == owner[None, :]) & active[None, :]
+    return jnp.where(hit[..., None], cols[None, :, :], fill[None, None, :])
+
+
+def ring_commit(store, recv, junk: int, W: int):
+    """Stage-4 store rewrite for the dense sharded ring (queue AND
+    priority queue — the tier window is already encoded in the slot).
+
+    Applies PUTs before GETs (same-wave ENQ visible to DEQ), removes on
+    read, and routes every inactive row to the ``junk`` slot.  Returns
+    (new_store, packed ``ok ‖ value`` reply, commit-time overflow=False —
+    ring capacity is a dispatch-time check, :func:`post_enqueue_peak_overflow`).
+    """
+    sv, sf = store[0][0], store[1][0]      # local shard views
+    r_slot, r_tag, r_vals = recv[..., 0], recv[..., 1], recv[..., 2:]
+    put_slot = jnp.where(r_tag == TAG_PUT, r_slot, junk).reshape(-1)
+    sv = sv.at[put_slot].set(r_vals.reshape(-1, W))   # junk row eats
+    sf = sf.at[put_slot].set(True)
+    sf = sf.at[junk].set(False)
+    is_get = r_tag == TAG_GET
+    get_slot = jnp.where(is_get, r_slot, junk)        # [n, L]
+    res_vals = sv[get_slot]                           # [n, L, W]
+    res_ok = is_get & sf[get_slot] & (get_slot < junk)
+    sf = sf.at[get_slot.reshape(-1)].set(False)       # remove on read
+    sf = sf.at[junk].set(False)
+    reply = jnp.concatenate(
+        [res_ok.astype(jnp.int32)[..., None], res_vals], axis=-1)
+    return (sv[None], sf[None]), reply, jnp.zeros((), bool)
+
+
+# ------------------------------------------------- discipline contract -----
+class Dispatch(NamedTuple):
+    """What a discipline's Stages 1-3 hand to the engine for one wave."""
+    owner: jax.Array        # [L] destination shard, -1 for unrouted ops
+    slot: jax.Array         # [L] destination slot (junk when unrouted)
+    tag: jax.Array          # [L] TAG_PUT / TAG_GET / TAG_INACTIVE
+    extra: tuple            # extra request columns, each [L] int32
+    payload: jax.Array      # [L, W] int32
+    active: jax.Array       # [L] rows that travel (matched ops)
+    wants_reply: jax.Array  # [L] ops whose reply is extracted (dequeues)
+    outs: tuple             # dispatch-time per-op outputs (pos, matched, ...)
+    carry: tuple            # updated interval carry
+    overflow: jax.Array     # replicated bool (dispatch-time capacity check)
+    aux: tuple              # replicated per-wave extras (e.g. n_relaxed)
+
+
+class Discipline:
+    """Position-assignment + store-rewrite plug-in for :class:`WaveEngine`.
+
+    Subclasses define class attributes ``n_ops`` (op input arrays per
+    wave), ``n_disp_outs`` (dispatch-time per-op outputs), ``n_aux``
+    (replicated per-wave extras) and ``extra_fill`` (sentinel values for
+    extra request columns), instance attributes ``W`` / ``junk`` /
+    ``state_specs``, and the methods below.  All methods run *inside*
+    shard_map on per-shard local views.
+    """
+
+    n_ops: int = 3
+    n_disp_outs: int = 2
+    n_aux: int = 0
+    extra_fill: tuple = ()
+
+    def split(self, state):
+        """state -> (interval carry tuple, store tuple)."""
+        raise NotImplementedError
+
+    def merge(self, carry, store):
+        """(carry, store) -> state (inverse of split)."""
+        raise NotImplementedError
+
+    def dispatch(self, carry, ops) -> Dispatch:
+        """Stages 1-3: assign positions/owners/slots for one wave."""
+        raise NotImplementedError
+
+    def commit(self, store, recv):
+        """Stage-4 rewrite: -> (store, reply [n, L, 1+W], commit_ovf)."""
+        raise NotImplementedError
+
+    def zero_outs(self, L: int) -> tuple:
+        """Dtype-correct zeros for ``Dispatch.outs`` (pipeline priming)."""
+        raise NotImplementedError
+
+    def zero_aux(self) -> tuple:
+        """Dtype-correct zeros for ``Dispatch.aux``."""
+        return ()
+
+
+# --------------------------------------------------------- the engine ------
+class WaveEngine:
+    """One fused wave body for every device structure.
+
+    ``step`` runs one sequential wave (two collectives: packed request +
+    packed reply).  ``run_waves`` executes K pre-staged waves in one
+    ``lax.scan`` dispatch — software-pipelined by default (see module
+    docstring), or the sequential schedule with ``pipelined=False``.
+    Both jitted entry points donate the state argument.
+    """
+
+    def __init__(self, mesh, axis_name: str, discipline: Discipline, *,
+                 pipelined: bool = True):
+        self.mesh = mesh
+        self.axis = axis_name
+        self.n_shards = mesh.shape[axis_name]
+        self.disc = discipline
+        self.pipelined = pipelined
+        self._step = self._build_step()
+        self._run_waves = self._build_run_waves()
+
+    # --------------------------------------------------- request packing ---
+    def _req_fill(self):
+        d = self.disc
+        return jnp.concatenate(
+            [jnp.array([d.junk, *d.extra_fill, TAG_INACTIVE], jnp.int32),
+             jnp.zeros((d.W,), jnp.int32)])
+
+    def _pack_request(self, d: Dispatch):
+        cols = jnp.concatenate(
+            [d.slot[:, None]]
+            + [e.astype(jnp.int32)[:, None] for e in d.extra]
+            + [d.tag.astype(jnp.int32)[:, None], d.payload], axis=1)
+        return build_send_packed(d.owner, cols, d.active, self.n_shards,
+                                 self._req_fill())
+
+    def _extract_reply(self, back, owner, wants_reply):
+        """Local op j's reply sits at [owner[j], j] of the reply buffer."""
+        j = jnp.arange(owner.shape[0])
+        own_row = jnp.clip(owner, 0, self.n_shards - 1)
+        vals = jnp.where(wants_reply[:, None],
+                         back[own_row, j, 1:], jnp.int32(0))
+        ok = wants_reply & (back[own_row, j, 0] > 0)
+        return vals, ok
+
+    # ------------------------------------------------------- wave bodies ---
+    def _wave(self, state, ops):
+        """One sequential wave: dispatch -> request a2a -> commit ->
+        reply a2a -> extract.  Exactly two all_to_all collectives."""
+        disc = self.disc
+        carry, store = disc.split(state)
+        d = disc.dispatch(carry, ops)
+        recv = lax.all_to_all(self._pack_request(d), self.axis, 0, 0,
+                              tiled=True)
+        store, reply, c_ovf = disc.commit(store, recv)
+        back = lax.all_to_all(reply, self.axis, 0, 0, tiled=True)
+        dv, dok = self._extract_reply(back, d.owner, d.wants_reply)
+        ovf = jnp.logical_or(d.overflow, c_ovf)
+        return disc.merge(d.carry, store), d.outs + (dv, dok, ovf) + d.aux
+
+    def _multi_sequential(self, state, ops):
+        st, outs = lax.scan(self._wave, state, ops)
+        return (st,) + outs
+
+    def _multi_pipelined(self, state, ops):
+        """K waves, software-pipelined: iteration k dispatches wave k and
+        commits wave k-1; ONE fused all_to_all carries wave k's request
+        columns alongside wave k-1's reply columns.  Outputs are all
+        emitted at commit time (one iteration later than dispatch), so the
+        stacked scan outputs are shifted by one and the last wave drains
+        through a reply-only epilogue collective."""
+        disc = self.disc
+        n, L = self.n_shards, ops[0].shape[1]
+        C_req = 2 + len(disc.extra_fill) + disc.W
+        carry0, store0 = disc.split(state)
+        prime = {
+            # an all-sentinel in-flight buffer commits as a no-op
+            "recv": jnp.tile(self._req_fill()[None, None, :], (n, L, 1)),
+            "owner": jnp.full((L,), -1, jnp.int32),
+            "wants": jnp.zeros((L,), bool),
+            "outs": disc.zero_outs(L),
+            "ovf": jnp.zeros((), bool),
+            "aux": disc.zero_aux(),
+        }
+
+        def body(c, xs):
+            carry, store, infl = c
+            d = disc.dispatch(carry, xs)                  # wave k
+            store, reply, c_ovf = disc.commit(store, infl["recv"])  # k-1
+            fused = jnp.concatenate([self._pack_request(d), reply], axis=-1)
+            out = lax.all_to_all(fused, self.axis, 0, 0, tiled=True)
+            dv, dok = self._extract_reply(out[..., C_req:], infl["owner"],
+                                          infl["wants"])
+            emitted = (infl["outs"]
+                       + (dv, dok, jnp.logical_or(infl["ovf"], c_ovf))
+                       + infl["aux"])
+            infl = {"recv": out[..., :C_req], "owner": d.owner,
+                    "wants": d.wants_reply, "outs": d.outs,
+                    "ovf": jnp.asarray(d.overflow), "aux": d.aux}
+            return (d.carry, store, infl), emitted
+
+        (carry, store, infl), stacked = lax.scan(
+            body, (carry0, store0, prime), ops)
+        # epilogue: commit the last in-flight wave, reply-only collective
+        store, reply, c_ovf = disc.commit(store, infl["recv"])
+        back = lax.all_to_all(reply, self.axis, 0, 0, tiled=True)
+        dv, dok = self._extract_reply(back, infl["owner"], infl["wants"])
+        last = (infl["outs"]
+                + (dv, dok, jnp.logical_or(infl["ovf"], c_ovf))
+                + infl["aux"])
+        # drop the priming wave's garbage row, append the drained last wave
+        outs = tuple(jnp.concatenate([s[1:], l[None]], axis=0)
+                     for s, l in zip(stacked, last))
+        return (disc.merge(carry, store),) + outs
+
+    # ---------------------------------------------------- jitted wrappers --
+    def _out_specs(self, multi: bool = False):
+        d = self.disc
+        op = P(None, self.axis) if multi else P(self.axis)
+        rep = P(None) if multi else P()
+        return ((d.state_specs,) + (op,) * (d.n_disp_outs + 2)
+                + (rep,) * (1 + d.n_aux))
+
+    def _build_step(self):
+        def fn(state, *ops):
+            st, outs = self._wave(state, ops)
+            return (st,) + outs
+        wrapped = shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self.disc.state_specs,)
+            + (P(self.axis),) * self.disc.n_ops,
+            out_specs=self._out_specs())
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+    def _build_run_waves(self):
+        body = (self._multi_pipelined if self.pipelined
+                else self._multi_sequential)
+
+        def fn(state, *ops):
+            return body(state, ops)
+        wrapped = shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self.disc.state_specs,)
+            + (P(None, self.axis),) * self.disc.n_ops,
+            out_specs=self._out_specs(multi=True))
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+    def step(self, state, *ops):
+        """One wave.  The state argument is DONATED."""
+        return self._step(state, *ops)
+
+    def run_waves(self, state, *ops):
+        """K pre-staged waves in ONE device dispatch (state DONATED)."""
+        return self._run_waves(state, *ops)
+
+
+# -------------------------------------------------- migration machinery ----
+def dest_rank(owner: jax.Array, live: jax.Array, n_mesh: int) -> jax.Array:
+    """Exclusive rank of each live entry among earlier entries with the
+    same destination — its row in the packed per-destination send buffer."""
+    ids = jnp.arange(n_mesh, dtype=jnp.int32)
+    oh = ((owner[:, None] == ids[None, :]) & live[:, None]).astype(jnp.int32)
+    excl = jnp.cumsum(oh, axis=0) - oh
+    return excl[jnp.arange(owner.shape[0]), jnp.clip(owner, 0, n_mesh - 1)]
+
+
+def fanout_bound(P_old: int, P_new: int, cap: int) -> int:
+    """Max elements one source shard can owe one destination shard.
+
+    Live positions occupy a window of at most ``min(P_old, P_new) * cap``
+    consecutive integers (old occupancy and new capacity both bound it);
+    positions on shard ``s`` (mod P_old) owned by ``d`` (mod P_new) recur
+    with stride ``lcm(P_old, P_new)``."""
+    window = min(P_old, P_new) * cap
+    per_pair = -(-window // math.lcm(P_old, P_new))
+    return min(cap, per_pair + 1)  # +1 alignment slack
+
+
+def recover_positions(s, t, first, P_old: int, cap: int):
+    """Invert the round-robin layout: the position slot ``t`` on shard
+    ``s`` holds is the unique ``p = s + P_old*j`` with ``j ≡ t (mod cap)``
+    and ``p`` in the live window starting at ``first`` (unique because a
+    live window spans at most ``P_old * cap`` positions)."""
+    j_lo = -((s - first) // P_old)
+    j = j_lo + jnp.mod(t - j_lo, cap)
+    return s + P_old * j
+
+
+def migrate_packed(axis: str, n_mesh: int, M: int, live, owner, cols, fill):
+    """The ONE packed migration all_to_all every elastic structure uses:
+    scatter ``cols`` rows (column 0 = destination slot / junk sentinel)
+    into rank-within-destination rows, exchange, and return the received
+    rows flattened.  Also returns (moved count, fanout-overflow flag)."""
+    rank = dest_rank(owner, live, n_mesh)
+    lost = lax.pmax(
+        (live & (rank >= M)).any().astype(jnp.int32), axis) > 0
+    buf = jnp.tile(fill[None, None, :], (n_mesh, M + 1, 1))
+    d_i = jnp.where(live, owner, 0)
+    r_i = jnp.where(live, jnp.minimum(rank, M), M)
+    buf = buf.at[d_i, r_i].set(
+        jnp.where(live[:, None], cols, fill[None, :]))
+    recv = lax.all_to_all(buf[:, :M], axis, 0, 0, tiled=True)
+    moved = lax.psum(jnp.sum(live.astype(jnp.int32)), axis)
+    return recv.reshape(-1, cols.shape[1]), moved, lost
+
+
+def rewrite_ring_store(rows, junk: int, W: int):
+    """Rebuild a dense ring store from received ``new_slot ‖ payload``
+    migration rows (sentinel rows land on — and are wiped from — the junk
+    row)."""
+    rs = rows[:, 0]
+    nsv = jnp.zeros((junk + 1, W), jnp.int32).at[rs].set(rows[:, 1:])
+    nsv = nsv.at[junk].set(0)
+    nsf = jnp.zeros((junk + 1,), bool).at[rs].set(True)
+    nsf = nsf.at[junk].set(False)
+    return nsv[None], nsf[None]

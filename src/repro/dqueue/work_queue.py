@@ -16,6 +16,10 @@ sharded on device, and the global FIFO order is the queue's order ≺.
 Scheduling rides the multi-wave API (PR 1): :meth:`run_waves` stages a burst
 of K scheduling steps as ``[K, n]`` op batches and executes them in ONE
 ``DeviceQueue.run_waves`` dispatch — no host round-trip between waves.
+Since PR 4 that dispatch is the unified :class:`~.wave_engine.WaveEngine`
+driver, software-pipelined by default (construct the backing queue with
+``pipelined=False`` for the sequential burst schedule; grants are
+identical either way, so the lease bookkeeping below is schedule-blind).
 Leases held at burst start have fully predictable expiry times, so their
 retries are pre-staged into exactly the wave where a per-step loop would
 have re-enqueued them; leases *granted inside* the burst cannot be observed

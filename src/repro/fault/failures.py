@@ -79,7 +79,8 @@ class ElasticPolicy:
 def elastic_queue_policy(queue, regrow_after: int = 0) -> ElasticPolicy:
     """An :class:`ElasticPolicy` wired to any elastic queue wrapper
     (``ElasticDeviceQueue`` / ``ElasticDeviceStack`` /
-    ``ElasticDevicePriorityQueue``): a
+    ``ElasticDevicePriorityQueue`` — all WaveEngine disciplines share the
+    same membership surface, so one policy covers every flavor): a
     :class:`ShardFailure` LEAVEs the dead shard out of the queue fabric,
     and recovery JOINs one replacement shard back after ``regrow_after``
     healthy steps.  The training/serving state passes through untouched —

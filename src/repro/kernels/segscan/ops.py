@@ -46,6 +46,7 @@ def priority_queue_scan_pallas(is_enq: jax.Array, prio: jax.Array,
     Returns (tier [n] int32 (-1 unmatched), pos [n] int32 (⊥ = -1),
     matched [n] bool, new_firsts, new_lasts).
     """
+    from ...core.scan_queue import strict_batch_deletemin
     enq = is_enq & valid
     deq = (~is_enq) & valid
     tier = jnp.full(is_enq.shape, -1, jnp.int32)
@@ -60,14 +61,10 @@ def priority_queue_scan_pallas(is_enq: jax.Array, prio: jax.Array,
         new_lasts.append(nl_p)
     new_lasts = jnp.stack(new_lasts)
     avail = new_lasts - firsts + 1
-    d_in = deq.astype(jnp.int32)
-    d_rank = jnp.cumsum(d_in) - d_in
-    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(avail)])
-    t_d = (d_rank[:, None] >= cum[None, 1:]).sum(1).astype(jnp.int32)
-    d_matched = deq & (t_d < n_prios)
-    t_c = jnp.minimum(t_d, n_prios - 1)
-    pos_d = firsts[t_c] + d_rank - cum[t_c]
-    taken = jnp.clip(d_in.sum() - cum[:-1], 0, avail)
+    # the dequeue resolution is the SAME batch-DeleteMin prefix arithmetic
+    # the core scan uses — one copy, shared (PR 4)
+    t_c, pos_d, d_matched, taken = strict_batch_deletemin(
+        deq, avail, firsts, n_prios)
     tier = jnp.where(d_matched, t_c, tier)
     pos = jnp.where(d_matched, pos_d, pos)
     matched = enq | d_matched

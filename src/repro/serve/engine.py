@@ -26,6 +26,15 @@ survives, FIFO order intact), and resumes bursts on the new mesh.  This is
 the elastic-serving story: scale the admission fabric with traffic, shed a
 failed shard without dropping queued work.
 
+Unified wave engine (PR 4): every queue flavor the engine can ride — FIFO,
+priority-tiered, elastic — is now one
+:class:`~repro.dqueue.WaveEngine` under a discipline plug-in, and the
+chunked multi-wave bursts ``_queue_wave`` stages are software-pipelined by
+default (wave k's dispatch overlaps wave k-1's store rewrite; one fused
+``all_to_all`` per wave in steady state).  ``ServeEngine(pipelined=False)``
+forwards the engine's sequential burst schedule for differential testing;
+results are identical either way.
+
 Priority tiers (PR 3): ``ServeEngine(priorities=P)`` swaps the admission
 fabric for an :class:`~repro.dqueue.ElasticDevicePriorityQueue` —
 ``submit(reqs, prio=...)`` stages requests into SLA tiers (0 = interactive,
@@ -63,7 +72,8 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, mesh, *, max_slots: int = 4,
                  max_seq: int = 64, queue_cap: int = 256,
-                 priorities: int = 1, relaxation: int = 0):
+                 priorities: int = 1, relaxation: int = 0,
+                 pipelined: bool = True):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -75,11 +85,12 @@ class ServeEngine:
             self.queue = ElasticDevicePriorityQueue(
                 mesh.shape["data"], n_prios=priorities,
                 relaxation=relaxation, cap=queue_cap, payload_width=2,
-                ops_per_shard=max(8, 2 * max_slots))
+                ops_per_shard=max(8, 2 * max_slots), pipelined=pipelined)
         else:
             self.queue = ElasticDeviceQueue(mesh.shape["data"],
                                             cap=queue_cap, payload_width=2,
-                                            ops_per_shard=max(8, 2 * max_slots))
+                                            ops_per_shard=max(8, 2 * max_slots),
+                                            pipelined=pipelined)
         self.requests: Dict[int, Request] = {}
         self.slots: List[Optional[int]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)

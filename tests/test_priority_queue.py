@@ -257,37 +257,11 @@ def test_priority_scan_pallas_matches_core():
             assert (np.asarray(a) == np.asarray(b)).all(), P_
 
 
-def test_overflow_detected_at_post_enqueue_peak():
-    """Regression (review finding): with a tier/queue at exact capacity, a
-    same-wave enq+deq transiently exceeds the store — PUTs apply before
-    GETs, so the wrapped-around enqueue overwrites the head slot even
-    though the post-wave size is back under cap.  The overflow flag must
-    check the post-enqueue peak, not the post-wave size."""
-    import jax.numpy as jnp
-    from repro.compat import make_mesh
-    from repro.dqueue import DevicePriorityQueue, DeviceQueue
-
-    mesh = make_mesh((1,), ("data",))
-    one = jnp.ones((4, 1), jnp.int32)
-
-    dq = DeviceQueue(mesh, "data", cap=2, payload_width=1, ops_per_shard=4)
-    st = dq.init_state()
-    fill = jnp.array([True, True, False, False])
-    st, _, _, _, _, ovf = dq.step(st, fill, fill, one)
-    assert not bool(ovf)                       # 2 live == capacity: fine
-    e = jnp.array([True, False, False, False])
-    v = jnp.array([True, True, False, False])  # 1 enq + 1 deq: peak = 3
-    st, _, _, _, _, ovf = dq.step(st, e, v, one)
-    assert bool(ovf), "post-enqueue peak over capacity went undetected"
-
-    pq = DevicePriorityQueue(mesh, "data", n_prios=2, cap=2,
-                             payload_width=1, ops_per_shard=4)
-    ps = pq.init_state()
-    tier1 = jnp.ones((4,), jnp.int32)
-    ps, *_, ovf, _ = pq.step(ps, fill, fill, tier1, one)
-    assert not bool(ovf)
-    ps, *_, ovf, _ = pq.step(ps, e, v, tier1, one)
-    assert bool(ovf), "tier-level post-enqueue peak went undetected"
+# The post-enqueue-peak overflow regression moved to
+# tests/test_wave_engine.py::test_overflow_surfaces_once_for_all_disciplines
+# when the check itself was deduplicated into
+# wave_engine.post_enqueue_peak_overflow (PR 4): one helper, one test,
+# all three disciplines.
 
 
 def test_priority_oracle_rejects_bad_tier():

@@ -1,0 +1,368 @@
+"""PR 4 unified WaveEngine: pipelined-vs-sequential differential equality,
+the HLO collective matrix for all three disciplines, the ONE shared
+post-enqueue-peak overflow check, and a hypothesis property test driving
+random mixed op/JOIN/LEAVE schedules through every discipline against its
+host oracle."""
+import numpy as np
+
+from _hyp import given, settings, strategies as st
+from multidev import run_multidev
+
+# --------------------------------------------------------------------------
+# Acceptance: pipelined == sequential == step loop, op-by-op, all three
+# disciplines, on 8 devices.
+# --------------------------------------------------------------------------
+PIPELINED_DIFFERENTIAL = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import DeviceQueue, DeviceStack, DevicePriorityQueue
+
+mesh = make_mesh((8,), ("data",))
+rng = np.random.default_rng(29)
+K, L = 7, 8
+n = 8 * L
+
+CASES = [
+    ("queue", lambda p: DeviceQueue(mesh, "data", cap=64, payload_width=2,
+                                    ops_per_shard=L, pipelined=p), False),
+    ("stack", lambda p: DeviceStack(mesh, "data", cap=64, payload_width=2,
+                                    ops_per_shard=L, slot_depth=8,
+                                    pipelined=p), False),
+    ("pqueue", lambda p: DevicePriorityQueue(
+        mesh, "data", n_prios=3, cap=64, payload_width=2, ops_per_shard=L,
+        pipelined=p), True),
+]
+for name, make, has_prio in CASES:
+    seq, pipe = make(False), make(True)
+    E = rng.random((K, n)) < 0.6
+    V = rng.random((K, n)) < 0.9
+    PW = rng.integers(0, 999, (K, n, 2)).astype(np.int32)
+    args = [jnp.array(E), jnp.array(V)]
+    if has_prio:
+        args.append(jnp.array(rng.integers(0, 3, (K, n)), jnp.int32))
+    args.append(jnp.array(PW))
+    # reference: K host-driven sequential single waves
+    st_ref = seq.init_state()
+    ref = []
+    for k in range(K):
+        st_ref, *o = seq.step(st_ref, *(a[k] for a in args))
+        ref.append([np.asarray(x) for x in o])
+    for mode, q in (("sequential", seq), ("pipelined", pipe)):
+        sa, *oa = q.run_waves(q.init_state(), *args)
+        oa = [np.asarray(x) for x in oa]
+        for k in range(K):
+            for a, b in zip(oa, ref[k]):
+                assert (a[k] == b).all(), (name, mode, k)
+        fa = jax.tree.leaves(sa)
+        fb = jax.tree.leaves(st_ref)
+        for a, b in zip(fa, fb):
+            assert (np.asarray(a) == np.asarray(b)).all(), (name, mode)
+    print("OK", name, "pipelined == sequential == step loop")
+"""
+
+
+def test_pipelined_matches_sequential_all_disciplines_8dev():
+    """Acceptance: the software-pipelined burst schedule is bit-identical
+    to the sequential one (and to K host-driven steps) for the FIFO, LIFO
+    and priority disciplines — outputs AND final state."""
+    out = run_multidev(PIPELINED_DIFFERENTIAL, n_dev=8)
+    for name in ("queue", "stack", "pqueue"):
+        assert f"OK {name} pipelined == sequential == step loop" in out
+
+
+# --------------------------------------------------------------------------
+# CI satellite: the HLO collective matrix.  The pipelined K-wave program
+# must keep <= 2 all_to_all per wave for queue, stack AND priority — it
+# actually has ONE in the scan body (fused request_k ‖ reply_{k-1}) plus a
+# single drain epilogue, i.e. 2 static / (K+1)/K per wave amortized.
+# --------------------------------------------------------------------------
+HLO_MATRIX = r"""
+import re
+import jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import DeviceQueue, DeviceStack, DevicePriorityQueue
+
+def count_all_to_all(jitted, args):
+    txt = jitted.lower(*args).compile().as_text()
+    return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+
+mesh = make_mesh((8,), ("data",))
+K, L = 6, 4
+n = 8 * L
+for name, make, has_prio in (
+    ("queue", lambda p: DeviceQueue(mesh, "data", cap=32, payload_width=2,
+                                    ops_per_shard=L, pipelined=p), False),
+    ("stack", lambda p: DeviceStack(mesh, "data", cap=32, payload_width=2,
+                                    ops_per_shard=L, pipelined=p), False),
+    ("priority", lambda p: DevicePriorityQueue(
+        mesh, "data", n_prios=2, cap=32, payload_width=2, ops_per_shard=L,
+        pipelined=p), True),
+):
+    seq, pipe = make(False), make(True)
+    for tag, q in (("seq", seq), ("pipe", pipe)):
+        args = [q.init_state(), jnp.zeros((K, n), bool),
+                jnp.zeros((K, n), bool)]
+        if has_prio:
+            args.append(jnp.zeros((K, n), jnp.int32))
+        args.append(jnp.zeros((K, n, 2), jnp.int32))
+        c = count_all_to_all(q._run_waves, tuple(args))
+        if tag == "seq":
+            # sequential scan body: request + reply = 2 per wave
+            assert c == 2, f"{name} sequential run_waves has {c}"
+        else:
+            # pipelined: ONE fused a2a in the body + one drain epilogue;
+            # the per-wave bound <= 2 holds with room to spare
+            assert c <= 2, f"{name} pipelined run_waves has {c}"
+        print(f"OK hlo {name} {tag}: {c}")
+"""
+
+
+def test_pipelined_hlo_collective_matrix_8dev():
+    """Satellite: the pipelined path keeps <= 2 all_to_all per wave for
+    queue, stack, AND priority (static count: 1 fused collective in the
+    scan body + 1 drain epilogue for the whole burst)."""
+    out = run_multidev(HLO_MATRIX, n_dev=8)
+    for name in ("queue", "stack", "priority"):
+        assert f"OK hlo {name} seq: 2" in out
+        assert f"OK hlo {name} pipe:" in out
+
+
+# --------------------------------------------------------------------------
+# Satellite: THE post-enqueue-peak overflow check lives once in
+# wave_engine.post_enqueue_peak_overflow (it was patched three times in
+# PR 3: fused queue, legacy queue, priority queue).  One regression test
+# covers overflow surfacing for all three disciplines through the engine.
+# --------------------------------------------------------------------------
+def test_overflow_surfaces_once_for_all_disciplines():
+    """With a queue/tier at exact capacity, a same-wave enq+deq transiently
+    exceeds the store (PUTs apply before GETs), so the flag must check the
+    post-enqueue peak, not the post-wave size — for the fused FIFO wave,
+    the legacy five-collective wave, and the priority wave alike.  The
+    stack's capacity hazard is commit-time (depth exhaustion) and must
+    surface through the same per-wave overflow output."""
+    import jax.numpy as jnp
+    from repro.compat import make_mesh
+    from repro.dqueue import DevicePriorityQueue, DeviceQueue, DeviceStack
+
+    mesh = make_mesh((1,), ("data",))
+    one = jnp.ones((4, 1), jnp.int32)
+    fill = jnp.array([True, True, False, False])
+    e = jnp.array([True, False, False, False])
+    v = jnp.array([True, True, False, False])  # 1 enq + 1 deq: peak = 3
+
+    for fused in (True, False):                # engine AND legacy paths
+        dq = DeviceQueue(mesh, "data", cap=2, payload_width=1,
+                         ops_per_shard=4, fused=fused)
+        st = dq.init_state()
+        st, _, _, _, _, ovf = dq.step(st, fill, fill, one)
+        assert not bool(ovf), fused            # 2 live == capacity: fine
+        st, _, _, _, _, ovf = dq.step(st, e, v, one)
+        assert bool(ovf), ("post-enqueue peak went undetected", fused)
+
+    pq = DevicePriorityQueue(mesh, "data", n_prios=2, cap=2,
+                             payload_width=1, ops_per_shard=4)
+    ps = pq.init_state()
+    tier1 = jnp.ones((4,), jnp.int32)
+    ps, *_, ovf, _ = pq.step(ps, fill, fill, tier1, one)
+    assert not bool(ovf)
+    ps, *_, ovf, _ = pq.step(ps, e, v, tier1, one)
+    assert bool(ovf), "tier-level post-enqueue peak went undetected"
+
+    # stack: two pushes fill cap=1 x depth=2; a third push has no free
+    # depth entry -> the commit-time slot overflow must surface
+    ds = DeviceStack(mesh, "data", cap=1, payload_width=1, ops_per_shard=4,
+                     slot_depth=2)
+    ss = ds.init_state()
+    ss, *_, ovf = ds.step(ss, fill, fill, one)
+    assert not bool(ovf)
+    ss, *_, ovf = ds.step(ss, e, e, one)       # third push: depth exhausted
+    assert bool(ovf), "stack depth exhaustion went undetected"
+
+
+# --------------------------------------------------------------------------
+# Satellite: hypothesis property test — a random mixed op/JOIN/LEAVE
+# schedule through the unified engine, all three disciplines, against the
+# host oracles (Skueue protocol sim for FIFO/LIFO order through membership
+# changes, PriorityOracle for the tier semantics).
+# --------------------------------------------------------------------------
+PROPERTY = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.protocol import DEQ, ENQ, Skueue
+from repro.core.priority import DEQ as PDEQ, ENQ as PENQ, PriorityOracle
+from repro.dqueue import (ElasticDeviceQueue, ElasticDeviceStack,
+                          ElasticDevicePriorityQueue)
+
+OPS = %(ops)r
+PRIOS = %(prios)r
+SCHEDULE = %(schedule)r
+P_ = %(n_prios)d
+RELAX = %(relax)d
+L = 4
+
+
+def run_device(elastic, W, with_prio=False):
+    outs = []
+    cut = sorted(SCHEDULE) + [len(OPS)]
+    start = 0
+    for end in cut:
+        chunk = OPS[start:end]
+        if chunk:
+            n = elastic.n_shards * elastic.L
+            K = -(-len(chunk) // n)
+            E = np.zeros((K, n), bool)
+            V = np.zeros((K, n), bool)
+            PR = np.zeros((K, n), np.int32)
+            PW = np.zeros((K, n, W), np.int32)
+            for j, op in enumerate(chunk):
+                k, i = divmod(j, n)
+                E[k, i] = bool(op)
+                V[k, i] = True
+                PR[k, i] = PRIOS[start + j]
+                PW[k, i, 0] = start + j
+            if with_prio:
+                tier, pos, m, dv, dok, ovf, _ = elastic.run_waves(E, V, PR,
+                                                                  PW)
+            else:
+                pos, m, dv, dok, ovf = elastic.run_waves(E, V, PW)
+                tier = pos
+            assert not np.asarray(ovf).any()
+            pos = np.asarray(pos).reshape(-1)[:len(chunk)]
+            m = np.asarray(m).reshape(-1)[:len(chunk)]
+            tier = np.asarray(tier).reshape(-1)[:len(chunk)]
+            dv = np.asarray(dv).reshape(K * n, W)[:len(chunk)]
+            dok = np.asarray(dok).reshape(-1)[:len(chunk)]
+            for j, op in enumerate(chunk):
+                res = None
+                if (not op) and m[j]:
+                    assert dok[j], f"matched op {start + j} lost its element"
+                    res = int(dv[j, 0])
+                outs.append((int(pos[j]), bool(m[j]), res, int(tier[j])))
+        if end in SCHEDULE:
+            kind, arg = SCHEDULE[end]
+            s = (elastic.grow(arg) if kind == "grow"
+                 else elastic.shrink(arg))
+            assert s["moved"] == elastic.size, (s, elastic.size)
+        start = end
+    return outs
+
+
+def run_protocol(mode):
+    sk = Skueue(4, mode=mode, seed=0, local_combining=False)
+    nid = sk.ring.node_ids()[0]
+    rids = []
+
+    def inject(s, rnd):
+        i = rnd - 1
+        if i < len(OPS):
+            rids.append(s.inject(nid, ENQ if OPS[i] else DEQ))
+        if i in SCHEDULE:
+            kind, arg = SCHEDULE[i]
+            if kind == "grow":
+                for _ in range(arg):
+                    s.request_join()
+            else:
+                keep = s.ring.proc[nid]
+                alive = sorted({s.ring.proc[v] for v in s.ring.node_ids()})
+                for pid in [p for p in alive if p != keep][:len(arg)]:
+                    s.request_leave(pid)
+
+    sk.run_rounds(len(OPS) + 80, inject_fn=inject)
+    assert all(sk.requests[r].done for r in rids)
+    return [(sk.requests[r].pos if sk.requests[r].pos is not None else -1,
+             not (sk.requests[r].kind == DEQ
+                  and sk.requests[r].result == -1),
+             sk.requests[r].result
+             if sk.requests[r].kind == DEQ and sk.requests[r].result != -1
+             else None)
+            for r in rids]
+
+
+# ---- FIFO and LIFO vs the Skueue protocol sim through JOIN/LEAVE ----
+for mode, cls, kw in (("queue", ElasticDeviceQueue, {}),
+                      ("stack", ElasticDeviceStack, {"slot_depth": 8})):
+    eq = cls(4, cap=32, payload_width=2, ops_per_shard=L, **kw)
+    dev = run_device(eq, 2)
+    ref = run_protocol(mode)
+    assert [d[0] for d in dev] == [r[0] for r in ref], f"{mode} positions"
+    assert [d[1] for d in dev] == [r[1] for r in ref], f"{mode} matched"
+    assert [d[2] for d in dev] == [r[2] for r in ref], f"{mode} results"
+    print(f"OK property {mode}")
+
+# ---- priority vs the host P-tier oracle (membership-oblivious) ----
+eq = ElasticDevicePriorityQueue(4, n_prios=P_, relaxation=RELAX, cap=32,
+                                payload_width=2, ops_per_shard=L)
+dev = run_device(eq, 2, with_prio=True)
+# replay the SAME wave partitioning run_device used (the shard count at
+# the time each chunk ran) through the membership-oblivious oracle
+cut = sorted(SCHEDULE) + [len(OPS)]
+oracle = PriorityOracle(P_, relaxation=RELAX)
+recs = []
+start = 0
+shards = 4
+for end in cut:
+    chunk = OPS[start:end]
+    if chunk:
+        n = shards * L
+        K = -(-len(chunk) // n)
+        for k in range(K):
+            wave = []
+            for i in range(n):
+                j = k * n + i
+                if j >= len(chunk):
+                    wave.append(None)
+                elif chunk[j]:
+                    wave.append((PENQ, PRIOS[start + j], start + j, i // L))
+                else:
+                    wave.append((PDEQ, 0, None, i // L))
+            recs.extend(r for r in oracle.wave(wave, n_shards=shards)
+                        [:len(chunk) - k * n])
+    if end in SCHEDULE:
+        kind, arg = SCHEDULE[end]
+        shards += arg if kind == "grow" else -len(arg)
+    start = end
+assert len(recs) == len(dev) == len(OPS)
+for j, (d, r) in enumerate(zip(dev, recs)):
+    assert d[1] == r.matched, ("pqueue matched", j)
+    assert d[0] == r.pos, ("pqueue pos", j)
+    if r.matched:
+        assert d[3] == r.tier, ("pqueue tier", j)
+    if r.matched and r.value is not None:
+        assert d[2] == r.value, ("pqueue value", j)
+assert eq.sizes == oracle.sizes
+print("OK property pqueue")
+"""
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.lists(st.booleans(), min_size=16, max_size=40),
+       st.integers(0, 2 ** 31 - 1), st.integers(0, 2), st.integers(0, 1))
+def test_random_mixed_membership_schedule_matches_oracles_8dev(
+        ops, seed, n_events, relax):
+    """Satellite property test: a randomized mixed enq/deq trace with a
+    randomized JOIN/LEAVE schedule produces, through the unified engine,
+    exactly the host oracles' positions, ⊥ sets, results and tiers — for
+    all three disciplines on 8 devices."""
+    rng = np.random.default_rng(seed)
+    n_prios = int(rng.integers(2, 4))
+    prios = [int(p) for p in rng.integers(0, n_prios, len(ops))]
+    schedule = {}
+    shards = 4
+    for idx in sorted(rng.choice(np.arange(1, max(2, len(ops))),
+                                 size=n_events, replace=False).tolist()):
+        if rng.random() < 0.5 and shards <= 6:
+            k = int(rng.integers(1, min(2, 8 - shards) + 1))
+            schedule[int(idx)] = ("grow", k)
+            shards += k
+        elif shards >= 3:
+            m = int(rng.integers(1, min(2, shards - 2) + 1))
+            ids = sorted(rng.choice(np.arange(shards), size=m,
+                                    replace=False).tolist())
+            schedule[int(idx)] = ("shrink", [int(i) for i in ids])
+            shards -= m
+    script = PROPERTY % {"ops": [bool(o) for o in ops], "prios": prios,
+                         "schedule": schedule, "n_prios": n_prios,
+                         "relax": int(relax)}
+    out = run_multidev(script, n_dev=8)
+    assert "OK property queue" in out
+    assert "OK property stack" in out
+    assert "OK property pqueue" in out
