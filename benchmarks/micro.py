@@ -42,6 +42,19 @@ for all three disciplines.  Results go to ``BENCH_PR4.json``:
 per-shard dequeues, reporting the local-serve fraction (serves that avoid
 the cross-shard hop) against the tier skew it costs.
 
+PR 5 adds the deadline-scheduling benchmark: bursty traffic whose
+per-request slack is continuous AND drifts mid-run, at the SAME arrival
+schedule and SAME per-wave service capacity through (a) the single-tier
+FIFO queue, (b) the two-tier priority queue with the best static cut
+(the trace median — which each phase of a drifting distribution lands
+almost entirely on one side of, degenerating to FIFO) and (c) the Seap
+arbitrary-key queue with key = deadline wave — earliest-deadline-first
+at bucket granularity, the directory rolling with the drift.
+Deadline-miss rates and lateness per urgency band show what EDF buys
+over both.  Results go to ``BENCH_PR5.json``:
+
+    PYTHONPATH=src python -m benchmarks.micro --pr5 [path] [--quick]
+
 ``--all [--quick]`` runs EVERY emitter above (the CI bench-smoke entry
 point: one invocation emits every BENCH_PR*.json, and any emitter crash
 fails the run — future PRs add an emitter here instead of editing the
@@ -674,6 +687,209 @@ def emit_bench_pr4(path: str = "BENCH_PR4.json", n_dev: int = 8,
     return data
 
 
+# ------------------------------- PR 5: Seap EDF deadline scheduling --------
+def _measure_edf_mixed(n_dev: int, quick: bool = False) -> dict:
+    """Deadline traffic with *heterogeneous, drifting per-request slack*
+    at the SAME arrival schedule and SAME per-wave service capacity
+    through FIFO, static 2-tier priority (slack below the trace median ->
+    tier 0 — the best one static cut can do), and Seap with key = the
+    deadline wave (EDF at bucket granularity).  The slack distribution
+    DRIFTS mid-run (tight-slack phase, then loose-slack phase — think
+    diurnal traffic): any cut tuned to the whole trace puts each phase
+    almost entirely in one tier, so the static discipline degenerates to
+    FIFO exactly when the periodic bursts pile up backlog, while EDF keys
+    on each request's own deadline and the Seap directory re-zooms as the
+    key distribution moves (splits chase the full buckets, drained ones
+    merge away).  Total throughput is identical by construction — the
+    difference is WHO waits, measured as deadline misses."""
+    from repro.compat import make_mesh
+    from repro.dqueue import (DevicePriorityQueue, DeviceQueue,
+                              DeviceSeapQueue)
+
+    L, W, C = 16, 2, 8                 # wave width / payload / service cap
+    waves = 64 if quick else 192
+    steady, burst, burst_every = 4, 40, 12  # avg ~7.3/wave vs C=8: near-
+    #                                         critical, ~36-deep transient
+    #                                         backlog after each burst that
+    #                                         just drains before the next
+    slack_lo, slack_hi = 2, 30         # overall slack range across phases
+    phase_slacks = ((2, 9), (13, 30))  # tight-phase / loose-phase U[lo,hi)
+    iters = 3 if quick else 10
+    cap = 4096
+    mesh = make_mesh((n_dev,), ("data",))
+    n = n_dev * L
+
+    # one arrival trace shared by every flavor (slack is per REQUEST and
+    # its distribution drifts at half-time — the continuous, non-
+    # stationary urgency a constant-P queue cannot key on)
+    rng = np.random.default_rng(11)
+    trace, slack_by_rid = [], {}
+    rid = 0
+    for w in range(waves):
+        lo_, hi_ = phase_slacks[int(w >= waves // 2)]
+        k = steady + (burst if w % burst_every == 0 else 0)
+        arr = []
+        for _ in range(k):
+            slack = int(rng.integers(lo_, hi_))
+            slack_by_rid[rid] = slack
+            arr.append((w + slack, rid))
+            rid += 1
+        trace.append(arr)
+    tier_cut = int(np.median(list(slack_by_rid.values())))
+
+    def run(flavor):
+        if flavor == "seap_edf":
+            # seed a FINE grid over the near-term deadline range only (3
+            # waves per bucket); the split/merge rule rolls the refined
+            # window forward as early buckets drain and later deadlines
+            # pile up, so far-future deadlines share coarse buckets until
+            # they come due
+            B, grid = 16, 3
+            q = DeviceSeapQueue(mesh, "data", n_buckets=B, cap=cap,
+                                payload_width=W, ops_per_shard=L,
+                                split_occupancy=C // 2,
+                                seed_bounds=[i * grid
+                                             for i in range(1, B)])
+        elif flavor == "priority_2tier":
+            q = DevicePriorityQueue(mesh, "data", n_prios=2, cap=cap,
+                                    payload_width=W, ops_per_shard=L)
+        else:
+            q = DeviceQueue(mesh, "data", cap=cap, payload_width=W,
+                            ops_per_shard=L)
+        state = q.init_state()
+        deadline_of, lateness = {}, {}
+        backlog, w = 0, 0
+        while w < waves or backlog > 0:   # drain tail: serve EVERY request
+            arr = trace[w] if w < waves else []
+            e = np.zeros(n, bool)
+            v = np.zeros(n, bool)
+            pr = np.zeros(n, np.int32)
+            pw = np.zeros((n, W), np.int32)
+            for j, (dl, r) in enumerate(arr):
+                e[j] = v[j] = True
+                # seap keys on the deadline itself; the static discipline
+                # can only threshold the slack into two tiers
+                pr[j] = dl if flavor == "seap_edf" else int(dl - w >= tier_cut)
+                pw[j, 0] = r
+                deadline_of[r] = dl
+            v[len(arr):len(arr) + C] = True          # C dequeue requests
+            if flavor == "fifo":
+                state, _, _, dv, dok, ovf = q.step(
+                    state, jnp.array(e), jnp.array(v), jnp.array(pw))
+            else:
+                state, _, _, _, dv, dok, ovf, _ = q.step(
+                    state, jnp.array(e), jnp.array(v), jnp.array(pr),
+                    jnp.array(pw))
+            if bool(np.asarray(ovf).any()):
+                raise RuntimeError(f"{flavor} overflowed the benchmark cap")
+            dv, dok = np.asarray(dv), np.asarray(dok)
+            served = 0
+            for i in range(n):
+                if dok[i]:
+                    r = int(dv[i, 0])
+                    served += 1
+                    lateness[r] = w - deadline_of.pop(r)
+            backlog += len(arr) - served
+            w += 1
+        return lateness, w
+
+    def summarize(late):
+        a = np.asarray(late, np.float64)
+        if a.size == 0:
+            return {"n": 0}
+        return {"n": int(a.size), "missed": int((a > 0).sum()),
+                "miss_rate": float((a > 0).mean()),
+                "lateness_mean": float(a.mean()),
+                "lateness_p99": float(np.percentile(a, 99)),
+                "lateness_max": float(a.max())}
+
+    # slack band edges for the per-urgency breakdown
+    bands = [(slack_lo, 8, "urgent_slack_2_7"),
+             (8, 16, "mid_slack_8_15"),
+             (16, slack_hi, "relaxed_slack_16_29")]
+
+    out = {"n_dev": n_dev, "waves": waves, "capacity_per_wave": C,
+           "arrivals": {"steady_per_wave": steady, "burst": burst,
+                        "burst_every": burst_every,
+                        "slack_uniform": [slack_lo, slack_hi],
+                        "tier_cut_2tier": tier_cut}}
+    totals = {}
+    for flavor in ("fifo", "priority_2tier", "seap_edf"):
+        late, total = run(flavor)
+        totals[flavor] = total
+        assert set(late) == set(slack_by_rid), "requests lost"
+        row = {"overall": summarize(list(late.values()))}
+        for lo_, hi_, name in bands:
+            row[name] = summarize([lt for r, lt in late.items()
+                                   if lo_ <= slack_by_rid[r] < hi_])
+        out[flavor] = row
+    assert len(set(totals.values())) == 1, f"throughput diverged: {totals}"
+    for base in ("fifo", "priority_2tier"):
+        # miss-count ratio with a floor of one EDF miss, so a zero-miss
+        # EDF run reports "N missed -> at least N x fewer" finitely
+        out[f"edf_miss_improvement_vs_{base}"] = (
+            out[base]["overall"]["missed"]
+            / max(out["seap_edf"]["overall"]["missed"], 1))
+
+    # ---- steady-state wave rate + collective count of the seap path ----
+    K = 8 if quick else 32
+    rng = np.random.default_rng(5)
+    E = jnp.array(rng.random((K, n)) < 0.5)
+    V = jnp.ones((K, n), bool)
+    KY = jnp.array(rng.integers(0, 1000, (K, n)), jnp.int32)
+    PW = jnp.array(rng.integers(0, 100, (K, n, W)), jnp.int32)
+    fifo = DeviceQueue(mesh, "data", cap=cap, payload_width=W,
+                       ops_per_shard=L)
+    sq = DeviceSeapQueue(mesh, "data", n_buckets=8, cap=cap,
+                         payload_width=W, ops_per_shard=L)
+
+    def best_time(fn):
+        fn()  # warmup / compile
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def run_fifo():
+        out_ = fifo.run_waves(fifo.init_state(), E, V, PW)
+        jax.block_until_ready(out_[0].store_full)
+
+    def run_seap():
+        out_ = sq.run_waves(sq.init_state(), E, V, KY, PW)
+        jax.block_until_ready(out_[0].store_full)
+
+    t_fifo, t_seap = best_time(run_fifo), best_time(run_seap)
+    zeros = (sq.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool),
+             jnp.zeros(n, jnp.int32), jnp.zeros((n, W), jnp.int32))
+    out["steady_state"] = {
+        "fifo_waves_per_sec": K / t_fifo,
+        "seap_waves_per_sec": K / t_seap,
+        "overhead_pct": (t_seap - t_fifo) / t_fifo * 100.0,
+        "collectives_per_wave": count_all_to_all(sq._step, zeros),
+    }
+    return out
+
+
+def emit_bench_pr5(path: str = "BENCH_PR5.json", n_dev: int = 8,
+                   quick: bool = False) -> dict:
+    """Measure EDF deadline-miss rates vs FIFO and static tiers and write
+    JSON (re-execs on a forced ``n_dev``-device CPU mesh)."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    child = _reexec_on_mesh(
+        "PR5", path, n_dev,
+        ["--pr5", path, "--n-dev", str(n_dev)]
+        + (["--quick"] if quick else []))
+    if child is not None:
+        return child
+    data = _measure_edf_mixed(n_dev=n_dev, quick=quick)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
 def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
     """The CI bench-smoke entry point: run EVERY BENCH_PR*.json emitter.
 
@@ -686,6 +902,8 @@ def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
                 ("BENCH_PR3.json", lambda p: emit_bench_pr3(
                      p, n_dev=n_dev, quick=quick)),
                 ("BENCH_PR4.json", lambda p: emit_bench_pr4(
+                     p, n_dev=n_dev, quick=quick)),
+                ("BENCH_PR5.json", lambda p: emit_bench_pr5(
                      p, n_dev=n_dev, quick=quick))]
     out, failures = {}, []
     for path, emit in emitters:
@@ -750,6 +968,9 @@ if __name__ == "__main__":
     ap.add_argument("--pr4", nargs="?", const="BENCH_PR4.json", default=None,
                     help="measure pipelined vs sequential wave bursts and "
                          "write BENCH_PR4.json")
+    ap.add_argument("--pr5", nargs="?", const="BENCH_PR5.json", default=None,
+                    help="measure EDF deadline-miss rates vs FIFO and "
+                         "static tiers and write BENCH_PR5.json")
     ap.add_argument("--all", action="store_true",
                     help="run every BENCH_PR*.json emitter (CI bench smoke)")
     ap.add_argument("--quick", action="store_true",
@@ -774,6 +995,9 @@ if __name__ == "__main__":
     elif cli.pr4:
         out = emit_bench_pr4(cli.pr4, n_dev=cli.n_dev, K=cli.waves,
                              quick=cli.quick)
+        print(json.dumps(out, indent=2))
+    elif cli.pr5:
+        out = emit_bench_pr5(cli.pr5, n_dev=cli.n_dev, quick=cli.quick)
         print(json.dumps(out, indent=2))
     else:
         for row in run_all():

@@ -309,6 +309,136 @@ def priority_queue_scan(is_enq: jax.Array, prio: jax.Array, valid: jax.Array,
     return tier, pos, matched, firsts + taken, new_lasts, n_relaxed
 
 
+# -------------------------------------------------- seap bucket scan -------
+INT32_MIN = jnp.int32(-(2 ** 31))
+INT32_MAX = jnp.int32(2 ** 31 - 1)
+
+
+def seap_bucket_lookup(key: jax.Array, lo: jax.Array, active: jax.Array):
+    """Predecessor lookup in the replicated bucket directory: for each key,
+    the active bucket with the largest boundary ``lo <= key``.
+
+    The root bucket (id 0) keeps ``lo == INT32_MIN`` and is always active,
+    so every key has a home; active boundaries are distinct by the split
+    rule, so the argmax is unique (and ties at ``INT32_MIN`` resolve to the
+    root because argmax returns the first index).
+    """
+    eligible = active[None, :] & (lo[None, :] <= key[:, None])
+    score = jnp.where(eligible, lo[None, :], INT32_MIN)
+    return jnp.argmax(score, axis=1).astype(jnp.int32)
+
+
+def seap_queue_scan(is_enq: jax.Array, key: jax.Array, valid: jax.Array,
+                    firsts: jax.Array, lasts: jax.Array, lo: jax.Array,
+                    active: jax.Array, key_lo: jax.Array,
+                    key_hi: jax.Array, *, n_buckets: int,
+                    split_occupancy: int):
+    """Batch position assignment for the arbitrary-key Seap queue
+    (arXiv:1805.03472's search structure collapsed to a two-level bucket
+    directory; see ``core.seap.SeapOracle`` for the full semantics).
+
+    One wave applies all enqueues before all dequeues, then rebalances:
+
+      * enqueues — bucket from :func:`seap_bucket_lookup`, then per-bucket
+        FIFO positions via B masked min-plus scans (the
+        :func:`priority_queue_scan` machinery with tier := bucket);
+      * dequeues — Skeap's :func:`strict_batch_deletemin` over the bucket
+        directory sorted by boundary: the d-th dequeue of the wave takes
+        the d-th element of the boundary-ordered pool, FIFO inside each
+        bucket;
+      * rebalance — at most one split per wave (halve the fullest bucket
+        whose occupancy exceeds ``split_occupancy`` into the lowest free
+        id), preceded by at most one *on-demand* merge (recycle the
+        lowest-id active empty non-root bucket) when the split wants an
+        id and none is free.  The split midpoint is clamped to the
+        *observed* key range ``[key_lo, key_hi]`` (running min/max of
+        enqueued keys — the paper's search structure is built over
+        inserted keys, not the int32 universe), so the zoom lands in the
+        live range immediately instead of halving down from
+        ``INT32_MAX`` geometrically.  Pure replicated arithmetic — no
+        collectives, and no element ever moves between windows.
+
+    Args:
+      is_enq/valid: [n] bool (global wave order); key: [n] int32 (ignored
+        for dequeues); firsts/lasts/lo: [n_buckets] int32; active:
+        [n_buckets] bool; key_lo/key_hi: replicated int32 scalars, the
+        min/max key ever enqueued (INT32_MAX/INT32_MIN while empty).
+    Returns:
+      (bucket [n] int32 (-1 unmatched), pos [n] int32 (⊥ = -1), matched
+      [n] bool, new_firsts, new_lasts, new_lo, new_active, new_key_lo,
+      new_key_hi, n_active) — ``n_active`` is the replicated directory
+      size after the rebalance.
+    """
+    B = n_buckets
+    enq = is_enq & valid
+    deq = (~is_enq) & valid
+    bucket_e = seap_bucket_lookup(key, lo, active)
+    bucket = jnp.full(is_enq.shape, -1, jnp.int32)
+    pos = jnp.full(is_enq.shape, BOTTOM, jnp.int32)
+    new_lasts = []
+    for b in range(B):
+        mask = enq & (bucket_e == b)
+        pos_b, _, st_b = queue_scan(
+            mask, QueueState(firsts[b], lasts[b]), valid=mask)
+        bucket = jnp.where(mask, b, bucket)
+        pos = jnp.where(mask, pos_b, pos)
+        new_lasts.append(st_b.last)
+    new_lasts = jnp.stack(new_lasts)
+    avail = new_lasts - firsts + 1               # sizes after enqueues
+
+    # dequeues: batch-DeleteMin over the directory in boundary order
+    # (inactive buckets sort last and are empty, so they are never taken)
+    order = jnp.argsort(jnp.where(active, lo, INT32_MAX))
+    t_s, pos_d, d_matched, taken_s = strict_batch_deletemin(
+        deq, avail[order], firsts[order], B)
+    taken = jnp.zeros((B,), jnp.int32).at[order].set(taken_s)
+    bucket = jnp.where(d_matched, order[t_s], bucket)
+    pos = jnp.where(d_matched, pos_d, pos)
+    matched = enq | d_matched
+    new_firsts = firsts + taken
+
+    # running observed key range (enqueued keys only)
+    enq_keys_min = jnp.min(jnp.where(enq, key, INT32_MAX))
+    enq_keys_max = jnp.max(jnp.where(enq, key, INT32_MIN))
+    new_key_lo = jnp.minimum(key_lo, enq_keys_min)
+    new_key_hi = jnp.maximum(key_hi, enq_keys_max)
+
+    # ---- rebalance: merge-on-demand then split, replicated arithmetic
+    # only.  An empty bucket is harmless future structure, so its id is
+    # recycled (merged away) ONLY when a split wants an id and none is
+    # free — merging eagerly would dismantle the directory between
+    # bursts, exactly when the next crunch needs it refined. ----
+    sizes = new_lasts - new_firsts + 1
+    ids = jnp.arange(B, dtype=jnp.int32)
+    occ = jnp.where(active, sizes, -1)
+    over = occ > split_occupancy
+    cand = active & (sizes == 0) & (lo != INT32_MIN)
+    need = over.any() & ~(~active).any()          # want to split, no free id
+    active = jnp.where((ids == jnp.argmax(cand)) & need & cand.any(),
+                       False, active)
+    free = ~active
+    b_s = jnp.argmax(jnp.where(over, occ, -1))   # fullest; ties -> lowest id
+    hi = jnp.min(jnp.where(active & (lo > lo[b_s]), lo, INT32_MAX))
+    # clamp the halving to the observed key range (saturating +/-1 at the
+    # int32 edges); a triggered split implies the bucket is non-empty, so
+    # new_key_hi >= lo[b_s] and the clamped range is non-degenerate
+    lo_eff = jnp.maximum(
+        lo[b_s], jnp.where(new_key_lo == INT32_MIN, INT32_MIN,
+                           new_key_lo - 1))
+    hi_eff = jnp.minimum(
+        hi, jnp.where(new_key_hi == INT32_MAX, INT32_MAX, new_key_hi + 1))
+    # overflow-free floor((lo_eff + hi_eff) / 2); the split is valid only
+    # when the midpoint lands strictly inside the bucket's (lo, hi) range
+    mid = (lo_eff & hi_eff) + ((lo_eff ^ hi_eff) >> 1)
+    do_split = over.any() & free.any() & (mid > lo[b_s]) & (mid < hi)
+    b_f = jnp.argmax(free)                       # lowest free id
+    new_lo = jnp.where((ids == b_f) & do_split, mid, lo)
+    new_active = active | ((ids == b_f) & do_split)
+    n_active = jnp.sum(new_active.astype(jnp.int32))
+    return (bucket, pos, matched, new_firsts, new_lasts, new_lo,
+            new_active, new_key_lo, new_key_hi, n_active)
+
+
 # ------------------------------------------------- shard_map distribution ---
 def sharded_queue_scan(is_enq_local: jax.Array, state: QueueState,
                        axis_name: str,

@@ -1,15 +1,20 @@
 from .device_queue import (DeviceQueue, DeviceQueueState, DeviceStack,
                            FifoDiscipline, LifoDiscipline)
 from .elastic import ElasticDeviceQueue, ElasticDeviceStack
+from .errors import QueueOverflowError, ServeInvariantError
 from .priority_queue import (DevicePriorityQueue, ElasticDevicePriorityQueue,
                              PriorityDiscipline, PriorityQueueState)
+from .seap_queue import (DeviceSeapQueue, ElasticDeviceSeapQueue,
+                         SeapDiscipline, SeapQueueState)
 from .wave_engine import (Discipline, WaveEngine,
                           post_enqueue_peak_overflow)
 from .work_queue import WorkQueue
 
 __all__ = ["DeviceQueue", "DeviceQueueState", "DeviceStack",
-           "DevicePriorityQueue", "Discipline", "ElasticDeviceQueue",
-           "ElasticDevicePriorityQueue", "ElasticDeviceStack",
+           "DevicePriorityQueue", "DeviceSeapQueue", "Discipline",
+           "ElasticDeviceQueue", "ElasticDevicePriorityQueue",
+           "ElasticDeviceSeapQueue", "ElasticDeviceStack",
            "FifoDiscipline", "LifoDiscipline", "PriorityDiscipline",
-           "PriorityQueueState", "WaveEngine", "WorkQueue",
-           "post_enqueue_peak_overflow"]
+           "PriorityQueueState", "QueueOverflowError", "SeapDiscipline",
+           "SeapQueueState", "ServeInvariantError", "WaveEngine",
+           "WorkQueue", "post_enqueue_peak_overflow"]

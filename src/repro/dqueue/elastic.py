@@ -72,6 +72,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from .device_queue import DeviceQueue, DeviceQueueState, DeviceStack
+from .errors import QueueOverflowError
 from .wave_engine import (fanout_bound, migrate_packed, recover_positions,
                           rewrite_ring_store)
 
@@ -134,6 +135,31 @@ class _ElasticBase:
             fn = self._build_migration(mesh, P_old, P_new)
             self._mig_cache[key] = [fn, None]  # [jitted, collective count]
         return self._mig_cache[key]
+
+    # ---------------------------------------------------------- overflow ---
+    def _wave_capacity(self) -> int:
+        """Elements one store window holds (per tier/bucket where tiered)."""
+        return self.n_shards * self.cap
+
+    def _occupancies(self) -> list:
+        """Post-wave occupancy per window (subclasses with tier/bucket
+        windows override with the per-window vector)."""
+        return [self.size]
+
+    _overflow_detail: str = ""
+
+    def _check_overflow(self, ovf) -> None:
+        """Host-raise the wave's replicated overflow flag as a structured
+        :class:`~.errors.QueueOverflowError` (was a bare assert in every
+        caller before PR 5).  ``ovf`` is a scalar bool (``step``) or a
+        [K] vector (``run_waves``)."""
+        o = np.asarray(ovf)
+        if not bool(o.any()):
+            return
+        wave = int(np.flatnonzero(o)[0]) if o.ndim >= 1 else None
+        raise QueueOverflowError(self._kind, self._wave_capacity(),
+                                 self._occupancies(), wave=wave,
+                                 detail=self._overflow_detail)
 
     # -------------------------------------------------------- membership ---
     @property
@@ -356,6 +382,91 @@ class _ElasticBase:
         raise NotImplementedError
 
 
+class _MultiWindowElastic(_ElasticBase):
+    """Shared elastic machinery for structures whose ring store is split
+    into ``_n_windows`` round-robin slot windows over one ``[first, last]``
+    interval each — priority tiers (window = tier) and Seap buckets
+    (window = bucket).  State must expose ``firsts``/``lasts`` ``[W]``
+    vectors; the migration wave recovers every window's positions and
+    moves all windows with ONE packed all_to_all (the PR 2 wave
+    vectorized over windows).  Lives here ONCE so a migration fix cannot
+    need landing per discipline (the PR 3 'patched three times' lesson)."""
+
+    @property
+    def _n_windows(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def sizes(self) -> list:
+        f = np.asarray(self.state.firsts)
+        l = np.asarray(self.state.lasts)
+        return [int(x) for x in (l - f + 1)]
+
+    @property
+    def size(self) -> int:
+        return sum(self.sizes)
+
+    def _occupancies(self) -> list:
+        return self.sizes
+
+    def _live_span(self) -> int:
+        # capacity check is per window (each owns its own slot range)
+        return max([0] + self.sizes)
+
+    def _hash_balance(self, P_new: int):
+        """Combined consistent-hashing fidelity report over every
+        window's live range (positions in different windows hash
+        independently)."""
+        f = np.asarray(self.state.firsts)
+        l = np.asarray(self.state.lasts)
+        pos = np.concatenate([np.arange(lo, hi + 1)
+                              for lo, hi in zip(f, l)] or [np.zeros(0)])
+        if pos.size == 0 or pos.size > HASH_BALANCE_MAX_SIZE:
+            return None
+        from ..kernels.hash_route import hash_route_ref
+        _, counts = hash_route_ref(jnp.asarray(pos, jnp.int32),
+                                   jnp.ones((pos.size,), bool), P_new)
+        counts = np.asarray(counts)
+        return {"n": int(pos.size), "max": int(counts.max()),
+                "min": int(counts.min()),
+                "roundrobin_max": -(-int(pos.size) // P_new)}
+
+    @property
+    def _entry_bytes(self) -> int:
+        return 4 * (1 + self.W)  # slot ‖ payload columns
+
+    def _build_migration(self, mesh, P_old: int, P_new: int):
+        axis, cap, W = self.axis, self.cap, self.W
+        n_win = self._n_windows
+        n_mesh = mesh.shape[axis]
+        M = min(n_win * cap, n_win * fanout_bound(P_old, P_new, cap))
+        junk = n_win * cap
+
+        def body(firsts, lasts, sv, sf):
+            s = lax.axis_index(axis).astype(jnp.int32)
+            u = jnp.arange(junk, dtype=jnp.int32)
+            win = u // cap
+            # recover the window-local position each occupied slot holds
+            # (unique in the window's live range; PR 2 invariant per
+            # window)
+            p = recover_positions(s, u % cap, firsts[win], P_old, cap)
+            live = sf[0, :junk] & (p >= firsts[win]) & (p <= lasts[win])
+            owner = jnp.mod(p, P_new).astype(jnp.int32)
+            slot_new = (win * cap + jnp.mod(p // P_new, cap)).astype(
+                jnp.int32)
+            cols = jnp.concatenate([slot_new[:, None], sv[0, :junk]], axis=1)
+            fill = jnp.zeros((1 + W,), jnp.int32).at[0].set(junk)
+            rows, moved, lost = migrate_packed(axis, n_mesh, M, live, owner,
+                                               cols, fill)
+            nsv, nsf = rewrite_ring_store(rows, junk, W)
+            return firsts, lasts, nsv, nsf, moved, lost
+
+        specs = (P(), P(), P(axis), P(axis))
+        wrapped = shard_map(body, mesh=mesh, in_specs=specs,
+                            out_specs=specs + (P(), P()))
+        return jax.jit(wrapped, donate_argnums=(2, 3))
+
+
 class ElasticDeviceQueue(_ElasticBase):
     """Distributed FIFO whose shard count is a runtime variable.
 
@@ -387,17 +498,21 @@ class ElasticDeviceQueue(_ElasticBase):
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, payload):
         """One wave on the current mesh; state is threaded internally.
-        Returns (positions, matched, deq_vals, deq_ok, overflow)."""
+        Returns (positions, matched, deq_vals, deq_ok, overflow); raises
+        :class:`~.errors.QueueOverflowError` when the wave overflowed."""
         self.state, pos, m, dv, dok, ovf = self.inner.step(
             self.state, jnp.asarray(is_enq), jnp.asarray(valid),
             jnp.asarray(payload))
+        self._check_overflow(ovf)
         return pos, m, dv, dok, ovf
 
     def run_waves(self, is_enq, valid, payload):
-        """K pre-staged waves in one dispatch (shapes [K, n_shards * L])."""
+        """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
+        Raises :class:`~.errors.QueueOverflowError` on overflow."""
         self.state, pos, m, dv, dok, ovf = self.inner.run_waves(
             self.state, jnp.asarray(is_enq), jnp.asarray(valid),
             jnp.asarray(payload))
+        self._check_overflow(ovf)
         return pos, m, dv, dok, ovf
 
     @property
@@ -488,17 +603,25 @@ class ElasticDeviceStack(_ElasticBase):
                            payload_width=self.W, ops_per_shard=self.L,
                            slot_depth=self.D, pipelined=self.pipelined)
 
+    _overflow_detail = ("a store slot's depth-D ticket set was exhausted "
+                        "at commit time")
+
+    def _wave_capacity(self) -> int:
+        return self.n_shards * self.cap * self.D
+
     # ------------------------------------------------------------ waves ----
     def step(self, is_push, valid, payload):
         self.state, pos, m, pv, pok, ovf = self.inner.step(
             self.state, jnp.asarray(is_push), jnp.asarray(valid),
             jnp.asarray(payload))
+        self._check_overflow(ovf)
         return pos, m, pv, pok, ovf
 
     def run_waves(self, is_push, valid, payload):
         self.state, pos, m, pv, pok, ovf = self.inner.run_waves(
             self.state, jnp.asarray(is_push), jnp.asarray(valid),
             jnp.asarray(payload))
+        self._check_overflow(ovf)
         return pos, m, pv, pok, ovf
 
     @property

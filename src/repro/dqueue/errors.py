@@ -1,0 +1,73 @@
+"""Structured errors for the device-queue and serving paths.
+
+Before PR 5, capacity overflow was a replicated device bool that every
+caller terminated in a bare ``assert`` (ServeEngine, WorkQueue, the
+benchmarks) — so production overflows died with no occupancy context, or
+worse, sailed through under ``python -O``.  The device wave cannot raise
+(it is jitted shard_map code; the flag is an output), so the host-side
+owners of queue state — the elastic wrappers, WorkQueue, ServeEngine —
+convert the flag into :class:`QueueOverflowError` here, carrying the
+per-tier/bucket occupancy a shed/defer admission policy needs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+class QueueOverflowError(RuntimeError):
+    """A wave's post-enqueue peak exceeded the store capacity.
+
+    This is a DATA-LOSS signal, not flow control: by the time the flag
+    reaches the host, the flagged wave has already executed and a
+    wrapped-around enqueue has overwritten a live head slot, so the
+    structure's contents are no longer trustworthy (recover from a
+    checkpoint, or drop and rebuild the queue).  Admission policies that
+    want to shed/defer BEFORE capacity is violated should act on the
+    occupancy this error carries — at submit time, not by catching this
+    and continuing (a ServeEngine whose flush burst overflowed has also
+    lost any dequeue grants that burst produced).
+
+    Attributes:
+      kind: the structure ("queue" / "stack" / "pqueue" / "squeue" /
+        "workqueue").
+      capacity: elements one window holds (per tier/bucket for the
+        priority and Seap queues, total for FIFO, ``slots * depth`` for
+        the stack).
+      occupancy: occupancy per window AFTER the step/burst completed
+        (one entry for FIFO/stack; per tier for the priority queue; per
+        bucket for Seap).  The flagged wave exceeded ``capacity`` at its
+        post-enqueue peak (see ``wave_engine.post_enqueue_peak_overflow``)
+        — in a multi-wave burst, waves after the flagged one still ran
+        and may have drained the window below what this vector shows.
+      wave: index of the first overflowing wave within a multi-wave
+        burst, or None for a single ``step``.
+    """
+
+    def __init__(self, kind: str, capacity: int,
+                 occupancy: Sequence[int], *,
+                 wave: Optional[int] = None, detail: str = ""):
+        self.kind = kind
+        self.capacity = int(capacity)
+        self.occupancy = [int(x) for x in occupancy]
+        self.wave = wave
+        msg = (f"{kind} overflow (queue contents no longer trustworthy): "
+               f"post-burst occupancy {self.occupancy} against per-window "
+               f"capacity {self.capacity}")
+        if wave is not None:
+            msg += f" (first overflowing wave {wave})"
+        if detail:
+            msg += f"; {detail}"
+        super().__init__(msg)
+
+
+class ServeInvariantError(RuntimeError):
+    """A ServeEngine internal invariant was violated (state corruption —
+    not a capacity or input error).  Carries a ``context`` dict with the
+    engine state that witnessed the violation."""
+
+    def __init__(self, message: str, **context):
+        self.context = dict(context)
+        if context:
+            message += " [" + ", ".join(
+                f"{k}={v!r}" for k, v in context.items()) + "]"
+        super().__init__(message)

@@ -40,22 +40,16 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..compat import shard_map
 from ..core.scan_queue import priority_queue_scan
-from .elastic import _ElasticBase
+from .elastic import _MultiWindowElastic
 from .wave_engine import (Discipline, Dispatch, TAG_GET, TAG_INACTIVE,
-                          TAG_PUT, WaveEngine, fanout_bound, migrate_packed,
-                          post_enqueue_peak_overflow, recover_positions,
-                          rewrite_ring_store, ring_commit)
-
-HASH_BALANCE_MAX_SIZE = 1 << 16
+                          TAG_PUT, WaveEngine,
+                          post_enqueue_peak_overflow, ring_commit)
 
 
 class PriorityQueueState(NamedTuple):
@@ -209,18 +203,23 @@ class DevicePriorityQueue:
         return self._run_waves(state, is_enq, valid, prio, payload)
 
 
-class ElasticDevicePriorityQueue(_ElasticBase):
+class ElasticDevicePriorityQueue(_MultiWindowElastic):
     """P-tier priority queue whose shard count is a runtime variable.
 
     Owns its state like :class:`~.elastic.ElasticDeviceQueue`; ``grow`` /
     ``shrink`` / ``resize`` re-materialize every tier window onto the new
     mesh with one packed migration all_to_all (the PR 2 wave, vectorized
-    over the P tier windows), and checkpoint manifests record the per-tier
-    layout so cold starts can reshard."""
+    over the P tier windows via the shared
+    :class:`~.elastic._MultiWindowElastic` machinery), and checkpoint
+    manifests record the per-tier layout so cold starts can reshard."""
 
     _kind = "pqueue"
     _pad_fill = (0, False)
     _sharded_keys = frozenset({"store_vals", "store_full"})
+
+    @property
+    def _n_windows(self) -> int:
+        return self.n_prios
 
     def __init__(self, n_shards: int, *, n_prios: int = 2,
                  relaxation: int = 0, axis_name: str = "data",
@@ -245,28 +244,22 @@ class ElasticDevicePriorityQueue(_ElasticBase):
     def step(self, is_enq, valid, prio, payload):
         """One wave on the current mesh; state is threaded internally.
         Returns (tier, pos, matched, deq_vals, deq_ok, overflow,
-        n_relaxed)."""
+        n_relaxed); raises :class:`~.errors.QueueOverflowError` when the
+        wave overflowed a tier window."""
         self.state, *out = self.inner.step(
             self.state, jnp.asarray(is_enq), jnp.asarray(valid),
             jnp.asarray(prio), jnp.asarray(payload))
+        self._check_overflow(out[5])
         return tuple(out)
 
     def run_waves(self, is_enq, valid, prio, payload):
-        """K pre-staged waves in one dispatch (shapes [K, n_shards * L])."""
+        """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
+        Raises :class:`~.errors.QueueOverflowError` on tier overflow."""
         self.state, *out = self.inner.run_waves(
             self.state, jnp.asarray(is_enq), jnp.asarray(valid),
             jnp.asarray(prio), jnp.asarray(payload))
+        self._check_overflow(out[5])
         return tuple(out)
-
-    @property
-    def sizes(self) -> list:
-        f = np.asarray(self.state.firsts)
-        l = np.asarray(self.state.lasts)
-        return [int(x) for x in (l - f + 1)]
-
-    @property
-    def size(self) -> int:
-        return sum(self.sizes)
 
     # -------------------------------------------------------- migration ----
     def _unpack(self, state):
@@ -274,33 +267,6 @@ class ElasticDevicePriorityQueue(_ElasticBase):
 
     def _pack(self, a, b, X, Y):
         return PriorityQueueState(a, b, X, Y)
-
-    def _live_span(self) -> int:
-        # capacity check is per tier (each tier owns its own slot window)
-        return max([0] + [l - f + 1
-                          for f, l in zip(np.asarray(self.state.firsts),
-                                          np.asarray(self.state.lasts))])
-
-    def _hash_balance(self, P_new: int):
-        """Combined consistent-hashing fidelity report over every tier's
-        live window (positions from different tiers hash independently)."""
-        f = np.asarray(self.state.firsts)
-        l = np.asarray(self.state.lasts)
-        pos = np.concatenate([np.arange(lo, hi + 1)
-                              for lo, hi in zip(f, l)] or [np.zeros(0)])
-        if pos.size == 0 or pos.size > HASH_BALANCE_MAX_SIZE:
-            return None
-        from ..kernels.hash_route import hash_route_ref
-        _, counts = hash_route_ref(jnp.asarray(pos, jnp.int32),
-                                   jnp.ones((pos.size,), bool), P_new)
-        counts = np.asarray(counts)
-        return {"n": int(pos.size), "max": int(counts.max()),
-                "min": int(counts.min()),
-                "roundrobin_max": -(-int(pos.size) // P_new)}
-
-    @property
-    def _entry_bytes(self) -> int:
-        return 4 * (1 + self.W)  # slot ‖ payload columns
 
     def _layout(self) -> dict:
         return {**super()._layout(), "P": self.n_prios,
@@ -319,32 +285,3 @@ class ElasticDevicePriorityQueue(_ElasticBase):
     def _from_state_dict(self, d: dict):
         return PriorityQueueState(d["firsts"], d["lasts"], d["store_vals"],
                                   d["store_full"])
-
-    def _build_migration(self, mesh, P_old: int, P_new: int):
-        axis, cap, W, P_ = self.axis, self.cap, self.W, self.n_prios
-        n_mesh = mesh.shape[axis]
-        M = min(P_ * cap, P_ * fanout_bound(P_old, P_new, cap))
-        junk = P_ * cap
-
-        def body(firsts, lasts, sv, sf):
-            s = lax.axis_index(axis).astype(jnp.int32)
-            u = jnp.arange(junk, dtype=jnp.int32)
-            tier = u // cap
-            # recover the tier-local position each occupied slot holds
-            # (unique in the tier's live window; PR 2 invariant per tier)
-            p = recover_positions(s, u % cap, firsts[tier], P_old, cap)
-            live = sf[0, :junk] & (p >= firsts[tier]) & (p <= lasts[tier])
-            owner = jnp.mod(p, P_new).astype(jnp.int32)
-            slot_new = (tier * cap + jnp.mod(p // P_new, cap)).astype(
-                jnp.int32)
-            cols = jnp.concatenate([slot_new[:, None], sv[0, :junk]], axis=1)
-            fill = jnp.zeros((1 + W,), jnp.int32).at[0].set(junk)
-            rows, moved, lost = migrate_packed(axis, n_mesh, M, live, owner,
-                                               cols, fill)
-            nsv, nsf = rewrite_ring_store(rows, junk, W)
-            return firsts, lasts, nsv, nsf, moved, lost
-
-        specs = (P(), P(), P(axis), P(axis))
-        wrapped = shard_map(body, mesh=mesh, in_specs=specs,
-                            out_specs=specs + (P(), P()))
-        return jax.jit(wrapped, donate_argnums=(2, 3))

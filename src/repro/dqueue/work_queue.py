@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .device_queue import DeviceQueue
+from .errors import QueueOverflowError
 
 
 @dataclass
@@ -127,7 +128,15 @@ class WorkQueue:
         self.state, pos, matched, deq_vals, deq_ok, overflow = \
             self.dq.run_waves(self.state, jnp.array(is_enq),
                               jnp.array(valid), jnp.array(payload))
-        assert not bool(np.asarray(overflow).any()), "work queue overflow"
+        o = np.asarray(overflow)
+        if bool(o.any()):
+            size = (int(np.asarray(self.state.last))
+                    - int(np.asarray(self.state.first)) + 1)
+            raise QueueOverflowError(
+                "workqueue", self.dq.n_shards * self.dq.cap, [size],
+                wave=int(np.flatnonzero(o)[0]) if o.ndim >= 1 else None,
+                detail=f"{len(self.leases)} leases outstanding, "
+                       f"{self.stats['items_done']} items done")
         deq_vals = np.asarray(deq_vals)
         deq_ok = np.asarray(deq_ok)
         all_grants: List[List[Tuple[int, np.ndarray]]] = []

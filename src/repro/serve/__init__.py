@@ -1,3 +1,5 @@
+from ..dqueue import QueueOverflowError, ServeInvariantError
 from .engine import Request, ServeEngine
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["QueueOverflowError", "Request", "ServeEngine",
+           "ServeInvariantError"]

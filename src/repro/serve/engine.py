@@ -43,6 +43,18 @@ queue's highest-priority-first wave resolution, NOT a host scheduler
 heuristic), and per-tier queue waits are tracked so mixed-load tail-latency
 separation is measurable (``tier_wait_stats``).  ``relaxation=k`` forwards
 Skeap's bounded tier-relaxation knob to the queue.
+
+Deadline scheduling (PR 5): ``ServeEngine(deadline=True)`` swaps the
+admission fabric for an :class:`~repro.dqueue.ElasticDeviceSeapQueue` —
+the Seap arbitrary-key discipline with key = the request's deadline step,
+so each step's fused wave admits **earliest-deadline-first** (EDF, at the
+bucket granularity of the Seap directory), and ``deadline_stats`` reports
+the miss rate.  Queue overflow is no longer an assert anywhere on this
+path: the elastic wrappers raise
+:class:`~repro.dqueue.QueueOverflowError` with per-tier/bucket occupancy,
+and :meth:`resize` raises :class:`~repro.dqueue.ServeInvariantError`
+instead of a stripped-under-``-O`` bare assert when its enqueue-only
+drain wave misbehaves.
 """
 from __future__ import annotations
 
@@ -53,7 +65,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..dqueue import ElasticDeviceQueue, ElasticDevicePriorityQueue
+from ..dqueue import (ElasticDeviceQueue, ElasticDevicePriorityQueue,
+                      ElasticDeviceSeapQueue, ServeInvariantError)
 
 
 @dataclasses.dataclass
@@ -62,6 +75,7 @@ class Request:
     prompt: List[int]
     max_new: int = 8
     prio: int = 0
+    deadline: int = -1            # absolute engine step to start by (EDF)
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     enqueue_step: int = -1
@@ -73,7 +87,8 @@ class ServeEngine:
     def __init__(self, model, params, mesh, *, max_slots: int = 4,
                  max_seq: int = 64, queue_cap: int = 256,
                  priorities: int = 1, relaxation: int = 0,
-                 pipelined: bool = True):
+                 deadline: bool = False, n_buckets: int = 8,
+                 deadline_horizon: int = 64, pipelined: bool = True):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -81,7 +96,25 @@ class ServeEngine:
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.priorities = priorities
-        if priorities > 1:
+        self.deadline = deadline
+        if deadline and priorities > 1:
+            raise ValueError("deadline=True (EDF via the Seap queue) and "
+                             "priorities > 1 (SLA tiers) are exclusive "
+                             "admission disciplines")
+        if deadline:
+            # seed the directory on a step grid over the deadline horizon
+            # (a cold directory serves near-FIFO until splits zoom in);
+            # the split/merge rule then rolls the refined window forward
+            # as past buckets drain and future ones fill.  Splits trigger
+            # at roughly one refill's worth of waiting requests.
+            grid = max(1, deadline_horizon // n_buckets)
+            self.queue = ElasticDeviceSeapQueue(
+                mesh.shape["data"], n_buckets=n_buckets, cap=queue_cap,
+                payload_width=2, ops_per_shard=max(8, 2 * max_slots),
+                split_occupancy=max(1, 2 * max_slots),
+                seed_bounds=[i * grid for i in range(1, n_buckets)],
+                pipelined=pipelined)
+        elif priorities > 1:
             self.queue = ElasticDevicePriorityQueue(
                 mesh.shape["data"], n_prios=priorities,
                 relaxation=relaxation, cap=queue_cap, payload_width=2,
@@ -111,10 +144,12 @@ class ServeEngine:
             _one, in_axes=(None, 1, 0, 0), out_axes=(0, 1)))
         self.stats = {"served": 0, "queue_waits": [],
                       "queue_waits_by_prio": {p: [] for
-                                              p in range(priorities)}}
+                                              p in range(priorities)},
+                      "deadline_lateness": []}
 
     # ---------------------------------------------------------- frontend ---
-    def submit(self, reqs: List[Request], prio: Optional[int] = None):
+    def submit(self, reqs: List[Request], prio: Optional[int] = None,
+               deadline: Optional[int] = None):
         """Stage arrivals for the distributed queue.
 
         They enter the queue on the next engine step, fused with that step's
@@ -124,6 +159,11 @@ class ServeEngine:
 
         With ``priorities > 1``, ``prio`` (or each request's ``.prio``
         field) selects the SLA tier: 0 is served ahead of 1, etc.
+
+        With ``deadline=True`` on the engine, ``deadline`` (steps from
+        now) or each request's ``.deadline`` field (an absolute engine
+        step) sets the EDF key — requests with earlier deadlines are
+        admitted first, bucket-granular.
         """
         for r in reqs:
             if prio is not None:
@@ -131,6 +171,12 @@ class ServeEngine:
             if not 0 <= r.prio < self.priorities:
                 raise ValueError(f"request {r.rid} prio {r.prio} outside "
                                  f"[0, {self.priorities})")
+            if self.deadline:
+                if deadline is not None:
+                    r.deadline = self.step_no + deadline
+                if r.deadline < 0:
+                    raise ValueError(f"request {r.rid} needs a deadline "
+                                     "(engine runs EDF admission)")
             self.requests[r.rid] = r
             r.enqueue_step = self.step_no
             self._staged.append(r.rid)
@@ -154,19 +200,21 @@ class ServeEngine:
         for j, rid in enumerate(enq_rids):
             k, i = divmod(j, n)
             is_enq[k, i] = valid[k, i] = True
-            prio[k, i] = self.requests[rid].prio
+            prio[k, i] = (self.requests[rid].deadline if self.deadline
+                          else self.requests[rid].prio)
             payload[k, i, 0] = rid
         for m in range(n_deq):
             k, i = divmod(len(enq_rids) + m, n)
             valid[k, i] = True  # dequeue request
-        if self.priorities > 1:
-            _, _, _, dv, dok, ovf, _ = self.queue.run_waves(
+        # overflow is raised by the elastic wrapper as QueueOverflowError
+        # (with per-tier/bucket occupancy) — no bare assert on this path
+        if self.deadline or self.priorities > 1:
+            _, _, _, dv, dok, _, _ = self.queue.run_waves(
                 jnp.array(is_enq), jnp.array(valid), jnp.array(prio),
                 jnp.array(payload))
         else:
-            _, _, dv, dok, ovf = self.queue.run_waves(
+            _, _, dv, dok, _ = self.queue.run_waves(
                 jnp.array(is_enq), jnp.array(valid), jnp.array(payload))
-        assert not bool(np.asarray(ovf).any())
         dv = np.asarray(dv).reshape(n_waves * n, 2)
         dok = np.asarray(dok).reshape(n_waves * n)
         got = [int(dv[j, 0]) for j in range(n_waves * n) if dok[j]]
@@ -184,21 +232,55 @@ class ServeEngine:
             self.stats["queue_waits"].append(r.start_step - r.enqueue_step)
             self.stats["queue_waits_by_prio"][r.prio].append(
                 r.start_step - r.enqueue_step)
+            if self.deadline and r.deadline >= 0:
+                self.stats["deadline_lateness"].append(
+                    r.start_step - r.deadline)
             self.slots[slot] = rid
             self.slot_pos[slot] = 0
 
+    def _pending_by_prio(self) -> Dict[int, int]:
+        """Submitted-but-not-yet-admitted request count per tier — the
+        starvation the wait stats exist to expose."""
+        pending = {p: 0 for p in range(self.priorities)}
+        for r in self.requests.values():
+            if r.start_step < 0 and not r.done:
+                pending[r.prio] += 1
+        return pending
+
     def tier_wait_stats(self) -> Dict[int, dict]:
         """Per-tier admission latency (engine steps from submit to slot):
-        count / mean / p50 / p99 — the mixed-load separation the priority
-        fabric exists to provide."""
+        count / mean / p50 / p99 plus the tier's ``pending`` (submitted,
+        never admitted) count — the mixed-load separation the priority
+        fabric exists to provide.  EVERY configured tier gets a row: a
+        starved tier shows ``{"n": 0, "pending": k}`` instead of being
+        silently omitted (which hid exactly the starvation this report
+        exists to surface)."""
+        pending = self._pending_by_prio()
         out = {}
-        for p, waits in self.stats["queue_waits_by_prio"].items():
-            if not waits:
-                continue
-            w = np.asarray(waits, np.float64)
-            out[p] = {"n": len(waits), "mean": float(w.mean()),
-                      "p50": float(np.percentile(w, 50)),
-                      "p99": float(np.percentile(w, 99))}
+        for p in range(self.priorities):
+            waits = self.stats["queue_waits_by_prio"].get(p, [])
+            row = {"n": len(waits), "pending": pending[p]}
+            if waits:
+                w = np.asarray(waits, np.float64)
+                row.update(mean=float(w.mean()),
+                           p50=float(np.percentile(w, 50)),
+                           p99=float(np.percentile(w, 99)))
+            out[p] = row
+        return out
+
+    def deadline_stats(self) -> dict:
+        """EDF admission outcome (``deadline=True`` engines): admissions,
+        misses (started after the deadline step), miss rate, lateness
+        percentiles, and the still-pending count."""
+        late = np.asarray(self.stats["deadline_lateness"], np.float64)
+        missed = int((late > 0).sum()) if late.size else 0
+        out = {"n": int(late.size), "missed": missed,
+               "miss_rate": missed / late.size if late.size else 0.0,
+               "pending": sum(self._pending_by_prio().values())}
+        if late.size:
+            out.update(lateness_mean=float(late.mean()),
+                       lateness_p99=float(np.percentile(late, 99)),
+                       lateness_max=float(late.max()))
         return out
 
     # ----------------------------------------------------------- elastic ---
@@ -211,7 +293,15 @@ class ServeEngine:
         are preserved exactly.  Returns the migration stats dict."""
         enq_rids, self._staged = self._staged, []
         got = self._queue_wave(enq_rids, 0)
-        assert not got  # enqueue-only wave grants nothing
+        if got:
+            # an enqueue-only drain wave granted dequeues: the host-side
+            # queue mirror and the device queue have diverged (was a bare
+            # assert, invisible under ``python -O``)
+            raise ServeInvariantError(
+                "resize drain wave granted requests from an enqueue-only "
+                "wave", granted_rids=got, staged=len(enq_rids),
+                n_shards_from=self.queue.n_shards, n_shards_to=n_shards,
+                host_qsize=self._host_qsize, step=self.step_no)
         return self.queue.resize(n_shards)
 
     # ------------------------------------------------------------ decode ---

@@ -1,0 +1,313 @@
+"""PR 5 Seap arbitrary-priority discipline: DeviceSeapQueue differential
+vs. the host bucket-directory oracle (op-by-op, across grow+shrink, with
+directory splits/merges exercised), HLO collective count, pipelined burst
+equality, checkpoint cold-start, and the structured-overflow regression
+(QueueOverflowError replaces every bare assert on the wave paths)."""
+import numpy as np
+import pytest
+
+from multidev import run_multidev
+
+DIFFERENTIAL = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.seap import DEQ, ENQ, SeapOracle
+from repro.dqueue import ElasticDeviceSeapQueue
+
+# randomized mixed enq/deq schedule with random int32 keys; migration
+# schedule applied between waves (one grow, one shrink) — the oracle is
+# membership-oblivious, so op-by-op equality proves migrations lose or
+# reorder nothing, and a low split threshold forces directory rebalances.
+for B, seeds in ((4, None), (8, [-500, 0, 500])):
+    eq = ElasticDeviceSeapQueue(4, n_buckets=B, cap=32, payload_width=2,
+                                ops_per_shard=4, split_occupancy=6,
+                                seed_bounds=seeds)
+    oracle = SeapOracle(B, split_occupancy=6, seed_bounds=seeds)
+    rng = np.random.default_rng(1000 + B)
+    for it in range(14):
+        if it == 5:
+            st = eq.grow(2)
+            assert st["moved"] == eq.size == oracle.size, (st, it)
+        if it == 10:
+            st = eq.shrink([0, 3])
+            assert st["moved"] == eq.size == oracle.size, (st, it)
+        n = eq.n_shards * eq.L
+        e = rng.random(n) < 0.55
+        v = rng.random(n) < 0.9
+        key = rng.integers(-1000, 1000, n).astype(np.int32)
+        pw = np.zeros((n, 2), np.int32)
+        pw[:, 0] = rng.integers(0, 1 << 20, n)
+        bucket, pos, m, dv, dok, ovf, nact = eq.step(e, v, key, pw)
+        assert not bool(np.asarray(ovf).any())
+        ops = [None if not v[i] else
+               ((ENQ, int(key[i]), int(pw[i, 0])) if e[i]
+                else (DEQ, 0, None)) for i in range(n)]
+        recs = oracle.wave(ops)
+        bucket, pos, m, dv, dok = map(np.asarray,
+                                      (bucket, pos, m, dv, dok))
+        for i, r in enumerate(recs):
+            assert bool(m[i]) == r.matched, (B, it, i)
+            assert int(bucket[i]) == r.bucket, (B, it, i)
+            assert int(pos[i]) == r.pos, (B, it, i)
+            if r.matched and r.value is not None:
+                # matched dequeue MUST find its element (none lost)
+                assert bool(dok[i]), (B, it, i)
+                assert int(dv[i, 0]) == r.value, (B, it, i)
+        # the replicated directory evolves identically on both sides
+        assert int(nact) == oracle.n_active, (B, it)
+        assert eq.directory() == oracle.directory(), (B, it)
+    assert eq.sizes == oracle.sizes, B
+    assert oracle.n_splits > 0 and oracle.n_merges > 0, (
+        B, oracle.n_splits, oracle.n_merges)
+    print(f"OK seap B={B} seeded={seeds is not None} "
+          f"splits={oracle.n_splits} merges={oracle.n_merges} "
+          f"dir={len(oracle.directory())}")
+"""
+
+
+def test_seap_queue_matches_oracle_across_migrations_8dev():
+    """Acceptance: DeviceSeapQueue matches the host bucket-directory
+    oracle op-by-op on 8 CPU devices over random arbitrary-key schedules,
+    including across one grow and one shrink migration, with directory
+    splits AND merges actually exercised, cold and seeded."""
+    out = run_multidev(DIFFERENTIAL, n_dev=8)
+    assert "OK seap B=4 seeded=False" in out
+    assert "OK seap B=8 seeded=True" in out
+
+
+COLLECTIVES = r"""
+import re
+import jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import DeviceSeapQueue
+def count_all_to_all(jitted, args):
+    txt = jitted.lower(*args).compile().as_text()
+    return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+mesh = make_mesh((8,), ("data",))
+K, L = 6, 4
+n = 8 * L
+for B in (2, 8):
+    for pipelined in (False, True):
+        dq = DeviceSeapQueue(mesh, "data", n_buckets=B, cap=32,
+                             payload_width=2, ops_per_shard=L,
+                             pipelined=pipelined)
+        args = (dq.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool),
+                jnp.zeros(n, jnp.int32), jnp.zeros((n, 2), jnp.int32))
+        c = count_all_to_all(dq._step, args)
+        assert c <= 2, f"B={B}: {c} all-to-alls per wave"
+        margs = (dq.init_state(), jnp.zeros((K, n), bool),
+                 jnp.zeros((K, n), bool), jnp.zeros((K, n), jnp.int32),
+                 jnp.zeros((K, n, 2), jnp.int32))
+        cm = count_all_to_all(dq._run_waves, margs)
+        assert cm <= 2, f"B={B} pipelined={pipelined}: {cm} in run_waves"
+        print(f"OK seap collectives B={B} pipe={pipelined}: {c}/{cm}")
+"""
+
+
+def test_seap_wave_lowers_to_two_all_to_alls_8dev():
+    """Acceptance: the Seap wave costs <= 2 all_to_all collectives per
+    wave — the directory lookup, B masked scans, batch-DeleteMin and the
+    split/merge rebalance are all replicated arithmetic on the wire-free
+    side of the packed Stage-4 layout."""
+    out = run_multidev(COLLECTIVES, n_dev=8)
+    for B in (2, 8):
+        assert f"OK seap collectives B={B} pipe=False: 2/2" in out
+        assert f"OK seap collectives B={B} pipe=True:" in out
+
+
+RUN_WAVES = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import DeviceSeapQueue
+
+mesh = make_mesh((8,), ("data",))
+L, K = 4, 6
+n = 8 * L
+rng = np.random.default_rng(41)
+E = rng.random((K, n)) < 0.6
+V = rng.random((K, n)) < 0.9
+KY = rng.integers(-99, 99, (K, n)).astype(np.int32)
+PW = rng.integers(0, 99, (K, n, 2)).astype(np.int32)
+make = lambda p: DeviceSeapQueue(mesh, "data", n_buckets=4, cap=64,
+                                 payload_width=2, ops_per_shard=L,
+                                 split_occupancy=5, pipelined=p)
+seq, pipe = make(False), make(True)
+sb = seq.init_state()
+outs = []
+for k in range(K):
+    sb, *o = seq.step(sb, jnp.array(E[k]), jnp.array(V[k]),
+                      jnp.array(KY[k]), jnp.array(PW[k]))
+    outs.append([np.asarray(x) for x in o])
+for mode, q in (("sequential", seq), ("pipelined", pipe)):
+    sa, *oa = q.run_waves(q.init_state(), jnp.array(E), jnp.array(V),
+                          jnp.array(KY), jnp.array(PW))
+    oa = [np.asarray(x) for x in oa]
+    for k in range(K):
+        for a, b in zip(oa, outs[k]):
+            assert (a[k] == b).all(), (mode, k)
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        assert (np.asarray(a) == np.asarray(b)).all(), mode
+print("OK seap run_waves == K steps (sequential AND pipelined)")
+"""
+
+
+def test_seap_run_waves_equals_stepwise_8dev():
+    """The pipelined and sequential K-wave bursts are bit-identical to K
+    host-driven steps — outputs, final state, AND the directory carry
+    (the rebalance rides the scan carry correctly)."""
+    out = run_multidev(RUN_WAVES, n_dev=8)
+    assert "OK seap run_waves == K steps" in out
+
+
+CHECKPOINT = r"""
+import tempfile
+import numpy as np
+from repro.dqueue import ElasticDeviceSeapQueue
+
+q = ElasticDeviceSeapQueue(6, n_buckets=4, cap=16, payload_width=2,
+                           ops_per_shard=4, split_occupancy=8)
+n = q.n_shards * q.L
+rng = np.random.default_rng(3)
+for _ in range(3):                      # force some directory refinement
+    e = np.ones(n, bool)
+    key = rng.integers(-1000, 1000, n).astype(np.int32)
+    pw = np.zeros((n, 2), np.int32)
+    pw[:, 0] = rng.integers(0, 1 << 20, n)
+    q.step(e, e, key, pw)
+assert q.n_active > 1, "no split happened; test is vacuous"
+with tempfile.TemporaryDirectory() as d:
+    q.save(d, 7)
+    q2 = ElasticDeviceSeapQueue.restore(d, n_shards=3)
+assert q2.n_shards == 3 and q2.n_buckets == 4
+assert q2.split_occupancy == 8
+assert q2.migrations[-1]["kind"] == "shrink"
+assert q2.sizes == q.sizes and q2.size == 3 * n
+# the bucket table survives the manifest round-trip + reshard
+assert q2.directory() == q.directory()
+# drain: every element survives, each bucket comes out in FIFO order
+got = []
+while q2.size > 0:
+    m = q2.n_shards * q2.L
+    b, _, _, dv, dok, _, _ = q2.step(np.zeros(m, bool), np.ones(m, bool),
+                                     np.zeros(m, np.int32),
+                                     np.zeros((m, 2), np.int32))
+    b, dv, dok = np.asarray(b), np.asarray(dv), np.asarray(dok)
+    got.extend((int(b[i]), int(dv[i, 0])) for i in range(m) if dok[i])
+assert len(got) == 3 * n
+print("OK seap checkpoint cold-start reshard 6 -> 3")
+"""
+
+
+def test_seap_checkpoint_cold_start_reshard_8dev():
+    """Satellite integration: checkpoint manifests carry the bucket
+    layout (B, split threshold, seed) and the state dict carries the live
+    directory, so a cold start onto a different shard count restores the
+    directory and loses no element."""
+    out = run_multidev(CHECKPOINT, n_dev=8)
+    assert "OK seap checkpoint cold-start reshard" in out
+
+
+def test_seap_seed_bounds_validation():
+    from repro.core.seap import SeapOracle
+    from repro.dqueue import DeviceSeapQueue
+    from repro.compat import make_mesh
+
+    with pytest.raises(ValueError):
+        SeapOracle(2, split_occupancy=4, seed_bounds=[1, 2])   # > B-1
+    with pytest.raises(ValueError):
+        SeapOracle(4, split_occupancy=4, seed_bounds=[5, 5])   # not strict
+    with pytest.raises(ValueError):
+        SeapOracle(4, split_occupancy=4, seed_bounds=[-(2 ** 31)])
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError):
+        DeviceSeapQueue(mesh, "data", n_buckets=2, seed_bounds=[3, 9])
+
+
+# --------------------------------------------------------------------------
+# Headline bugfix: overflow is no longer an assert.  A wrapped-around
+# enqueue at exactly `capacity` (the `new_last - first + 1 > capacity`
+# post-enqueue-peak boundary) must raise QueueOverflowError carrying the
+# per-tier/bucket occupancy — scalar path, per-tier [P] vector path, and
+# bucket path alike; run_waves reports the first overflowing wave index.
+# --------------------------------------------------------------------------
+def test_overflow_raises_structured_error_scalar_path():
+    from repro.dqueue import ElasticDeviceQueue, QueueOverflowError
+
+    q = ElasticDeviceQueue(1, cap=2, payload_width=1, ops_per_shard=4)
+    n = q.n_shards * q.L
+    one = np.ones((n, 1), np.int32)
+    fill = np.array([True, True, False, False])
+    q.step(fill, fill, one)                   # 2 live == capacity: fine
+    e = np.array([True, False, False, False])
+    v = np.array([True, True, False, False])  # 1 enq + 1 deq: peak = 3
+    with pytest.raises(QueueOverflowError) as ei:
+        q.step(e, v, one)
+    ex = ei.value
+    assert ex.kind == "queue" and ex.capacity == 2
+    assert ex.occupancy == [2] and ex.wave is None
+    assert "occupancy" in str(ex)
+
+
+def test_overflow_raises_structured_error_per_tier_vector_path():
+    from repro.dqueue import ElasticDevicePriorityQueue, QueueOverflowError
+
+    q = ElasticDevicePriorityQueue(1, n_prios=3, cap=2, payload_width=1,
+                                   ops_per_shard=4)
+    n = q.n_shards * q.L
+    one = np.ones((n, 1), np.int32)
+    tier = np.full(n, 1, np.int32)
+    fill = np.array([True, True, False, False])
+    q.step(fill, fill, tier, one)             # tier 1 at exact capacity
+    e = np.array([True, False, False, False])
+    v = np.array([True, True, False, False])
+    with pytest.raises(QueueOverflowError) as ei:
+        q.step(e, v, tier, one)
+    ex = ei.value
+    assert ex.kind == "pqueue" and ex.capacity == 2
+    assert len(ex.occupancy) == 3 and ex.occupancy[1] == 2, ex.occupancy
+
+
+def test_overflow_raises_structured_error_bucket_path():
+    from repro.dqueue import ElasticDeviceSeapQueue, QueueOverflowError
+
+    q = ElasticDeviceSeapQueue(1, n_buckets=2, cap=2, payload_width=1,
+                               ops_per_shard=4, split_occupancy=99)
+    n = q.n_shards * q.L
+    one = np.ones((n, 1), np.int32)
+    key = np.zeros(n, np.int32)
+    fill = np.array([True, True, False, False])
+    q.step(fill, fill, key, one)
+    e = np.array([True, False, False, False])
+    v = np.array([True, True, False, False])
+    with pytest.raises(QueueOverflowError) as ei:
+        q.step(e, v, key, one)
+    ex = ei.value
+    assert ex.kind == "squeue" and len(ex.occupancy) == 2
+
+
+def test_overflow_run_waves_reports_first_overflowing_wave():
+    from repro.dqueue import ElasticDeviceQueue, QueueOverflowError
+
+    q = ElasticDeviceQueue(1, cap=2, payload_width=1, ops_per_shard=4)
+    K, n = 3, q.n_shards * q.L
+    # wave 0 fills to capacity, wave 1 wraps around (enq+deq), wave 2 idle
+    E = np.zeros((K, n), bool)
+    V = np.zeros((K, n), bool)
+    E[0, :2] = V[0, :2] = True
+    E[1, 0] = V[1, 0] = True
+    V[1, 1] = True
+    with pytest.raises(QueueOverflowError) as ei:
+        q.run_waves(E, V, np.ones((K, n, 1), np.int32))
+    assert ei.value.wave == 1
+
+
+def test_overflow_raises_in_work_queue():
+    from repro.compat import make_mesh
+    from repro.dqueue import DeviceQueue, QueueOverflowError, WorkQueue
+
+    mesh = make_mesh((1,), ("data",))
+    wq = WorkQueue(DeviceQueue(mesh, "data", cap=2, payload_width=4,
+                               ops_per_shard=4), lease_steps=8)
+    wq.step([wq.make_item([7]) for _ in range(2)], [0])   # exactly full
+    with pytest.raises(QueueOverflowError) as ei:
+        wq.step([wq.make_item([8])], [1])                 # wrap-around
+    assert ei.value.kind == "workqueue" and "leases" in str(ei.value)

@@ -189,18 +189,22 @@ PROPERTY = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.protocol import DEQ, ENQ, Skueue
 from repro.core.priority import DEQ as PDEQ, ENQ as PENQ, PriorityOracle
+from repro.core.seap import DEQ as SDEQ, ENQ as SENQ, SeapOracle
 from repro.dqueue import (ElasticDeviceQueue, ElasticDeviceStack,
-                          ElasticDevicePriorityQueue)
+                          ElasticDevicePriorityQueue, ElasticDeviceSeapQueue)
 
 OPS = %(ops)r
 PRIOS = %(prios)r
+KEYS = %(keys)r
 SCHEDULE = %(schedule)r
 P_ = %(n_prios)d
 RELAX = %(relax)d
 L = 4
+B_ = 4
+SPLIT_OCC = 6
 
 
-def run_device(elastic, W, with_prio=False):
+def run_device(elastic, W, codes=None):
     outs = []
     cut = sorted(SCHEDULE) + [len(OPS)]
     start = 0
@@ -217,9 +221,10 @@ def run_device(elastic, W, with_prio=False):
                 k, i = divmod(j, n)
                 E[k, i] = bool(op)
                 V[k, i] = True
-                PR[k, i] = PRIOS[start + j]
+                if codes is not None:
+                    PR[k, i] = codes[start + j]
                 PW[k, i, 0] = start + j
-            if with_prio:
+            if codes is not None:
                 tier, pos, m, dv, dok, ovf, _ = elastic.run_waves(E, V, PR,
                                                                   PW)
             else:
@@ -291,7 +296,7 @@ for mode, cls, kw in (("queue", ElasticDeviceQueue, {}),
 # ---- priority vs the host P-tier oracle (membership-oblivious) ----
 eq = ElasticDevicePriorityQueue(4, n_prios=P_, relaxation=RELAX, cap=32,
                                 payload_width=2, ops_per_shard=L)
-dev = run_device(eq, 2, with_prio=True)
+dev = run_device(eq, 2, codes=PRIOS)
 # replay the SAME wave partitioning run_device used (the shard count at
 # the time each chunk ran) through the membership-oblivious oracle
 cut = sorted(SCHEDULE) + [len(OPS)]
@@ -330,6 +335,47 @@ for j, (d, r) in enumerate(zip(dev, recs)):
         assert d[2] == r.value, ("pqueue value", j)
 assert eq.sizes == oracle.sizes
 print("OK property pqueue")
+
+# ---- seap (arbitrary keys) vs the host bucket-directory oracle ----
+eq = ElasticDeviceSeapQueue(4, n_buckets=B_, split_occupancy=SPLIT_OCC,
+                            cap=32, payload_width=2, ops_per_shard=L)
+dev = run_device(eq, 2, codes=KEYS)
+cut = sorted(SCHEDULE) + [len(OPS)]
+oracle = SeapOracle(B_, split_occupancy=SPLIT_OCC)
+recs = []
+start = 0
+shards = 4
+for end in cut:
+    chunk = OPS[start:end]
+    if chunk:
+        n = shards * L
+        K = -(-len(chunk) // n)
+        for k in range(K):
+            wave = []
+            for i in range(n):
+                j = k * n + i
+                if j >= len(chunk):
+                    wave.append(None)
+                elif chunk[j]:
+                    wave.append((SENQ, KEYS[start + j], start + j))
+                else:
+                    wave.append((SDEQ, 0, None))
+            recs.extend(oracle.wave(wave)[:len(chunk) - k * n])
+    if end in SCHEDULE:
+        kind, arg = SCHEDULE[end]
+        shards += arg if kind == "grow" else -len(arg)
+    start = end
+assert len(recs) == len(dev) == len(OPS)
+for j, (d, r) in enumerate(zip(dev, recs)):
+    assert d[1] == r.matched, ("seap matched", j)
+    assert d[0] == r.pos, ("seap pos", j)
+    if r.matched:
+        assert d[3] == r.bucket, ("seap bucket", j)
+    if r.matched and r.value is not None:
+        assert d[2] == r.value, ("seap value", j)
+assert eq.sizes == oracle.sizes
+assert eq.directory() == oracle.directory()
+print("OK property seap")
 """
 
 
@@ -340,11 +386,13 @@ def test_random_mixed_membership_schedule_matches_oracles_8dev(
         ops, seed, n_events, relax):
     """Satellite property test: a randomized mixed enq/deq trace with a
     randomized JOIN/LEAVE schedule produces, through the unified engine,
-    exactly the host oracles' positions, ⊥ sets, results and tiers — for
-    all three disciplines on 8 devices."""
+    exactly the host oracles' positions, ⊥ sets, results, tiers and
+    buckets — for all FOUR disciplines on 8 devices (PR 5 adds the Seap
+    arbitrary-key discipline against its bucket-directory oracle)."""
     rng = np.random.default_rng(seed)
     n_prios = int(rng.integers(2, 4))
     prios = [int(p) for p in rng.integers(0, n_prios, len(ops))]
+    keys = [int(k) for k in rng.integers(-1000, 1000, len(ops))]
     schedule = {}
     shards = 4
     for idx in sorted(rng.choice(np.arange(1, max(2, len(ops))),
@@ -360,9 +408,10 @@ def test_random_mixed_membership_schedule_matches_oracles_8dev(
             schedule[int(idx)] = ("shrink", [int(i) for i in ids])
             shards -= m
     script = PROPERTY % {"ops": [bool(o) for o in ops], "prios": prios,
-                         "schedule": schedule, "n_prios": n_prios,
-                         "relax": int(relax)}
+                         "keys": keys, "schedule": schedule,
+                         "n_prios": n_prios, "relax": int(relax)}
     out = run_multidev(script, n_dev=8)
     assert "OK property queue" in out
     assert "OK property stack" in out
     assert "OK property pqueue" in out
+    assert "OK property seap" in out
