@@ -1,0 +1,57 @@
+"""wavecheck: a static invariant analyzer for the Skueue device wave path.
+
+Five rule families over the jaxpr / compiled-HLO artifacts we already
+lower (no runtime instrumentation beyond jax's own compile events):
+
+1. ``budgets``   — per-Discipline collective budgets (all_to_all /
+                   all_gather / ppermute / all_reduce counts) checked by a
+                   structured HLO op walk over every jitted entry point.
+2. ``donation``  — every ``donate_argnums`` buffer must have received an
+                   input-output alias in the compiled module (a silently
+                   dropped donation = one full state copy per wave).
+3. ``recompile`` — a compilation-event tracker asserting the elastic
+                   mesh/program caches prevent recompiles when bouncing
+                   between shard counts and burst lengths.
+4. ``overflow``  — an int32-overflow taint lint over the jaxprs of the
+                   ``core/scan_queue.py`` tropical-semiring arithmetic and
+                   the Seap midpoint / ``key_lo`` / ``key_hi`` math.
+5. ``astlint``   — a repo AST lint: no ``int()``/``float()`` on traced
+                   values, no ``.block_until_ready()`` inside burst loops,
+                   no bare ``assert`` in device-path modules.
+
+CLI: ``python -m repro.analysis --all`` (JSON report, non-zero exit on any
+violation); ``--selftest`` runs the mutation self-test (a deliberately
+broken Discipline must trip >= 3 independent rules).
+
+This module is imported lazily so ``python -m repro.analysis`` can pin
+``XLA_FLAGS`` device forcing *before* jax loads.
+"""
+from typing import Any
+
+__all__ = [
+    "HloOp", "HloProgram", "parse_hlo", "collective_counts",
+    "count_all_to_all", "compiled_text", "input_output_aliases",
+    "Violation", "CollectiveBudget", "check_budget", "check_donation",
+    "CompilationTracker", "check_int32_overflow", "lint_paths", "run_all",
+]
+
+_LAZY = {
+    "HloOp": "hlo", "HloProgram": "hlo", "parse_hlo": "hlo",
+    "collective_counts": "hlo", "count_all_to_all": "hlo",
+    "compiled_text": "hlo", "input_output_aliases": "hlo",
+    "Violation": "report",
+    "CollectiveBudget": "budgets", "check_budget": "budgets",
+    "check_donation": "donation",
+    "CompilationTracker": "recompile",
+    "check_int32_overflow": "overflow",
+    "lint_paths": "astlint",
+    "run_all": "runner",
+}
+
+
+def __getattr__(name: str) -> Any:
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

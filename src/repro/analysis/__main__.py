@@ -1,0 +1,74 @@
+"""CLI: ``python -m repro.analysis --all``.
+
+Runs every wavecheck rule family on a forced multi-device CPU mesh and
+prints (or writes) the JSON report.  Exit status is 0 iff no rule
+violated.  ``--selftest`` runs the mutation self-test instead and fails
+unless >= 3 rule families catch the deliberately broken Discipline.
+
+Device forcing happens here, BEFORE jax is imported — the analysis
+package itself stays jax-free at import time for exactly this reason.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _force_devices(n: int) -> None:
+    if "jax" in sys.modules:     # too late to force; use what we have
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="wavecheck: static invariant analyzer for the device "
+                    "wave path")
+    ap.add_argument("--all", action="store_true",
+                    help="run every rule family (default)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the mutation self-test instead")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the JSON report to PATH")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced CPU device count (default 8; ignored if "
+                         "jax is already imported)")
+    ap.add_argument("--skip-recompile", action="store_true",
+                    help="skip the recompile-guard family (fastest)")
+    args = ap.parse_args(argv)
+
+    _force_devices(args.devices)
+
+    if args.selftest:
+        from .selftest import run_selftest
+        report = run_selftest()
+    else:
+        from .runner import run_all
+        report = run_all(skip_recompile=args.skip_recompile)
+
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+    print(text)
+    ok = bool(report.get("passed"))
+    if args.selftest:
+        print(f"wavecheck selftest: {report['n_tripped']}/5 rule families "
+              f"tripped (need >= {report['required']}) -> "
+              f"{'OK' if ok else 'FAIL'}", file=sys.stderr)
+    else:
+        print(f"wavecheck: {report['n_violations']} violations across "
+              f"{len(report['programs'])} programs -> "
+              f"{'OK' if ok else 'FAIL'}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

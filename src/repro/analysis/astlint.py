@@ -1,0 +1,188 @@
+"""Rule family 5 — repo AST lint for the device wave path.
+
+Three structural rules over the device-path modules (``dqueue/*``,
+``core/scan_queue.py``, ``serve/engine.py``):
+
+* ``no-bare-assert``      — ``assert`` is stripped under ``python -O`` and
+  cannot act on traced values; the PR 5 migration replaced every one with
+  a structured error (``QueueOverflowError`` / ``ServeInvariantError``).
+  This rule locks that in: no ``assert`` statements at all.
+* ``no-traced-cast``      — ``int()`` / ``float()`` inside *device scope*
+  (a function traced by jit / shard_map / lax control flow, or a
+  Discipline wave method) forces a concretization error at best and a
+  silent host sync at worst.
+* ``no-block-in-burst``   — ``.block_until_ready()`` inside a ``for`` /
+  ``while`` loop serializes the wave pipeline the engine exists to
+  overlap.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+from .report import Violation
+
+# callables whose function-valued arguments are traced on device
+_TRACING_CALLEES = frozenset({
+    "shard_map", "jit", "pjit", "scan", "associative_scan", "fori_loop",
+    "while_loop", "cond", "switch", "vmap", "pmap", "checkpoint", "remat",
+    "custom_jvp", "custom_vjp", "grad", "value_and_grad", "map",
+})
+# Discipline / WaveEngine methods that run inside the traced wave
+_DEVICE_METHODS = frozenset({
+    "split", "merge", "dispatch", "commit", "zero_outs", "zero_aux",
+    "_wave", "_multi_sequential", "_multi_pipelined", "_pack_request",
+    "_extract_reply", "_out_specs",
+})
+_CASTS = frozenset({"int", "float"})
+
+DEFAULT_MODULES = (
+    "src/repro/dqueue",
+    "src/repro/core/scan_queue.py",
+    "src/repro/serve/engine.py",
+)
+
+
+def _callee_tail(func: ast.expr) -> str:
+    """'jax.lax.scan' -> 'scan', 'shard_map' -> 'shard_map'."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _func_arg_names(call: ast.Call) -> Iterable[str]:
+    for a in list(call.args) + [kw.value for kw in call.keywords]:
+        if isinstance(a, ast.Name):
+            yield a.id
+        elif isinstance(a, ast.Attribute):
+            yield a.attr
+
+
+class _DeviceScopeFinder(ast.NodeVisitor):
+    """Names of functions that end up traced on device."""
+
+    def __init__(self) -> None:
+        self.rooted: Set[str] = set()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _callee_tail(node.func) in _TRACING_CALLEES:
+            self.rooted.update(_func_arg_names(node))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        for dec in node.decorator_list:
+            tail = (_callee_tail(dec.func) if isinstance(dec, ast.Call)
+                    else _callee_tail(dec))
+            if tail in _TRACING_CALLEES:
+                self.rooted.add(node.name)
+        self.generic_visit(node)
+
+
+class _ModuleLinter(ast.NodeVisitor):
+    def __init__(self, path: str, tree: ast.Module) -> None:
+        self.path = path
+        self.violations: List[Violation] = []
+        finder = _DeviceScopeFinder()
+        finder.visit(tree)
+        self._rooted = finder.rooted
+        self._scope: List[Tuple[str, bool]] = []   # (name, is_device)
+        self._loops = 0
+
+    # ------------------------------------------------------ scope track ---
+    def _enter_fn(self, node) -> None:
+        parent_device = bool(self._scope) and self._scope[-1][1]
+        device = (parent_device or node.name in self._rooted
+                  or node.name in _DEVICE_METHODS)
+        self._scope.append((node.name, device))
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._enter_fn(node)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def _in_device_scope(self) -> bool:
+        return bool(self._scope) and self._scope[-1][1]
+
+    # ------------------------------------------------------------ rules ---
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self.violations.append(Violation(
+            "repo_ast", f"{self.path}:{node.lineno}",
+            "bare assert in a device-path module — raise a structured "
+            "error (QueueOverflowError / ServeInvariantError) instead",
+            {"check": "no-bare-assert", "line": node.lineno}))
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        tail = _callee_tail(node.func)
+        if tail in _CASTS and self._in_device_scope() \
+                and isinstance(node.func, ast.Name):
+            fn = ".".join(n for n, _ in self._scope)
+            self.violations.append(Violation(
+                "repo_ast", f"{self.path}:{node.lineno}",
+                f"{tail}() on a traced value inside device scope "
+                f"'{fn}' — concretizes the trace / syncs the host",
+                {"check": "no-traced-cast", "line": node.lineno,
+                 "scope": fn}))
+        if tail == "block_until_ready" and self._loops > 0:
+            self.violations.append(Violation(
+                "repo_ast", f"{self.path}:{node.lineno}",
+                ".block_until_ready() inside a burst loop serializes "
+                "the wave pipeline — hoist it after the loop",
+                {"check": "no-block-in-burst", "line": node.lineno}))
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._loops += 1
+        self.generic_visit(node)
+        self._loops -= 1
+
+    def visit_While(self, node: ast.While) -> None:
+        self._loops += 1
+        self.generic_visit(node)
+        self._loops -= 1
+
+
+def lint_source(src: str, path: str = "<string>") -> List[Violation]:
+    tree = ast.parse(src)
+    linter = _ModuleLinter(path, tree)
+    linter.visit(tree)
+    return linter.violations
+
+
+def _expand(root: str, modules: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for m in modules:
+        p = os.path.join(root, m)
+        if os.path.isdir(p):
+            out.extend(sorted(
+                os.path.join(p, f) for f in os.listdir(p)
+                if f.endswith(".py")))
+        elif os.path.isfile(p):
+            out.append(p)
+    return out
+
+
+def _repo_root() -> str:
+    # .../src/repro/analysis/astlint.py -> repo root is 3 dirs above src
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.abspath(os.path.join(here, "..", "..", ".."))
+
+
+def lint_paths(modules: Sequence[str] = DEFAULT_MODULES,
+               root: "str | None" = None
+               ) -> "tuple[List[Violation], Dict[str, object]]":
+    root = root or _repo_root()
+    files = _expand(root, modules)
+    violations: List[Violation] = []
+    for f in files:
+        with open(f, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        rel = os.path.relpath(f, root)
+        violations.extend(lint_source(src, rel))
+    return violations, {"files_checked": [os.path.relpath(f, root)
+                                          for f in files]}

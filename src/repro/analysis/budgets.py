@@ -1,0 +1,60 @@
+"""Rule family 1 — collective budgets.
+
+A Discipline declares, per program shape (step / sequential burst /
+pipelined burst / migration), how many of each collective its compiled
+wave may contain.  The check runs the structured HLO op walk and compares:
+
+* ``exact``  — opcode must appear exactly N times (the two-phase wave
+               contract: request + reply = 2 all_to_all),
+* ``max``    — opcode may appear at most N times (e.g. the hypercube
+               ppermute ladder is bounded by 3*(ceil(log2 P)+1)),
+* anything else in the collective domain must be absent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Union
+
+from .hlo import HloProgram, collective_counts
+from .report import Violation
+
+
+@dataclass(frozen=True)
+class CollectiveBudget:
+    """Declared collective budget for one compiled program."""
+    exact: Dict[str, int] = field(default_factory=dict)
+    max: Dict[str, int] = field(default_factory=dict)
+
+    def merged_keys(self):
+        return set(self.exact) | set(self.max)
+
+
+def check_budget(program_name: str,
+                 program: Union[HloProgram, str],
+                 budget: CollectiveBudget) -> List[Violation]:
+    counts = collective_counts(program)
+    out: List[Violation] = []
+    for opcode, want in budget.exact.items():
+        got = counts.get(opcode, 0)
+        if got != want:
+            out.append(Violation(
+                "collective_budget", program_name,
+                f"{opcode}: expected exactly {want}, compiled module "
+                f"has {got}",
+                {"opcode": opcode, "expected": want, "got": got}))
+    for opcode, cap in budget.max.items():
+        got = counts.get(opcode, 0)
+        if got > cap:
+            out.append(Violation(
+                "collective_budget", program_name,
+                f"{opcode}: budget allows at most {cap}, compiled module "
+                f"has {got}",
+                {"opcode": opcode, "max": cap, "got": got}))
+    for opcode, got in sorted(counts.items()):
+        if got and opcode not in budget.merged_keys():
+            out.append(Violation(
+                "collective_budget", program_name,
+                f"{opcode}: {got} undeclared collective(s) — extend the "
+                f"budget or remove the op",
+                {"opcode": opcode, "got": got}))
+    return out

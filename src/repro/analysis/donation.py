@@ -1,0 +1,48 @@
+"""Rule family 2 — donation / aliasing.
+
+``wave_engine`` jits every entry with ``donate_argnums=(0,)`` (the state
+pytree) and the elastic migration donates the two store arrays.  If XLA
+cannot honor a donation it silently falls back to a copy — for the wave
+path that is one full state copy *per wave*, visible only as a warning.
+This rule asserts each donated leaf actually received an input-output
+alias in the compiled module header.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Union
+
+from .hlo import HloProgram, input_output_aliases, parse_hlo
+from .report import Violation
+
+
+def check_donation(program_name: str,
+                   program: Union[HloProgram, str],
+                   expected_donated_leaves: int,
+                   donated_params: Union[Sequence[int], None] = None
+                   ) -> List[Violation]:
+    """``expected_donated_leaves``: number of flattened array leaves in the
+    donated arguments (every one must alias an output).  When
+    ``donated_params`` is given, additionally require each alias to point
+    at one of those flat parameter numbers."""
+    if isinstance(program, str):
+        program = parse_hlo(program)
+    aliases = input_output_aliases(program)
+    out: List[Violation] = []
+    if len(aliases) < expected_donated_leaves:
+        out.append(Violation(
+            "donation", program_name,
+            f"{expected_donated_leaves} donated leaves but only "
+            f"{len(aliases)} input-output aliases in the compiled module "
+            f"— dropped donations copy state every wave",
+            {"expected": expected_donated_leaves, "got": len(aliases),
+             "aliases": [tuple(a) for a in aliases]}))
+    if donated_params is not None:
+        allowed = set(int(p) for p in donated_params)
+        for a in aliases:
+            if a.param not in allowed:
+                out.append(Violation(
+                    "donation", program_name,
+                    f"alias onto parameter {a.param} which was not "
+                    f"declared donated {sorted(allowed)}",
+                    {"alias": tuple(a)}))
+    return out

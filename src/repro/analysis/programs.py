@@ -1,0 +1,183 @@
+"""The jitted entry-point registry: every device wave program the repo
+ships, with its declared collective budget and donation contract.
+
+Budgets are *declared* here (not inferred) — adding a Discipline means
+adding its row.  The numbers encode the paper's wave contract:
+
+* every fused wave = exactly 2 all_to_all (request + reply); the
+  pipelined burst fuses ``request_k ‖ reply_{k-1}`` so its static count
+  stays <= 2 for any K;
+* FIFO runs the min-plus hypercube scan: <= 3*(ceil(log2 P)+1)
+  collective-permutes (3 carries per ppermute round) and <= 3
+  all_gathers for the replicated carries;
+* LIFO adds one all_gather for tickets plus <= 2 all_reduce (the pmax
+  ticket fold; the pipelined epilogue adds the second);
+* priority / Seap keep one all_gather (replicated tier/bucket serve);
+* the elastic migration wave is exactly 1 all_to_all + <= 2 all_reduce
+  (lost-element pmax + moved-count psum);
+* the legacy (pre-fusion) queue step is pinned at exactly 5 all_to_all —
+  the seed baseline the fused path is measured against.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .budgets import CollectiveBudget
+
+
+@dataclass
+class ProgramSpec:
+    """One compiled entry point under analysis."""
+    name: str
+    jitted: Any                      # lowerable: has .lower(*args)
+    args: Tuple[Any, ...]
+    budget: CollectiveBudget
+    donated_leaves: int              # flat array leaves that MUST alias
+    donated_params: Optional[Sequence[int]] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+def _ppermute_bound(p: int) -> int:
+    return 3 * (math.ceil(math.log2(max(p, 2))) + 1)
+
+
+def _wave_budget(kind: str, p: int, *, pipelined: bool,
+                 burst: bool) -> CollectiveBudget:
+    """Collective budget for one {step | burst} wave program."""
+    a2a = {"max": {"all-to-all": 2}} if (pipelined and burst) \
+        else {"exact": {"all-to-all": 2}}
+    caps: Dict[str, int] = {}
+    if kind == "queue":
+        caps.update({"all-gather": 3,
+                     "collective-permute": _ppermute_bound(p)})
+    elif kind == "stack":
+        caps.update({"all-gather": 1, "all-reduce": 2})
+    elif kind in ("priority", "seap"):
+        caps.update({"all-gather": 1})
+    else:
+        raise ValueError(f"no declared budget for discipline {kind!r}")
+    merged = dict(a2a)
+    merged.setdefault("max", {})
+    merged["max"] = {**caps, **merged.get("max", {})}
+    return CollectiveBudget(exact=merged.get("exact", {}),
+                            max=merged["max"])
+
+
+LEGACY_QUEUE_STEP = CollectiveBudget(
+    exact={"all-to-all": 5},
+    max={"all-gather": 3, "collective-permute": 64, "all-reduce": 2})
+
+MIGRATION_BUDGET = CollectiveBudget(
+    exact={"all-to-all": 1}, max={"all-reduce": 2})
+
+
+def _n_leaves(tree) -> int:
+    import jax
+    return len(jax.tree.leaves(tree))
+
+
+def build_programs(mesh, *, L: int = 2, K: int = 3, cap: int = 16,
+                   W: int = 2, n_prios: int = 3, n_buckets: int = 4
+                   ) -> List[ProgramSpec]:
+    import jax.numpy as jnp
+
+    from ..dqueue import (DevicePriorityQueue, DeviceQueue, DeviceSeapQueue,
+                          DeviceStack)
+
+    p = mesh.devices.size
+    n = p * L
+    zb = lambda *s: jnp.zeros(s, bool)
+    zi = lambda *s: jnp.zeros(s, jnp.int32)
+
+    def wave_args(q, kind: str, burst: bool):
+        lead = (K,) if burst else ()
+        args: List[Any] = [q.init_state(), zb(*lead, n), zb(*lead, n)]
+        if kind == "priority":
+            args.append(zi(*lead, n))
+        if kind == "seap":
+            args.append(zi(*lead, n))
+        args.append(zi(*lead, n, W))
+        return tuple(args)
+
+    kinds = [
+        ("queue", lambda pipe: DeviceQueue(
+            mesh, "data", cap=cap, payload_width=W, ops_per_shard=L,
+            pipelined=pipe)),
+        ("stack", lambda pipe: DeviceStack(
+            mesh, "data", cap=cap, payload_width=W, ops_per_shard=L,
+            slot_depth=4, pipelined=pipe)),
+        ("priority", lambda pipe: DevicePriorityQueue(
+            mesh, "data", n_prios=n_prios, cap=cap, payload_width=W,
+            ops_per_shard=L, pipelined=pipe)),
+        ("seap", lambda pipe: DeviceSeapQueue(
+            mesh, "data", n_buckets=n_buckets, cap=cap, payload_width=W,
+            ops_per_shard=L, pipelined=pipe)),
+    ]
+
+    specs: List[ProgramSpec] = []
+    for kind, make in kinds:
+        seq, pipe = make(False), make(True)
+        leaves = _n_leaves(seq.init_state())
+        specs.append(ProgramSpec(
+            f"{kind}.step", seq._step, wave_args(seq, kind, burst=False),
+            _wave_budget(kind, p, pipelined=False, burst=False),
+            donated_leaves=leaves, meta={"discipline": kind}))
+        specs.append(ProgramSpec(
+            f"{kind}.run_waves[seq]", seq._run_waves,
+            wave_args(seq, kind, burst=True),
+            _wave_budget(kind, p, pipelined=False, burst=True),
+            donated_leaves=leaves, meta={"discipline": kind}))
+        specs.append(ProgramSpec(
+            f"{kind}.run_waves[pipe]", pipe._run_waves,
+            wave_args(pipe, kind, burst=True),
+            _wave_budget(kind, p, pipelined=True, burst=True),
+            donated_leaves=leaves, meta={"discipline": kind}))
+
+    legacy = DeviceQueue(mesh, "data", cap=cap, payload_width=W,
+                         ops_per_shard=L, fused=False)
+    specs.append(ProgramSpec(
+        "queue-legacy.step", legacy._step,
+        wave_args(legacy, "queue", burst=False), LEGACY_QUEUE_STEP,
+        donated_leaves=_n_leaves(legacy.init_state()),
+        meta={"discipline": "queue", "legacy": True}))
+    return specs
+
+
+def build_migration_programs(*, cap: int = 16, W: int = 2, L: int = 2,
+                             n_prios: int = 3, n_buckets: int = 4
+                             ) -> List[ProgramSpec]:
+    """The elastic migration wave for all four disciplines, lowered on
+    the current elastic mesh as a shrink-shaped reshard (P -> P-2)."""
+    import jax
+
+    from ..dqueue import (ElasticDevicePriorityQueue, ElasticDeviceQueue,
+                          ElasticDeviceSeapQueue, ElasticDeviceStack)
+
+    n_dev = len(jax.devices())
+    P0 = min(4, n_dev)
+    if P0 < 3:
+        return []
+    kinds = [
+        ("queue", lambda: ElasticDeviceQueue(
+            P0, cap=cap, payload_width=W, ops_per_shard=L)),
+        ("stack", lambda: ElasticDeviceStack(
+            P0, cap=cap, payload_width=W, ops_per_shard=L, slot_depth=4)),
+        ("priority", lambda: ElasticDevicePriorityQueue(
+            P0, n_prios=n_prios, cap=cap, payload_width=W,
+            ops_per_shard=L)),
+        ("seap", lambda: ElasticDeviceSeapQueue(
+            P0, n_buckets=n_buckets, cap=cap, payload_width=W,
+            ops_per_shard=L)),
+    ]
+    specs: List[ProgramSpec] = []
+    for kind, make in kinds:
+        eq = make()
+        entry = eq._migration_for(eq.mesh, P0, P0 - 2)[0]
+        args = eq._unpack(eq.state)
+        specs.append(ProgramSpec(
+            f"{kind}.migration", entry, tuple(args), MIGRATION_BUDGET,
+            donated_leaves=2, donated_params=(2, 3),
+            meta={"discipline": kind, "P_from": P0, "P_to": P0 - 2}))
+    return specs

@@ -1,0 +1,135 @@
+"""Rule family 3 — recompile guard.
+
+``jax.monitoring`` emits ``/jax/core/compile/backend_compile_duration``
+once per *real* backend compile and stays silent on cache hits — exactly
+the observable we need to assert the elastic layer's mesh / inner-engine /
+migration caches (PR 2) prevent recompilation when membership bounces
+between shard counts, and that the burst-length jit cache holds when K
+bounces.
+
+The scenario runs every bounce twice: the first pass is allowed (and
+expected) to compile; the second identical pass must compile *nothing*.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import numpy as np
+
+from .report import Violation
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class CompilationTracker:
+    """Counts backend compiles inside a ``with`` block.
+
+    jax.monitoring listeners cannot be individually unregistered, so one
+    process-wide listener is installed on first use and fans out to the
+    stack of active trackers.
+    """
+    _installed = False
+    _active: List["CompilationTracker"] = []
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.events: List[float] = []
+
+    @classmethod
+    def _on_event(cls, event: str, duration: float, **kw: Any) -> None:
+        if event == _COMPILE_EVENT:
+            for t in cls._active:
+                t.count += 1
+                t.events.append(duration)
+
+    @classmethod
+    def _ensure_listener(cls) -> None:
+        if not cls._installed:
+            from jax import monitoring
+            monitoring.register_event_duration_secs_listener(cls._on_event)
+            cls._installed = True
+
+    def __enter__(self) -> "CompilationTracker":
+        self._ensure_listener()
+        CompilationTracker._active.append(self)
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        CompilationTracker._active.remove(self)
+
+
+def _bounce(eq, K_a: int, K_b: int, grow_by: int) -> None:
+    """One full membership + burst-length bounce on an elastic queue:
+    step, burst K_a, burst K_b, grow, step, shrink back."""
+    import jax.numpy as jnp
+
+    P0 = eq.n_shards
+
+    def drive_step():
+        n = eq.n_shards * eq.L
+        eq.step(jnp.zeros(n, bool), jnp.zeros(n, bool),
+                jnp.zeros((n, eq.W), jnp.int32))
+
+    def drive_waves(K: int):
+        n = eq.n_shards * eq.L
+        eq.run_waves(jnp.zeros((K, n), bool), jnp.zeros((K, n), bool),
+                     jnp.zeros((K, n, eq.W), jnp.int32))
+
+    drive_step()
+    drive_waves(K_a)
+    drive_waves(K_b)
+    drive_waves(K_a)                      # K bounce back: cached jit shape
+    eq.grow(grow_by)
+    drive_step()
+    drive_waves(K_a)
+    eq.shrink(list(range(P0, P0 + grow_by)))
+    drive_step()
+
+
+def check_recompile_guard() -> "tuple[List[Violation], Dict[str, Any]]":
+    """Warm one bounce (compiles allowed), then repeat it and require the
+    compilation counter to stay at zero."""
+    import jax
+
+    from ..dqueue import ElasticDeviceQueue
+
+    n_dev = len(jax.devices())
+    if n_dev < 3:
+        return [], {"skipped": f"needs >= 3 devices, have {n_dev}"}
+    grow_by = 1 if n_dev < 6 else 2
+    P0 = min(4, n_dev - grow_by)
+
+    eq = ElasticDeviceQueue(P0, cap=16, payload_width=2, ops_per_shard=2)
+    with CompilationTracker() as warm:
+        _bounce(eq, K_a=2, K_b=3, grow_by=grow_by)
+    with CompilationTracker() as second:
+        _bounce(eq, K_a=2, K_b=3, grow_by=grow_by)
+
+    info: Dict[str, Any] = {
+        "warm_compiles": warm.count,
+        "second_bounce_compiles": second.count,
+        "P0": P0, "grow_by": grow_by,
+    }
+    out: List[Violation] = []
+    if warm.count == 0:
+        out.append(Violation(
+            "recompile_guard", "elastic.bounce",
+            "tracker observed no compiles on the cold bounce — the "
+            "compile-event hook is broken, guard is vacuous", dict(info)))
+    if second.count != 0:
+        out.append(Violation(
+            "recompile_guard", "elastic.bounce",
+            f"{second.count} recompilation(s) on an identical second "
+            f"membership/burst bounce — a mesh/program cache is leaking",
+            dict(info)))
+    # sanity: the caches must actually be populated, not bypassed
+    if not eq._inner_cache or not eq._mig_cache or not eq._mesh_cache:
+        out.append(Violation(
+            "recompile_guard", "elastic.bounce",
+            "elastic caches empty after a bounce — cache keying bypassed",
+            {"inner": len(eq._inner_cache), "mig": len(eq._mig_cache),
+             "mesh": len(eq._mesh_cache)}))
+    moved = sum(int(np.asarray(m["moved"])) for m in eq.migrations)
+    info["migrations"] = len(eq.migrations)
+    info["moved_total"] = moved
+    return out, info

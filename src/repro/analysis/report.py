@@ -1,0 +1,46 @@
+"""Violation record and JSON report assembly shared by all rule families."""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One broken contract, attributable to a rule family and a program
+    (a jitted entry point, a jaxpr function, or a source file)."""
+    rule: str        # "collective_budget" | "donation" | "recompile_guard"
+                     # | "int32_overflow" | "repo_ast"
+    program: str     # e.g. "queue.step", "core/scan_queue.py:seap_queue_scan"
+    message: str
+    detail: Dict[str, Any] = field(default_factory=dict)
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.program}: {self.message}"
+
+
+RULE_FAMILIES = ("collective_budget", "donation", "recompile_guard",
+                 "int32_overflow", "repo_ast")
+
+
+def build_report(violations: List[Violation],
+                 programs: Dict[str, Dict[str, Any]],
+                 info: Dict[str, Any]) -> Dict[str, Any]:
+    by_rule: Dict[str, List[dict]] = {r: [] for r in RULE_FAMILIES}
+    for v in violations:
+        by_rule.setdefault(v.rule, []).append(asdict(v))
+    return {
+        "tool": "wavecheck",
+        "passed": not violations,
+        "n_violations": len(violations),
+        "violations": [asdict(v) for v in violations],
+        "rules": {r: {"violations": vs, "n": len(vs)}
+                  for r, vs in by_rule.items()},
+        "programs": programs,
+        **info,
+    }
+
+
+def to_json(report: Dict[str, Any]) -> str:
+    return json.dumps(report, indent=2, sort_keys=False, default=str)

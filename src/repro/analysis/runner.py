@@ -1,0 +1,64 @@
+"""Run every wavecheck rule family and assemble the JSON report."""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from .astlint import lint_paths
+from .budgets import check_budget
+from .donation import check_donation
+from .hlo import collective_counts, compiled_text, input_output_aliases
+from .overflow import check_int32_overflow
+from .recompile import check_recompile_guard
+from .report import Violation, build_report
+from .programs import build_migration_programs, build_programs
+
+
+def run_all(*, n_shards: Optional[int] = None,
+            skip_recompile: bool = False) -> Dict[str, Any]:
+    import jax
+
+    from ..compat import make_mesh
+
+    n_dev = len(jax.devices())
+    p = n_shards or min(8, n_dev)
+    mesh = make_mesh((p,), ("data",))
+
+    violations: List[Violation] = []
+    programs: Dict[str, Dict[str, Any]] = {}
+
+    # rule families 1+2: one compile per program serves both checks
+    specs = build_programs(mesh) + build_migration_programs()
+    for spec in specs:
+        text = compiled_text(spec.jitted, spec.args)
+        violations.extend(check_budget(spec.name, text, spec.budget))
+        violations.extend(check_donation(
+            spec.name, text, spec.donated_leaves, spec.donated_params))
+        programs[spec.name] = {
+            "collectives": collective_counts(text),
+            "aliases": len(input_output_aliases(text)),
+            "donated_leaves": spec.donated_leaves,
+            **spec.meta,
+        }
+
+    # rule family 3: membership / burst-length bounce must not recompile
+    recompile_info: Dict[str, Any] = {}
+    if not skip_recompile:
+        vs, recompile_info = check_recompile_guard()
+        violations.extend(vs)
+
+    # rule family 4: int32-overflow taint lint over core/scan_queue.py
+    vs, overflow_info = check_int32_overflow()
+    violations.extend(vs)
+
+    # rule family 5: repo AST lint over the device-path modules
+    vs, ast_info = lint_paths()
+    violations.extend(vs)
+
+    return build_report(violations, programs, {
+        "n_devices": n_dev,
+        "n_shards": p,
+        "jax_version": jax.__version__,
+        "recompile_guard": recompile_info,
+        "int32_overflow": overflow_info,
+        "repo_ast": ast_info,
+    })

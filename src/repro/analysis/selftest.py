@@ -1,0 +1,134 @@
+"""Mutation self-test: a deliberately broken Discipline (and three
+deliberately broken idioms) must trip the analyzer.
+
+If wavecheck cannot catch a Discipline that leaks an extra collective,
+drops its donation, busts the jit cache, wraps int32, and casts traced
+values — it cannot catch the regressions it exists to block.  The
+acceptance bar is >= 3 independent rule families tripped; this module
+breaks all five on purpose and reports which fired.
+"""
+from __future__ import annotations
+
+import textwrap
+from typing import Any, Dict
+
+from .astlint import lint_source
+from .budgets import check_budget
+from .donation import check_donation
+from .hlo import compiled_text
+from .overflow import lint_jaxpr
+from .recompile import CompilationTracker
+
+# device-scope sins, linted from source (kept as a string so the repo
+# lint over src/ stays clean)
+_BAD_SRC = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    from jax import lax
+
+    def broken_body(state, x):
+        k = int(x[0])                       # cast on a traced value
+        assert k >= 0, "traced assert"      # stripped under -O
+        return state + k, x
+
+    def broken_burst(state, xs):
+        out = lax.scan(broken_body, state, xs)
+        for _ in range(4):
+            out[0].block_until_ready()      # sync inside the burst loop
+        return out
+""")
+
+
+def _broken_engine(mesh):
+    """FIFO discipline leaking ONE extra all_to_all per wave, fed by
+    runtime data so XLA cannot fold it away."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    from ..dqueue.device_queue import FifoDiscipline
+    from ..dqueue.wave_engine import WaveEngine
+
+    class _BrokenFifoDiscipline(FifoDiscipline):
+        def dispatch(self, carry, ops):
+            d = super().dispatch(carry, ops)
+            buf = jnp.tile(d.payload[:1, :1], (self.n_shards, 1))
+            leak = lax.all_to_all(buf, self.axis, 0, 0)
+            owner = jnp.where(leak[0, 0] > jnp.int32(2 ** 30),
+                              d.owner - 1, d.owner)
+            return d._replace(owner=owner)
+
+    p = mesh.devices.size
+    disc = _BrokenFifoDiscipline("data", p, 16, 2)
+    return WaveEngine(mesh, "data", disc, pipelined=False)
+
+
+def run_selftest() -> Dict[str, Any]:
+    import jax
+    import jax.numpy as jnp
+
+    from ..compat import make_mesh
+    from ..dqueue import DeviceQueue
+    from .programs import _wave_budget
+
+    p = min(8, len(jax.devices()))
+    mesh = make_mesh((p,), ("data",))
+    L = 2
+    n = p * L
+    dq = DeviceQueue(mesh, "data", cap=16, payload_width=2,
+                     ops_per_shard=L)
+    args = (dq.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool),
+            jnp.zeros((n, 2), jnp.int32))
+
+    tripped: Dict[str, Any] = {}
+
+    # 1. collective budget — the leaked third all_to_all must be counted
+    eng = _broken_engine(mesh)
+    vs = check_budget("mutation:leaky-fifo.step",
+                      compiled_text(eng._step, args),
+                      _wave_budget("queue", p, pipelined=False, burst=False))
+    tripped["collective_budget"] = [str(v) for v in vs]
+
+    # 2. donation — re-jit the step without donate_argnums: the outer
+    # module must show zero input-output aliases
+    undonated = jax.jit(lambda s, e, v, pw: dq._step(s, e, v, pw))
+    vs = check_donation("mutation:undonated.step",
+                        compiled_text(undonated, args),
+                        expected_donated_leaves=4)
+    tripped["donation"] = [str(v) for v in vs]
+
+    # 3. recompile guard — a fresh jit per wave defeats every cache: the
+    # second pass must still observe backend compiles
+    def cacheless_burst():
+        for _ in range(2):
+            f = jax.jit(lambda x: x + 1)      # new jit object every wave
+            f(jnp.zeros((4,), jnp.int32)).block_until_ready()
+
+    with CompilationTracker():
+        cacheless_burst()
+    with CompilationTracker() as second:
+        cacheless_burst()
+    tripped["recompile_guard"] = (
+        [f"{second.count} recompiles on an identical second burst"]
+        if second.count > 0 else [])
+
+    # 4. int32-overflow lint — naive midpoint and unclamped INF growth
+    INF = jnp.int32(2 ** 30)
+    sc = jax.ShapeDtypeStruct((), jnp.int32)
+    vs = lint_jaxpr(lambda lo, hi: (lo + hi) // 2, (sc, sc),
+                    program="mutation:naive_midpoint",
+                    tainted_args=(0, 1))
+    vs += lint_jaxpr(lambda b: b + INF, (sc,),
+                     program="mutation:inf_growth")
+    tripped["int32_overflow"] = [str(v) for v in vs]
+
+    # 5. repo AST lint — the three device-scope sins
+    vs = lint_source(_BAD_SRC, "mutation:bad_module")
+    tripped["repo_ast"] = [str(v) for v in vs]
+
+    fired = sorted(r for r, v in tripped.items() if v)
+    return {
+        "tripped_rules": fired,
+        "n_tripped": len(fired),
+        "required": 3,
+        "passed": len(fired) >= 3,
+        "details": tripped,
+    }

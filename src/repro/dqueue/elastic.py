@@ -106,7 +106,7 @@ class _ElasticBase:
         self._active = list(self._pool[:n_shards])
         self._mesh_cache: Dict[tuple, jax.sharding.Mesh] = {}
         self._inner_cache: Dict[tuple, object] = {}
-        self._mig_cache: Dict[tuple, tuple] = {}
+        self._mig_cache: Dict[tuple, list] = {}
         self.inner = self._get_inner(self._mesh_for(self._active))
         self.state = self.inner.init_state()
         self.migrations: List[dict] = []
@@ -282,9 +282,8 @@ class _ElasticBase:
 
     @staticmethod
     def _count_all_to_all(jitted, args) -> int:
-        import re
-        txt = jitted.lower(*args).compile().as_text()
-        return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+        from ..analysis import count_all_to_all
+        return count_all_to_all(jitted, args)
 
     def _hash_balance(self, P_new: int) -> Optional[dict]:
         """Paper-fidelity report: what the consistent-hashing layer

@@ -88,7 +88,10 @@ class WorkQueue:
         re-check leases, making the chunked schedule identical to the
         per-step schedule for any K."""
         K = len(submits)
-        assert K == len(wants) and K >= 1
+        if K != len(wants) or K < 1:
+            raise ValueError(
+                f"run_waves needs aligned non-empty burst lists: "
+                f"{K} submit waves vs {len(wants)} want waves")
         H = self.lease_steps + 1
         if K > H:
             out: List[List[Tuple[int, np.ndarray]]] = []
@@ -116,7 +119,11 @@ class WorkQueue:
                 self.leases.pop(int(l.item[0]), None)
             enq_items = retry_payloads + list(submits[k])
             n_deq = int(sum(wants[k]))
-            assert len(enq_items) + n_deq <= n, "batch larger than queue wave"
+            if len(enq_items) + n_deq > n:
+                raise QueueOverflowError(
+                    "work", n, [len(enq_items) + n_deq], wave=k,
+                    detail="batch larger than queue wave: shrink the "
+                           "wave's submits/wants or raise ops_per_shard")
             for i, item in enumerate(enq_items):
                 is_enq[k, i] = valid[k, i] = True
                 payload[k, i, : len(item)] = item

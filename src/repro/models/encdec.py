@@ -60,7 +60,7 @@ def init_encdec(key, cfg):
 def encode(params, cfg, frames, remat=True):
     """frames: [B, T, d] stub embeddings -> encoder states [B, T, d]."""
     B, T, d = frames.shape
-    h = frames.astype(jnp.bfloat16) + L.sinusoidal_pos(T, d)
+    h = frames.astype(jnp.bfloat16) + L.sinusoidal_pos(T, d)[None]
     h = constraint(h, ("batch", None, None))
     positions = jnp.arange(T)
 

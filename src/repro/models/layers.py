@@ -38,7 +38,8 @@ def rms_norm(x, w, eps=1e-5):
     # convert of the residual stream (XLA hoists that out of the layer loop,
     # materializing the whole remat stack in f32 — 2x activation memory)
     var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
-    return (x * lax.rsqrt(var + eps).astype(x.dtype)) * w
+    wb = w.reshape((1,) * (x.ndim - w.ndim) + w.shape)
+    return (x * lax.rsqrt(var + eps).astype(x.dtype)) * wb
 
 
 # ----------------------------------------------------------------- rope ----
@@ -48,11 +49,12 @@ def rope(x, positions, theta=1e6):
     half = hd // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
     # broadcast positions [..., S] against freqs -> [..., S, 1, half]
-    ang = positions[..., :, None, None].astype(jnp.float32) * freqs
+    pos = positions[..., :, None, None].astype(jnp.float32)
+    ang = pos * freqs.reshape((1,) * (pos.ndim - 1) + (half,))
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = x[..., :half], x[..., half:]
-    cos = cos.astype(x.dtype)
-    sin = sin.astype(x.dtype)
+    cos = cos.astype(x.dtype).reshape((1,) * (x.ndim - cos.ndim) + cos.shape)
+    sin = sin.astype(x.dtype).reshape((1,) * (x.ndim - sin.ndim) + sin.shape)
     return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
 
 
@@ -60,8 +62,8 @@ def sinusoidal_pos(S, d, dtype=jnp.bfloat16):
     pos = jnp.arange(S, dtype=jnp.float32)[:, None]
     div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-9.21034 / d))
     pe = jnp.zeros((S, d), jnp.float32)
-    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
-    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d - d // 2)]))
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div[None, :]))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[None, : (d - d // 2)]))
     return pe.astype(dtype)
 
 

@@ -110,7 +110,7 @@ def mamba2_block(p, x, cfg, state: Optional[dict] = None):
     if state is None:
         # causal depthwise conv over sequence
         pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
-        conv = sum(pad[:, i: i + S] * p["conv_w"][i].astype(x.dtype)
+        conv = sum(pad[:, i: i + S] * p["conv_w"][i].astype(x.dtype)[None, None]
                    for i in range(K))
         xBC = jax.nn.silu(conv)
     else:
@@ -124,8 +124,9 @@ def mamba2_block(p, x, cfg, state: Optional[dict] = None):
     xpart = xBC[..., :di].reshape(Bsz, S, H, P)
     Bmat = xBC[..., di: di + G * N].reshape(Bsz, S, G, N)
     Cmat = xBC[..., di + G * N:].reshape(Bsz, S, G, N)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
-    loga = -jnp.exp(p["A_log"]) * dt
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])  # [B,S,H]
+    loga = -jnp.exp(p["A_log"])[None, None] * dt
     xt = xpart.astype(jnp.float32) * dt[..., None]
 
     if state is None:

@@ -4,13 +4,10 @@ device queue) on a forced multi-device CPU mesh."""
 from multidev import run_multidev
 
 COLLECTIVE_COUNT = r"""
-import re
 import jax, jax.numpy as jnp
 from repro.compat import make_mesh
 from repro.dqueue import DeviceQueue, DeviceStack
-def count_all_to_all(jitted, args):
-    txt = jitted.lower(*args).compile().as_text()
-    return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+from repro.analysis import count_all_to_all
 mesh = make_mesh((8,), ("data",))
 dq = DeviceQueue(mesh, "data", cap=32, payload_width=2, ops_per_shard=4)
 n = dq.n_shards * dq.L

@@ -74,13 +74,10 @@ def test_priority_queue_matches_oracle_across_migrations_8dev():
 
 
 COLLECTIVES = r"""
-import re
 import jax, jax.numpy as jnp
 from repro.compat import make_mesh
 from repro.dqueue import DevicePriorityQueue
-def count_all_to_all(jitted, args):
-    txt = jitted.lower(*args).compile().as_text()
-    return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+from repro.analysis import count_all_to_all
 mesh = make_mesh((8,), ("data",))
 for P_, relax in ((2, 0), (4, 0), (2, 1)):
     dq = DevicePriorityQueue(mesh, "data", n_prios=P_, cap=32,

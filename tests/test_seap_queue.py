@@ -75,13 +75,10 @@ def test_seap_queue_matches_oracle_across_migrations_8dev():
 
 
 COLLECTIVES = r"""
-import re
 import jax, jax.numpy as jnp
 from repro.compat import make_mesh
 from repro.dqueue import DeviceSeapQueue
-def count_all_to_all(jitted, args):
-    txt = jitted.lower(*args).compile().as_text()
-    return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+from repro.analysis import count_all_to_all
 mesh = make_mesh((8,), ("data",))
 K, L = 6, 4
 n = 8 * L
@@ -311,3 +308,148 @@ def test_overflow_raises_in_work_queue():
     with pytest.raises(QueueOverflowError) as ei:
         wq.step([wq.make_item([8])], [1])                 # wrap-around
     assert ei.value.kind == "workqueue" and "leases" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# int32-extreme coverage for the Seap split midpoint (the overflow-free
+# (a & b) + ((a ^ b) >> 1) idiom that the wavecheck int32 lint certifies)
+# ---------------------------------------------------------------------------
+I32MIN, I32MAX = -(2 ** 31), 2 ** 31 - 1
+
+
+def _scan_wave(st, is_enq, valid, keys, *, B, split_occupancy):
+    """One seap_queue_scan wave against a (firsts, lasts, lo, active,
+    key_lo, key_hi) directory tuple; returns (outputs, new directory)."""
+    import jax.numpy as jnp
+
+    from repro.core.scan_queue import seap_queue_scan
+
+    out = seap_queue_scan(
+        jnp.asarray(is_enq), jnp.asarray(keys, jnp.int32),
+        jnp.asarray(valid), *st, n_buckets=B,
+        split_occupancy=split_occupancy)
+    return out[:3], tuple(out[3:9])
+
+
+def _fresh_directory(B):
+    import jax.numpy as jnp
+    lo = np.full((B,), I32MAX, np.int32)
+    lo[0] = I32MIN
+    active = np.zeros((B,), bool)
+    active[0] = True
+    return (jnp.zeros((B,), jnp.int32), jnp.full((B,), -1, jnp.int32),
+            jnp.asarray(lo), jnp.asarray(active), jnp.int32(I32MAX),
+            jnp.int32(I32MIN))
+
+
+def test_seap_midpoint_formula_matches_int64_floor_at_extremes():
+    """(a & b) + ((a ^ b) >> 1) == floor((a + b) / 2) without ever leaving
+    int32 — exhaustive over a grid of boundary-adjacent extreme pairs."""
+    import jax.numpy as jnp
+
+    edges = np.array([I32MIN, I32MIN + 1, I32MIN + 2, -3, -1, 0, 1, 3,
+                      I32MAX - 2, I32MAX - 1, I32MAX], np.int64)
+    rng = np.random.default_rng(7)
+    rand = rng.integers(I32MIN, I32MAX, size=64, dtype=np.int64)
+    vals = np.concatenate([edges, rand])
+    a64, b64 = np.meshgrid(vals, vals)
+    lo64 = np.minimum(a64, b64).ravel()          # scan uses lo_eff <= hi_eff
+    hi64 = np.maximum(a64, b64).ravel()
+    want = (lo64 + hi64) >> 1                    # exact int64 floor midpoint
+    a = jnp.asarray(lo64.astype(np.int32))
+    b = jnp.asarray(hi64.astype(np.int32))
+    got = np.asarray((a & b) + ((a ^ b) >> 1), np.int64)
+    np.testing.assert_array_equal(got, want)
+    naive = np.asarray(a + b, np.int64) >> 1     # the bug the idiom avoids
+    assert (naive != want).any(), "grid never overflows; test is vacuous"
+
+
+@pytest.mark.parametrize("keys,expect_lo", [
+    # cluster at INT32_MAX: lo_eff = key_lo-1, hi_eff = key_hi = I32MAX
+    ([I32MAX, I32MAX - 1, I32MAX - 2], (I32MAX - 3 + I32MAX) >> 1),
+    # cluster at INT32_MIN: lo_eff = I32MIN (saturated), hi_eff = key_hi+1
+    ([I32MIN, I32MIN + 1, I32MIN + 2], (2 * I32MIN + 3) >> 1),
+])
+def test_seap_split_boundary_exact_at_int32_extremes(keys, expect_lo):
+    """A split forced by keys hugging an int32 edge must place the new
+    bucket boundary at the exact (clamped, observed-range) midpoint — a
+    wrapping (lo + hi) // 2 would put it on the wrong side of zero."""
+    st = _fresh_directory(4)
+    (bucket, pos, matched), st2 = _scan_wave(
+        st, [True] * len(keys) + [False], [True] * len(keys) + [False],
+        keys + [0], B=4, split_occupancy=2)
+    assert bool(np.asarray(matched)[: len(keys)].all())
+    firsts, lasts, lo, active, key_lo, key_hi = st2
+    active = np.asarray(active)
+    lo = np.asarray(lo)
+    assert active.sum() == 2, "occupancy 3 > 2 must split the root"
+    new_b = int(np.flatnonzero(active)[1])
+    assert int(lo[new_b]) == expect_lo
+    assert int(np.asarray(key_lo)) == min(keys)
+    assert int(np.asarray(key_hi)) == max(keys)
+
+
+def test_seap_single_key_bucket_never_resplits():
+    """All-identical keys at INT32_MAX: the first over-occupancy wave may
+    split once (boundary I32MAX-1), after which the hot bucket's midpoint
+    collapses onto its own lower boundary and further splits must be
+    refused — saturating, not wrapping, at the int32 edge."""
+    st = _fresh_directory(4)
+    keys = [I32MAX] * 3
+    _, st = _scan_wave(st, [True] * 3 + [False], [True] * 3 + [False],
+                       keys + [0], B=4, split_occupancy=2)
+    n_active_1 = int(np.asarray(st[3]).sum())
+    # keep hammering the same key: occupancy keeps exceeding the threshold
+    for _ in range(3):
+        _, st = _scan_wave(st, [True] * 3 + [False],
+                           [True] * 3 + [False], keys + [0],
+                           B=4, split_occupancy=2)
+        active = np.asarray(st[3])
+        lo = np.asarray(st[2])
+        assert int(active.sum()) == n_active_1, \
+            "degenerate single-key bucket must not split again"
+        assert lo[active].max() <= I32MAX and lo[active].min() == I32MIN
+    # the directory still serves: drain three elements strictly matched
+    (bucket, pos, matched), st = _scan_wave(
+        st, [False] * 4, [True, True, True, False], [0] * 4,
+        B=4, split_occupancy=2)
+    assert bool(np.asarray(matched)[:3].all())
+
+
+def test_seap_oracle_parity_at_int32_extremes():
+    """SeapOracle and the device scan agree wave-by-wave on matched counts
+    and directory size under an extreme-key schedule (both edges, splits
+    and single-key hammering)."""
+    from repro.core.seap import DEQ, ENQ, SeapOracle
+
+    B, occ = 4, 2
+    st = _fresh_directory(B)
+    oracle = SeapOracle(B, split_occupancy=occ)
+    waves = [
+        [I32MAX, I32MAX - 1, I32MAX - 2],
+        [I32MIN, I32MIN + 1, I32MIN + 2],
+        [I32MAX] * 3,
+        [I32MIN] * 3,
+    ]
+    total = 0
+    for keys in waves:
+        (bucket, pos, matched), st = _scan_wave(
+            st, [True] * 3 + [False], [True] * 3 + [False], keys + [0],
+            B=B, split_occupancy=occ)
+        recs = oracle.wave([(ENQ, int(k), 0) for k in keys] + [None])
+        dev_matched = int(np.asarray(matched).sum())
+        orc_matched = sum(1 for r in recs if r.matched)
+        assert dev_matched == orc_matched == 3, keys
+        total += 3
+        assert int(np.asarray(st[3]).sum()) == oracle.n_active, keys
+    # drain everything; every dequeue must match on both sides
+    drained = 0
+    while drained < total:
+        take = min(3, total - drained)
+        valid = [True] * take + [False] * (4 - take)
+        (bucket, pos, matched), st = _scan_wave(
+            st, [False] * 4, valid, [0] * 4, B=B, split_occupancy=occ)
+        recs = oracle.wave([(DEQ, 0, None)] * take + [None] * (4 - take))
+        assert int(np.asarray(matched).sum()) == \
+            sum(1 for r in recs if r.matched) == take
+        drained += take

@@ -77,14 +77,10 @@ def test_pipelined_matches_sequential_all_disciplines_8dev():
 # single drain epilogue, i.e. 2 static / (K+1)/K per wave amortized.
 # --------------------------------------------------------------------------
 HLO_MATRIX = r"""
-import re
 import jax, jax.numpy as jnp
 from repro.compat import make_mesh
 from repro.dqueue import DeviceQueue, DeviceStack, DevicePriorityQueue
-
-def count_all_to_all(jitted, args):
-    txt = jitted.lower(*args).compile().as_text()
-    return len(re.findall(r"all-to-all(?:-start)?\(", txt))
+from repro.analysis import count_all_to_all
 
 mesh = make_mesh((8,), ("data",))
 K, L = 6, 4
