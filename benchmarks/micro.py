@@ -55,6 +55,15 @@ over both.  Results go to ``BENCH_PR5.json``:
 
     PYTHONPATH=src python -m benchmarks.micro --pr5 [path] [--quick]
 
+PR 7 adds the Wavescope telemetry-cost benchmark: the SAME pipelined
+K-wave burst with ``metrics=False`` vs ``metrics=True``, timed with the
+two flavors interleaved inside one best-of loop (machine drift cancels),
+plus the static all_to_all count of both lowered programs (must match:
+telemetry adds ZERO collectives) and the burst-boundary drain cost timed
+separately.  Results go to ``BENCH_PR7.json``:
+
+    PYTHONPATH=src python -m benchmarks.micro --pr7 [path] [--quick]
+
 ``--all [--quick]`` runs EVERY emitter above (the CI bench-smoke entry
 point: one invocation emits every BENCH_PR*.json, and any emitter crash
 fails the run — future PRs add an emitter here instead of editing the
@@ -890,6 +899,102 @@ def emit_bench_pr5(path: str = "BENCH_PR5.json", n_dev: int = 8,
     return data
 
 
+# ------------------------------- PR 7: Wavescope telemetry overhead --------
+def _measure_telemetry(n_dev: int, K: int, ops_per_shard: int = 64,
+                       iters: int = 40, quick: bool = False) -> dict:
+    """Telemetry-on vs telemetry-off on the SAME pipelined K-wave burst:
+    Wavescope's metrics row is pure arithmetic on values the wave already
+    materializes, accumulated in a donated device ring — so the static
+    all_to_all count must not move and the wall-clock overhead should be
+    noise.  The burst-boundary drain (device->host read of the ring) is
+    timed separately: it is the ONE sanctioned sync and happens once per
+    burst, not per wave."""
+    from repro.compat import make_mesh
+    from repro.dqueue import DevicePriorityQueue, DeviceQueue
+    if quick:
+        K, iters = min(K, 8), 3
+    mesh = make_mesh((n_dev,), ("data",))
+    n = n_dev * ops_per_shard
+    cap = max(256, K * ops_per_shard // n_dev + 1)
+    rng = np.random.default_rng(7)
+    E = jnp.array(rng.random((K, n)) < 0.5)
+    V = jnp.ones((K, n), bool)
+    PR = jnp.array(rng.integers(0, 2, (K, n)), jnp.int32)
+    PW = jnp.array(rng.integers(0, 100, (K, n, 4)), jnp.int32)
+
+    cases = {
+        "queue": (lambda m: DeviceQueue(
+            mesh, "data", cap=cap, payload_width=4,
+            ops_per_shard=ops_per_shard, pipelined=True, metrics=m,
+            metrics_ring=max(64, K)), (E, V, PW)),
+        "priority": (lambda m: DevicePriorityQueue(
+            mesh, "data", n_prios=2, cap=cap, payload_width=4,
+            ops_per_shard=ops_per_shard, pipelined=True, metrics=m,
+            metrics_ring=max(64, K)), (E, V, PR, PW)),
+    }
+    out = {"n_dev": n_dev, "K": K, "ops_per_wave": n, "disciplines": {}}
+    for name, (make, args) in cases.items():
+        row = {}
+        q_off, q_on = make(False), make(True)
+
+        def run(q):
+            res = q.run_waves(q.init_state(), *args)
+            jax.block_until_ready(jax.tree.leaves(res[0])[0])
+
+        # interleave the off/on timings so machine drift (CI neighbors,
+        # frequency scaling) hits both flavors symmetrically; best-of
+        run(q_off), run(q_on)          # warmup / compile both first
+        t_off = t_on = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            run(q_off)
+            t_off = min(t_off, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            run(q_on)
+            t_on = min(t_on, time.perf_counter() - t0)
+        for mode, q, t in (("telemetry_off", q_off, t_off),
+                           ("telemetry_on", q_on, t_on)):
+            st = q.init_state()
+            if q.engine.metrics:
+                st = (st, q.engine.init_metrics_state())
+            row[mode] = {
+                "waves_per_sec": K / t,
+                "us_per_wave": t / K * 1e6,
+                "all_to_all_static": count_all_to_all(q._run_waves,
+                                                      (st,) + args),
+            }
+        q_on.drain_metrics(reset=True)
+        run(q_on)
+        t0 = time.perf_counter()
+        rows = q_on.drain_metrics(reset=True)
+        row["drain_us_per_burst"] = (time.perf_counter() - t0) * 1e6
+        row["rows_per_burst"] = len(rows)
+        row["overhead_pct"] = 100.0 * (t_on / t_off - 1.0)
+        row["all_to_all_added"] = (
+            row["telemetry_on"]["all_to_all_static"]
+            - row["telemetry_off"]["all_to_all_static"])
+        out["disciplines"][name] = row
+    return out
+
+
+def emit_bench_pr7(path: str = "BENCH_PR7.json", n_dev: int = 8,
+                   K: int = 32, quick: bool = False) -> dict:
+    """Measure Wavescope telemetry overhead on the pipelined burst and
+    write JSON (re-execs on a forced ``n_dev``-device CPU mesh)."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    child = _reexec_on_mesh(
+        "PR7", path, n_dev,
+        ["--pr7", path, "--n-dev", str(n_dev), "--waves", str(K)]
+        + (["--quick"] if quick else []))
+    if child is not None:
+        return child
+    data = _measure_telemetry(n_dev=n_dev, K=K, quick=quick)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
 def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
     """The CI bench-smoke entry point: run EVERY BENCH_PR*.json emitter.
 
@@ -904,6 +1009,8 @@ def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
                 ("BENCH_PR4.json", lambda p: emit_bench_pr4(
                      p, n_dev=n_dev, quick=quick)),
                 ("BENCH_PR5.json", lambda p: emit_bench_pr5(
+                     p, n_dev=n_dev, quick=quick)),
+                ("BENCH_PR7.json", lambda p: emit_bench_pr7(
                      p, n_dev=n_dev, quick=quick))]
     out, failures = {}, []
     for path, emit in emitters:
@@ -971,6 +1078,9 @@ if __name__ == "__main__":
     ap.add_argument("--pr5", nargs="?", const="BENCH_PR5.json", default=None,
                     help="measure EDF deadline-miss rates vs FIFO and "
                          "static tiers and write BENCH_PR5.json")
+    ap.add_argument("--pr7", nargs="?", const="BENCH_PR7.json", default=None,
+                    help="measure Wavescope telemetry overhead and write "
+                         "BENCH_PR7.json")
     ap.add_argument("--all", action="store_true",
                     help="run every BENCH_PR*.json emitter (CI bench smoke)")
     ap.add_argument("--quick", action="store_true",
@@ -998,6 +1108,10 @@ if __name__ == "__main__":
         print(json.dumps(out, indent=2))
     elif cli.pr5:
         out = emit_bench_pr5(cli.pr5, n_dev=cli.n_dev, quick=cli.quick)
+        print(json.dumps(out, indent=2))
+    elif cli.pr7:
+        out = emit_bench_pr7(cli.pr7, n_dev=cli.n_dev, K=cli.waves,
+                             quick=cli.quick)
         print(json.dumps(out, indent=2))
     else:
         for row in run_all():

@@ -14,6 +14,13 @@ Three structural rules over the device-path modules (``dqueue/*``,
 * ``no-block-in-burst``   — ``.block_until_ready()`` inside a ``for`` /
   ``while`` loop serializes the wave pipeline the engine exists to
   overlap.
+* ``no-host-callback-in-wave`` — host-effect escapes (``jax.debug.print``,
+  ``debug.callback`` / ``io_callback`` / ``pure_callback``,
+  ``block_until_ready``, ``device_get``) inside *device scope*.  The wave
+  is collective-budgeted, donated-in-place code; a host callback inserts
+  an unbudgeted device→host sync per wave.  Telemetry reads device state
+  ONLY via the sanctioned Wavescope drain (``repro.obs.device.drain`` /
+  ``WaveEngine.drain_metrics`` at burst boundaries), which is exempt.
 """
 from __future__ import annotations
 
@@ -33,9 +40,18 @@ _TRACING_CALLEES = frozenset({
 _DEVICE_METHODS = frozenset({
     "split", "merge", "dispatch", "commit", "zero_outs", "zero_aux",
     "_wave", "_multi_sequential", "_multi_pipelined", "_pack_request",
-    "_extract_reply", "_out_specs",
+    "_extract_reply", "_out_specs", "_metric_row", "occupancy",
 })
 _CASTS = frozenset({"int", "float"})
+# host-effect escapes forbidden inside the traced wave ("print" catches
+# both the builtin and jax.debug.print; "callback" catches debug.callback)
+_HOST_CALLBACKS = frozenset({
+    "print", "callback", "debug_callback", "io_callback", "pure_callback",
+    "block_until_ready", "device_get",
+})
+# the sanctioned Wavescope drain API: the ONE device->host telemetry read,
+# at burst boundaries only — exempt from no-host-callback-in-wave
+_OBS_DRAIN_API = frozenset({"drain", "drain_metrics", "_drain_telemetry"})
 
 DEFAULT_MODULES = (
     "src/repro/dqueue",
@@ -127,6 +143,17 @@ class _ModuleLinter(ast.NodeVisitor):
                 f"{tail}() on a traced value inside device scope "
                 f"'{fn}' — concretizes the trace / syncs the host",
                 {"check": "no-traced-cast", "line": node.lineno,
+                 "scope": fn}))
+        if tail in _HOST_CALLBACKS and self._in_device_scope() \
+                and self._scope[-1][0] not in _OBS_DRAIN_API:
+            fn = ".".join(n for n, _ in self._scope)
+            self.violations.append(Violation(
+                "repo_ast", f"{self.path}:{node.lineno}",
+                f"host callback '{tail}' inside device scope '{fn}' — "
+                "an unbudgeted device->host sync per wave; telemetry "
+                "must ride the Wavescope metrics ring and drain at "
+                "burst boundaries (repro.obs.device.drain)",
+                {"check": "no-host-callback-in-wave", "line": node.lineno,
                  "scope": fn}))
         if tail == "block_until_ready" and self._loops > 0:
             self.violations.append(Violation(

@@ -13,6 +13,10 @@ adding its row.  The numbers encode the paper's wave contract:
 * LIFO adds one all_gather for tickets plus <= 2 all_reduce (the pmax
   ticket fold; the pipelined epilogue adds the second);
 * priority / Seap keep one all_gather (replicated tier/bucket serve);
+* Wavescope telemetry (PR 7) is budget-NEUTRAL: the ``[obs]`` variants
+  lower the metrics-on entry points against the SAME budgets as their
+  metrics-off twins — a telemetry implementation that added a collective
+  (or broke the ``(state, metrics)`` donation) fails wavecheck statically;
 * the elastic migration wave is exactly 1 all_to_all + <= 2 all_reduce
   (lost-element pmax + moved-count psum);
 * the legacy (pre-fusion) queue step is pinned at exactly 5 all_to_all —
@@ -102,18 +106,18 @@ def build_programs(mesh, *, L: int = 2, K: int = 3, cap: int = 16,
         return tuple(args)
 
     kinds = [
-        ("queue", lambda pipe: DeviceQueue(
+        ("queue", lambda pipe, obs=False: DeviceQueue(
             mesh, "data", cap=cap, payload_width=W, ops_per_shard=L,
-            pipelined=pipe)),
-        ("stack", lambda pipe: DeviceStack(
+            pipelined=pipe, metrics=obs)),
+        ("stack", lambda pipe, obs=False: DeviceStack(
             mesh, "data", cap=cap, payload_width=W, ops_per_shard=L,
-            slot_depth=4, pipelined=pipe)),
-        ("priority", lambda pipe: DevicePriorityQueue(
+            slot_depth=4, pipelined=pipe, metrics=obs)),
+        ("priority", lambda pipe, obs=False: DevicePriorityQueue(
             mesh, "data", n_prios=n_prios, cap=cap, payload_width=W,
-            ops_per_shard=L, pipelined=pipe)),
-        ("seap", lambda pipe: DeviceSeapQueue(
+            ops_per_shard=L, pipelined=pipe, metrics=obs)),
+        ("seap", lambda pipe, obs=False: DeviceSeapQueue(
             mesh, "data", n_buckets=n_buckets, cap=cap, payload_width=W,
-            ops_per_shard=L, pipelined=pipe)),
+            ops_per_shard=L, pipelined=pipe, metrics=obs)),
     ]
 
     specs: List[ProgramSpec] = []
@@ -134,6 +138,20 @@ def build_programs(mesh, *, L: int = 2, K: int = 3, cap: int = 16,
             wave_args(pipe, kind, burst=True),
             _wave_budget(kind, p, pipelined=True, burst=True),
             donated_leaves=leaves, meta={"discipline": kind}))
+        # Wavescope telemetry-on twins: args[0] becomes the donated
+        # (state, metrics-ring) tuple (+2 aliased leaves: count, rows);
+        # budgets are IDENTICAL — telemetry must add zero collectives
+        obs = make(True, obs=True)
+        for nm, fn, burst, pipelined in (
+                ("step[obs]", obs._step, False, False),
+                ("run_waves[pipe,obs]", obs._run_waves, True, True)):
+            a = wave_args(obs, kind, burst=burst)
+            a = ((a[0], obs.engine.init_metrics_state()),) + a[1:]
+            specs.append(ProgramSpec(
+                f"{kind}.{nm}", fn, a,
+                _wave_budget(kind, p, pipelined=pipelined, burst=burst),
+                donated_leaves=leaves + 2,
+                meta={"discipline": kind, "telemetry": True}))
 
     legacy = DeviceQueue(mesh, "data", cap=cap, payload_width=W,
                          ops_per_shard=L, fused=False)

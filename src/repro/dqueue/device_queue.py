@@ -81,6 +81,8 @@ class FifoDiscipline(Discipline):
         self.cap = cap
         self.W = W
         self.junk = cap
+        self.n_windows = 1
+        self.window_capacity = n_shards * cap
         self.state_specs = DeviceQueueState(P(), P(), P(axis), P(axis))
 
     def split(self, state):
@@ -112,6 +114,9 @@ class FifoDiscipline(Discipline):
     def zero_outs(self, L: int) -> tuple:
         return (jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
 
+    def occupancy(self, carry):
+        return jnp.reshape(carry[1] - carry[0] + 1, (1,))
+
 
 class DeviceQueue:
     """Distributed FIFO over one mesh axis.
@@ -131,7 +136,8 @@ class DeviceQueue:
 
     def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
                  payload_width: int = 4, ops_per_shard: int = 64,
-                 fused: bool = True, pipelined: bool = True):
+                 fused: bool = True, pipelined: bool = True,
+                 metrics: bool = False, metrics_ring: int = 64):
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -140,16 +146,22 @@ class DeviceQueue:
         self.L = ops_per_shard
         self.fused = fused
         self.pipelined = pipelined and fused  # the seed path is sequential
+        self.metrics = metrics
         self._state_specs = DeviceQueueState(P(), P(), P(self.axis),
                                              P(self.axis))
         if fused:
             self.engine = WaveEngine(
                 mesh, axis_name,
                 FifoDiscipline(axis_name, self.n_shards, cap, payload_width),
-                pipelined=pipelined)
+                pipelined=pipelined, metrics=metrics,
+                metrics_ring=metrics_ring)
             self._step = self.engine._step
             self._run_waves = self.engine._run_waves
         else:
+            if metrics:
+                raise ValueError("Wavescope metrics need the fused engine "
+                                 "path (fused=True)")
+            self.engine = None
             self._step = self._build_legacy_step()
             self._run_waves = self._build_legacy_run_waves()
 
@@ -174,6 +186,8 @@ class DeviceQueue:
         is_enq/valid: [n_shards * L] bool; payload: [n_shards * L, W] int32.
         Returns (new_state, positions, matched, deq_vals, deq_ok, overflow).
         """
+        if self.engine is not None:
+            return self.engine.step(state, is_enq, valid, payload)
         return self._step(state, is_enq, valid, payload)
 
     def run_waves(self, state: DeviceQueueState, is_enq: jax.Array,
@@ -186,7 +200,13 @@ class DeviceQueue:
         deq_vals [K, n, W], deq_ok [K, n], overflow [K]) with no host
         synchronization between waves.
         """
+        if self.engine is not None:
+            return self.engine.run_waves(state, is_enq, valid, payload)
         return self._run_waves(state, is_enq, valid, payload)
+
+    def drain_metrics(self, *, reset: bool = False) -> list:
+        """Burst-boundary Wavescope drain (empty when metrics are off)."""
+        return self.engine.drain_metrics(reset=reset) if self.engine else []
 
     # ------------------------------------------- legacy five-collective ----
     def _legacy_wave(self, state: DeviceQueueState, is_enq, valid, payload):
@@ -293,6 +313,8 @@ class LifoDiscipline(Discipline):
         self.W = W
         self.D = D
         self.junk = cap
+        self.n_windows = 1
+        self.window_capacity = n_shards * cap * D
         self.state_specs = {"last": P(), "ticket": P(), "vals": P(axis),
                             "ticks": P(axis)}
 
@@ -389,6 +411,10 @@ class LifoDiscipline(Discipline):
     def zero_outs(self, L: int) -> tuple:
         return (jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
 
+    def occupancy(self, carry):
+        # stack positions start at 1: the live window is [1, last]
+        return jnp.reshape(carry[0], (1,))
+
 
 class DeviceStack:
     """Distributed LIFO (paper Sec. VI) over one mesh axis.
@@ -405,7 +431,8 @@ class DeviceStack:
 
     def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
                  payload_width: int = 4, ops_per_shard: int = 64,
-                 slot_depth: int = 4, pipelined: bool = True):
+                 slot_depth: int = 4, pipelined: bool = True,
+                 metrics: bool = False, metrics_ring: int = 64):
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -414,11 +441,12 @@ class DeviceStack:
         self.L = ops_per_shard
         self.D = slot_depth
         self.pipelined = pipelined
+        self.metrics = metrics
         self.engine = WaveEngine(
             mesh, axis_name,
             LifoDiscipline(axis_name, self.n_shards, cap, payload_width,
                            slot_depth),
-            pipelined=pipelined)
+            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves
 
@@ -437,8 +465,12 @@ class DeviceStack:
 
     def step(self, state, is_push, valid, payload):
         """One wave; the state argument is DONATED."""
-        return self._step(state, is_push, valid, payload)
+        return self.engine.step(state, is_push, valid, payload)
 
     def run_waves(self, state, is_push, valid, payload):
         """K pushes/pops waves in one lax.scan dispatch (state DONATED)."""
-        return self._run_waves(state, is_push, valid, payload)
+        return self.engine.run_waves(state, is_push, valid, payload)
+
+    def drain_metrics(self, *, reset: bool = False) -> list:
+        """Burst-boundary Wavescope drain (empty when metrics are off)."""
+        return self.engine.drain_metrics(reset=reset)

@@ -71,6 +71,8 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
+from ..obs.recorder import FlightRecorder
+from ..obs.trace import span
 from .device_queue import DeviceQueue, DeviceQueueState, DeviceStack
 from .errors import QueueOverflowError
 from .wave_engine import (fanout_bound, migrate_packed, recover_positions,
@@ -92,7 +94,9 @@ class _ElasticBase:
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, devices=None,
-                 hlo_stats: bool = False, pipelined: bool = True):
+                 hlo_stats: bool = False, pipelined: bool = True,
+                 metrics: bool = False, metrics_ring: int = 64,
+                 flight_k: int = 16):
         self._pool = list(devices) if devices is not None else list(jax.devices())
         if not 1 <= n_shards <= len(self._pool):
             raise ValueError(f"n_shards={n_shards} outside the device pool "
@@ -102,6 +106,9 @@ class _ElasticBase:
         self.W = payload_width
         self.L = ops_per_shard
         self.pipelined = pipelined
+        self.metrics = bool(metrics)
+        self.metrics_ring = int(metrics_ring)
+        self.recorder = FlightRecorder(flight_k)
         self._hlo_stats = hlo_stats
         self._active = list(self._pool[:n_shards])
         self._mesh_cache: Dict[tuple, jax.sharding.Mesh] = {}
@@ -148,18 +155,43 @@ class _ElasticBase:
 
     _overflow_detail: str = ""
 
+    def _drain_telemetry(self) -> list:
+        """Burst-boundary Wavescope drain into the flight recorder (the
+        one sanctioned device→host telemetry read; no-op with metrics
+        off).  Returns the freshly drained wave summaries."""
+        eng = getattr(self.inner, "engine", None)
+        if not self.metrics or eng is None or not eng.metrics:
+            return []
+        rows = eng.drain_metrics(reset=True)
+        self.recorder.extend(rows)
+        return rows
+
+    def trajectory(self) -> list:
+        """The flight recorder's last-K wave summaries, oldest first."""
+        return self.recorder.trajectory()
+
+    def _burst_span(self, K: int):
+        """Span wrapping one multi-wave burst dispatch."""
+        return span(f"{self._kind}:burst", cat="wave", K=int(K),
+                    n_shards=self.n_shards)
+
     def _check_overflow(self, ovf) -> None:
-        """Host-raise the wave's replicated overflow flag as a structured
+        """Drain telemetry, then host-raise the wave's replicated
+        overflow flag as a structured
         :class:`~.errors.QueueOverflowError` (was a bare assert in every
-        caller before PR 5).  ``ovf`` is a scalar bool (``step``) or a
-        [K] vector (``run_waves``)."""
+        caller before PR 5) carrying the flight-recorder trajectory.
+        ``ovf`` is a scalar bool (``step``) or a [K] vector
+        (``run_waves``); this runs once per step/burst, so the recorder
+        sees every wave even when nothing overflowed."""
+        self._drain_telemetry()
         o = np.asarray(ovf)
         if not bool(o.any()):
             return
         wave = int(np.flatnonzero(o)[0]) if o.ndim >= 1 else None
         raise QueueOverflowError(self._kind, self._wave_capacity(),
                                  self._occupancies(), wave=wave,
-                                 detail=self._overflow_detail)
+                                 detail=self._overflow_detail,
+                                 trajectory=self.recorder.trajectory())
 
     # -------------------------------------------------------- membership ---
     @property
@@ -220,6 +252,13 @@ class _ElasticBase:
             raise ValueError(
                 f"cannot reshard to {P_new} shards: {need} live elements "
                 f"exceed the new capacity {P_new} * {self.cap}")
+        with span(f"migration:{kind}", cat="membership", kind=self._kind,
+                  P_from=P_old, P_to=P_new):
+            return self._rematerialize_traced(new_active, kind, P_old,
+                                              P_new)
+
+    def _rematerialize_traced(self, new_active: list, kind: str,
+                              P_old: int, P_new: int) -> dict:
         t_total = time.perf_counter()
         a, b, X, Y = self._unpack(self.state)
 
@@ -314,8 +353,10 @@ class _ElasticBase:
     def save(self, ckpt_dir, step: int):
         """Checkpoint the queue state (layout recorded in the manifest)."""
         from ..checkpoint import save_checkpoint
-        return save_checkpoint(ckpt_dir, step, self._state_dict(),
-                               meta={"layout": self._layout()})
+        with span("checkpoint:save", cat="checkpoint", kind=self._kind,
+                  step=step):
+            return save_checkpoint(ckpt_dir, step, self._state_dict(),
+                                   meta={"layout": self._layout()})
 
     @classmethod
     def restore(cls, ckpt_dir, step: Optional[int] = None, *,
@@ -482,35 +523,43 @@ class ElasticDeviceQueue(_ElasticBase):
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, fused: bool = True,
                  devices=None, hlo_stats: bool = False,
-                 pipelined: bool = True):
+                 pipelined: bool = True, metrics: bool = False,
+                 metrics_ring: int = 64, flight_k: int = 16):
         self.fused = fused
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
-                         hlo_stats=hlo_stats, pipelined=pipelined)
+                         hlo_stats=hlo_stats, pipelined=pipelined,
+                         metrics=metrics, metrics_ring=metrics_ring,
+                         flight_k=flight_k)
 
     def _make_inner(self, mesh):
         return DeviceQueue(mesh, self.axis, cap=self.cap,
                            payload_width=self.W, ops_per_shard=self.L,
-                           fused=self.fused, pipelined=self.pipelined)
+                           fused=self.fused, pipelined=self.pipelined,
+                           metrics=self.metrics and self.fused,
+                           metrics_ring=self.metrics_ring)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, payload):
         """One wave on the current mesh; state is threaded internally.
         Returns (positions, matched, deq_vals, deq_ok, overflow); raises
         :class:`~.errors.QueueOverflowError` when the wave overflowed."""
-        self.state, pos, m, dv, dok, ovf = self.inner.step(
-            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-            jnp.asarray(payload))
+        with self._burst_span(1):
+            self.state, pos, m, dv, dok, ovf = self.inner.step(
+                self.state, jnp.asarray(is_enq), jnp.asarray(valid),
+                jnp.asarray(payload))
         self._check_overflow(ovf)
         return pos, m, dv, dok, ovf
 
     def run_waves(self, is_enq, valid, payload):
         """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
         Raises :class:`~.errors.QueueOverflowError` on overflow."""
-        self.state, pos, m, dv, dok, ovf = self.inner.run_waves(
-            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-            jnp.asarray(payload))
+        is_enq = jnp.asarray(is_enq)
+        with self._burst_span(is_enq.shape[0]):
+            self.state, pos, m, dv, dok, ovf = self.inner.run_waves(
+                self.state, is_enq, jnp.asarray(valid),
+                jnp.asarray(payload))
         self._check_overflow(ovf)
         return pos, m, dv, dok, ovf
 
@@ -590,17 +639,22 @@ class ElasticDeviceStack(_ElasticBase):
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, slot_depth: int = 4,
                  devices=None, hlo_stats: bool = False,
-                 pipelined: bool = True):
+                 pipelined: bool = True, metrics: bool = False,
+                 metrics_ring: int = 64, flight_k: int = 16):
         self.D = slot_depth
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
-                         hlo_stats=hlo_stats, pipelined=pipelined)
+                         hlo_stats=hlo_stats, pipelined=pipelined,
+                         metrics=metrics, metrics_ring=metrics_ring,
+                         flight_k=flight_k)
 
     def _make_inner(self, mesh):
         return DeviceStack(mesh, self.axis, cap=self.cap,
                            payload_width=self.W, ops_per_shard=self.L,
-                           slot_depth=self.D, pipelined=self.pipelined)
+                           slot_depth=self.D, pipelined=self.pipelined,
+                           metrics=self.metrics,
+                           metrics_ring=self.metrics_ring)
 
     _overflow_detail = ("a store slot's depth-D ticket set was exhausted "
                         "at commit time")
@@ -610,16 +664,19 @@ class ElasticDeviceStack(_ElasticBase):
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_push, valid, payload):
-        self.state, pos, m, pv, pok, ovf = self.inner.step(
-            self.state, jnp.asarray(is_push), jnp.asarray(valid),
-            jnp.asarray(payload))
+        with self._burst_span(1):
+            self.state, pos, m, pv, pok, ovf = self.inner.step(
+                self.state, jnp.asarray(is_push), jnp.asarray(valid),
+                jnp.asarray(payload))
         self._check_overflow(ovf)
         return pos, m, pv, pok, ovf
 
     def run_waves(self, is_push, valid, payload):
-        self.state, pos, m, pv, pok, ovf = self.inner.run_waves(
-            self.state, jnp.asarray(is_push), jnp.asarray(valid),
-            jnp.asarray(payload))
+        is_push = jnp.asarray(is_push)
+        with self._burst_span(is_push.shape[0]):
+            self.state, pos, m, pv, pok, ovf = self.inner.run_waves(
+                self.state, is_push, jnp.asarray(valid),
+                jnp.asarray(payload))
         self._check_overflow(ovf)
         return pos, m, pv, pok, ovf
 

@@ -41,15 +41,22 @@ class QueueOverflowError(RuntimeError):
         and may have drained the window below what this vector shows.
       wave: index of the first overflowing wave within a multi-wave
         burst, or None for a single ``step``.
+      trajectory: the Wavescope flight-recorder trajectory — the last K
+        wave-summary dicts (see ``repro.obs.device.drain`` for the
+        schema) leading up to and including the failing burst, i.e. the
+        occupancy pressure ramp that caused the overflow.  Empty when the
+        owner ran without telemetry.
     """
 
     def __init__(self, kind: str, capacity: int,
                  occupancy: Sequence[int], *,
-                 wave: Optional[int] = None, detail: str = ""):
+                 wave: Optional[int] = None, detail: str = "",
+                 trajectory: Optional[Sequence[dict]] = None):
         self.kind = kind
         self.capacity = int(capacity)
         self.occupancy = [int(x) for x in occupancy]
         self.wave = wave
+        self.trajectory = [dict(t) for t in (trajectory or [])]
         msg = (f"{kind} overflow (queue contents no longer trustworthy): "
                f"post-burst occupancy {self.occupancy} against per-window "
                f"capacity {self.capacity}")
@@ -57,17 +64,28 @@ class QueueOverflowError(RuntimeError):
             msg += f" (first overflowing wave {wave})"
         if detail:
             msg += f"; {detail}"
+        if self.trajectory:
+            ramp = [sum(t.get("occ", [])) for t in self.trajectory]
+            msg += (f"; flight recorder: {len(self.trajectory)}-wave "
+                    f"occupancy ramp {ramp}")
         super().__init__(msg)
 
 
 class ServeInvariantError(RuntimeError):
     """A ServeEngine internal invariant was violated (state corruption —
     not a capacity or input error).  Carries a ``context`` dict with the
-    engine state that witnessed the violation."""
+    engine state that witnessed the violation and, when the engine runs
+    with telemetry, the flight-recorder ``trajectory`` of the last K wave
+    summaries leading up to it."""
 
-    def __init__(self, message: str, **context):
+    def __init__(self, message: str, *,
+                 trajectory: Optional[Sequence[dict]] = None, **context):
         self.context = dict(context)
+        self.trajectory = [dict(t) for t in (trajectory or [])]
         if context:
             message += " [" + ", ".join(
                 f"{k}={v!r}" for k, v in context.items()) + "]"
+        if self.trajectory:
+            message += (f" [flight recorder: last {len(self.trajectory)} "
+                        f"wave summaries attached]")
         super().__init__(message)

@@ -80,6 +80,8 @@ class PriorityDiscipline(Discipline):
         self.W = W
         self.relaxation = relaxation
         self.junk = n_prios * cap
+        self.n_windows = n_prios
+        self.window_capacity = n_shards * cap
         self.state_specs = PriorityQueueState(P(), P(), P(axis), P(axis))
 
     def split(self, state):
@@ -133,6 +135,9 @@ class PriorityDiscipline(Discipline):
     def zero_aux(self) -> tuple:
         return (jnp.int32(0),)
 
+    def occupancy(self, carry):
+        return carry[1] - carry[0] + 1
+
 
 class DevicePriorityQueue:
     """Distributed constant-priority queue over one mesh axis.
@@ -151,7 +156,8 @@ class DevicePriorityQueue:
     def __init__(self, mesh, axis_name: str = "data", n_prios: int = 2,
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, relaxation: int = 0,
-                 pipelined: bool = True):
+                 pipelined: bool = True, metrics: bool = False,
+                 metrics_ring: int = 64):
         if n_prios < 1:
             raise ValueError("need at least one priority tier")
         self.mesh = mesh
@@ -163,11 +169,12 @@ class DevicePriorityQueue:
         self.L = ops_per_shard
         self.relaxation = relaxation
         self.pipelined = pipelined
+        self.metrics = metrics
         self.engine = WaveEngine(
             mesh, axis_name,
             PriorityDiscipline(axis_name, self.n_shards, n_prios, cap,
                                payload_width, relaxation),
-            pipelined=pipelined)
+            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves
 
@@ -192,7 +199,7 @@ class DevicePriorityQueue:
         Returns (new_state, tier, pos, matched, deq_vals, deq_ok, overflow,
         n_relaxed) — tier/pos are -1/⊥ for unmatched ops.
         """
-        return self._step(state, is_enq, valid, prio, payload)
+        return self.engine.step(state, is_enq, valid, prio, payload)
 
     def run_waves(self, state: PriorityQueueState, is_enq, valid, prio,
                   payload):
@@ -200,7 +207,11 @@ class DevicePriorityQueue:
 
         Shapes: is_enq/valid/prio [K, n_shards * L]; payload [K, ..., W].
         """
-        return self._run_waves(state, is_enq, valid, prio, payload)
+        return self.engine.run_waves(state, is_enq, valid, prio, payload)
+
+    def drain_metrics(self, *, reset: bool = False) -> list:
+        """Burst-boundary Wavescope drain (empty when metrics are off)."""
+        return self.engine.drain_metrics(reset=reset)
 
 
 class ElasticDevicePriorityQueue(_MultiWindowElastic):
@@ -225,20 +236,26 @@ class ElasticDevicePriorityQueue(_MultiWindowElastic):
                  relaxation: int = 0, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, devices=None,
-                 hlo_stats: bool = False, pipelined: bool = True):
+                 hlo_stats: bool = False, pipelined: bool = True,
+                 metrics: bool = False, metrics_ring: int = 64,
+                 flight_k: int = 16):
         self.n_prios = n_prios
         self.relaxation = relaxation
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
-                         hlo_stats=hlo_stats, pipelined=pipelined)
+                         hlo_stats=hlo_stats, pipelined=pipelined,
+                         metrics=metrics, metrics_ring=metrics_ring,
+                         flight_k=flight_k)
 
     def _make_inner(self, mesh):
         return DevicePriorityQueue(mesh, self.axis, n_prios=self.n_prios,
                                    cap=self.cap, payload_width=self.W,
                                    ops_per_shard=self.L,
                                    relaxation=self.relaxation,
-                                   pipelined=self.pipelined)
+                                   pipelined=self.pipelined,
+                                   metrics=self.metrics,
+                                   metrics_ring=self.metrics_ring)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, prio, payload):
@@ -246,18 +263,21 @@ class ElasticDevicePriorityQueue(_MultiWindowElastic):
         Returns (tier, pos, matched, deq_vals, deq_ok, overflow,
         n_relaxed); raises :class:`~.errors.QueueOverflowError` when the
         wave overflowed a tier window."""
-        self.state, *out = self.inner.step(
-            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-            jnp.asarray(prio), jnp.asarray(payload))
+        with self._burst_span(1):
+            self.state, *out = self.inner.step(
+                self.state, jnp.asarray(is_enq), jnp.asarray(valid),
+                jnp.asarray(prio), jnp.asarray(payload))
         self._check_overflow(out[5])
         return tuple(out)
 
     def run_waves(self, is_enq, valid, prio, payload):
         """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
         Raises :class:`~.errors.QueueOverflowError` on tier overflow."""
-        self.state, *out = self.inner.run_waves(
-            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-            jnp.asarray(prio), jnp.asarray(payload))
+        is_enq = jnp.asarray(is_enq)
+        with self._burst_span(is_enq.shape[0]):
+            self.state, *out = self.inner.run_waves(
+                self.state, is_enq, jnp.asarray(valid),
+                jnp.asarray(prio), jnp.asarray(payload))
         self._check_overflow(out[5])
         return tuple(out)
 

@@ -89,6 +89,8 @@ class SeapDiscipline(Discipline):
         self.W = W
         self.split_occupancy = split_occupancy
         self.junk = n_buckets * cap
+        self.n_windows = n_buckets
+        self.window_capacity = n_shards * cap
         self.state_specs = SeapQueueState(P(), P(), P(), P(), P(), P(),
                                           P(axis), P(axis))
 
@@ -144,6 +146,9 @@ class SeapDiscipline(Discipline):
     def zero_aux(self) -> tuple:
         return (jnp.int32(0),)
 
+    def occupancy(self, carry):
+        return carry[1] - carry[0] + 1
+
 
 def default_split_occupancy(n_shards: int, cap: int) -> int:
     """Split a bucket when it passes 3/4 of its window (leaves headroom
@@ -176,7 +181,8 @@ class DeviceSeapQueue:
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64,
                  split_occupancy: Optional[int] = None,
-                 seed_bounds=None, pipelined: bool = True):
+                 seed_bounds=None, pipelined: bool = True,
+                 metrics: bool = False, metrics_ring: int = 64):
         if n_buckets < 1:
             raise ValueError("need at least one bucket")
         self.mesh = mesh
@@ -193,11 +199,12 @@ class DeviceSeapQueue:
         self.split_occupancy = split_occupancy
         self.seed_bounds = check_seed_bounds(seed_bounds, n_buckets)
         self.pipelined = pipelined
+        self.metrics = metrics
         self.engine = WaveEngine(
             mesh, axis_name,
             SeapDiscipline(axis_name, self.n_shards, n_buckets, cap,
                            payload_width, split_occupancy),
-            pipelined=pipelined)
+            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves
 
@@ -235,14 +242,18 @@ class DeviceSeapQueue:
         bucket/pos are -1/⊥ for unmatched ops, ``n_active`` is the
         directory size after the wave's rebalance.
         """
-        return self._step(state, is_enq, valid, key, payload)
+        return self.engine.step(state, is_enq, valid, key, payload)
 
     def run_waves(self, state: SeapQueueState, is_enq, valid, key, payload):
         """K pre-staged waves in ONE lax.scan dispatch (state DONATED).
 
         Shapes: is_enq/valid/key [K, n_shards * L]; payload [K, ..., W].
         """
-        return self._run_waves(state, is_enq, valid, key, payload)
+        return self.engine.run_waves(state, is_enq, valid, key, payload)
+
+    def drain_metrics(self, *, reset: bool = False) -> list:
+        """Burst-boundary Wavescope drain (empty when metrics are off)."""
+        return self.engine.drain_metrics(reset=reset)
 
 
 class ElasticDeviceSeapQueue(_MultiWindowElastic):
@@ -268,7 +279,8 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
                  seed_bounds=None, axis_name: str = "data", cap: int = 1024,
                  payload_width: int = 4, ops_per_shard: int = 64,
                  devices=None, hlo_stats: bool = False,
-                 pipelined: bool = True):
+                 pipelined: bool = True, metrics: bool = False,
+                 metrics_ring: int = 64, flight_k: int = 16):
         self.n_buckets = n_buckets
         if split_occupancy is None:
             split_occupancy = default_split_occupancy(n_shards, cap)
@@ -277,7 +289,9 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
-                         hlo_stats=hlo_stats, pipelined=pipelined)
+                         hlo_stats=hlo_stats, pipelined=pipelined,
+                         metrics=metrics, metrics_ring=metrics_ring,
+                         flight_k=flight_k)
 
     def _make_inner(self, mesh):
         return DeviceSeapQueue(mesh, self.axis, n_buckets=self.n_buckets,
@@ -285,7 +299,9 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
                                ops_per_shard=self.L,
                                split_occupancy=self.split_occupancy,
                                seed_bounds=self.seed_bounds,
-                               pipelined=self.pipelined)
+                               pipelined=self.pipelined,
+                               metrics=self.metrics,
+                               metrics_ring=self.metrics_ring)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, key, payload):
@@ -293,18 +309,21 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
         Returns (bucket, pos, matched, deq_vals, deq_ok, overflow,
         n_active); raises :class:`~.errors.QueueOverflowError` when the
         wave overflowed a bucket window."""
-        self.state, *out = self.inner.step(
-            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-            jnp.asarray(key), jnp.asarray(payload))
+        with self._burst_span(1):
+            self.state, *out = self.inner.step(
+                self.state, jnp.asarray(is_enq), jnp.asarray(valid),
+                jnp.asarray(key), jnp.asarray(payload))
         self._check_overflow(out[5])
         return tuple(out)
 
     def run_waves(self, is_enq, valid, key, payload):
         """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
         Raises :class:`~.errors.QueueOverflowError` on bucket overflow."""
-        self.state, *out = self.inner.run_waves(
-            self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-            jnp.asarray(key), jnp.asarray(payload))
+        is_enq = jnp.asarray(is_enq)
+        with self._burst_span(is_enq.shape[0]):
+            self.state, *out = self.inner.run_waves(
+                self.state, is_enq, jnp.asarray(valid),
+                jnp.asarray(key), jnp.asarray(payload))
         self._check_overflow(out[5])
         return tuple(out)
 

@@ -56,6 +56,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
+from ..obs.device import (MetricsState, drain as _drain_rows,
+                          init_metrics_state, record_row)
 
 TAG_INACTIVE = 0
 TAG_PUT = 1
@@ -154,6 +156,11 @@ class Discipline:
     n_disp_outs: int = 2
     n_aux: int = 0
     extra_fill: tuple = ()
+    # Wavescope telemetry: number of interval windows (1 for FIFO/LIFO,
+    # one per tier/bucket otherwise) and per-window element capacity —
+    # instances set both; occupancy() reads the post-dispatch carry.
+    n_windows: int = 1
+    window_capacity: int = 0
 
     def split(self, state):
         """state -> (interval carry tuple, store tuple)."""
@@ -179,6 +186,12 @@ class Discipline:
         """Dtype-correct zeros for ``Dispatch.aux``."""
         return ()
 
+    def occupancy(self, carry) -> jax.Array:
+        """Replicated ``[n_windows]`` int32 occupancy vector computed
+        from a (post-dispatch) interval carry — pure arithmetic, feeds
+        the Wavescope metrics row."""
+        raise NotImplementedError
+
 
 # --------------------------------------------------------- the engine ------
 class WaveEngine:
@@ -189,15 +202,31 @@ class WaveEngine:
     ``lax.scan`` dispatch — software-pipelined by default (see module
     docstring), or the sequential schedule with ``pipelined=False``.
     Both jitted entry points donate the state argument.
+
+    With ``metrics=True`` every wave additionally writes one Wavescope
+    row (ops admitted per kind, ⊥ count, per-window occupancy, headroom,
+    the discipline's aux signal) into a donated device-side ring carried
+    through the burst — pure arithmetic on values the wave already
+    materializes, ZERO extra collectives, identical queue outputs.  The
+    jitted entry points then take/return ``(state, MetricsState)`` as the
+    donated leading argument; the *public* ``step``/``run_waves`` keep
+    the metrics-off signature by threading the engine-owned ring
+    internally, and :meth:`drain_metrics` is the one sanctioned
+    device→host telemetry read (burst boundaries only).
     """
 
     def __init__(self, mesh, axis_name: str, discipline: Discipline, *,
-                 pipelined: bool = True):
+                 pipelined: bool = True, metrics: bool = False,
+                 metrics_ring: int = 64):
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
         self.disc = discipline
         self.pipelined = pipelined
+        self.metrics = bool(metrics)
+        self.metrics_ring = int(metrics_ring)
+        self._mstate = self.init_metrics_state() if self.metrics else None
+        self._seq0 = 0  # waves drained-and-reset before the current ring
         self._step = self._build_step()
         self._run_waves = self._build_run_waves()
 
@@ -225,26 +254,61 @@ class WaveEngine:
         ok = wants_reply & (back[own_row, j, 0] > 0)
         return vals, ok
 
+    # ---------------------------------------------------------- metrics ----
+    def _metric_row(self, d: Dispatch, ops, seq):
+        """One Wavescope row from values wave ``seq`` already
+        materialized at dispatch time — per-shard op counters plus the
+        replicated occupancy/headroom gauges.  No collective, no host
+        callback (see ``obs.device`` for the row schema)."""
+        disc = self.disc
+        valid = ops[1]
+        puts = jnp.sum(((d.tag == TAG_PUT) & d.active).astype(jnp.int32))
+        gets = jnp.sum(((d.tag == TAG_GET) & d.active).astype(jnp.int32))
+        offered = jnp.sum(valid.astype(jnp.int32))
+        bottom = jnp.sum((valid & ~d.active).astype(jnp.int32))
+        occ = disc.occupancy(d.carry).astype(jnp.int32)
+        headroom = (jnp.int32(disc.n_windows * disc.window_capacity)
+                    - jnp.sum(occ))
+        aux = (d.aux[0].astype(jnp.int32) if d.aux else jnp.int32(0))
+        head = jnp.stack([seq.astype(jnp.int32), puts, gets, offered,
+                          bottom, aux, headroom])
+        return jnp.concatenate([head, occ])
+
     # ------------------------------------------------------- wave bodies ---
-    def _wave(self, state, ops):
+    def _wave(self, state, ops, m: MetricsState | None = None):
         """One sequential wave: dispatch -> request a2a -> commit ->
-        reply a2a -> extract.  Exactly two all_to_all collectives."""
+        reply a2a -> extract.  Exactly two all_to_all collectives —
+        with or without the metrics row (``m`` threads the Wavescope
+        ring; telemetry is dispatch-time arithmetic only)."""
         disc = self.disc
         carry, store = disc.split(state)
         d = disc.dispatch(carry, ops)
+        if m is not None:
+            m = record_row(m, self._metric_row(d, ops, m.count))
         recv = lax.all_to_all(self._pack_request(d), self.axis, 0, 0,
                               tiled=True)
         store, reply, c_ovf = disc.commit(store, recv)
         back = lax.all_to_all(reply, self.axis, 0, 0, tiled=True)
         dv, dok = self._extract_reply(back, d.owner, d.wants_reply)
         ovf = jnp.logical_or(d.overflow, c_ovf)
-        return disc.merge(d.carry, store), d.outs + (dv, dok, ovf) + d.aux
+        merged = disc.merge(d.carry, store)
+        outs = d.outs + (dv, dok, ovf) + d.aux
+        if m is None:
+            return merged, outs
+        return (merged, m), outs
 
-    def _multi_sequential(self, state, ops):
-        st, outs = lax.scan(self._wave, state, ops)
-        return (st,) + outs
+    def _multi_sequential(self, state, ops, m: MetricsState | None = None):
+        if m is None:
+            st, outs = lax.scan(self._wave, state, ops)
+            return (st,) + outs
 
-    def _multi_pipelined(self, state, ops):
+        def wave_m(sm, xs):
+            return self._wave(sm[0], xs, sm[1])
+
+        sm, outs = lax.scan(wave_m, (state, m), ops)
+        return (sm,) + outs
+
+    def _multi_pipelined(self, state, ops, m: MetricsState | None = None):
         """K waves, software-pipelined: iteration k dispatches wave k and
         commits wave k-1; ONE fused all_to_all carries wave k's request
         columns alongside wave k-1's reply columns.  Outputs are all
@@ -266,8 +330,14 @@ class WaveEngine:
         }
 
         def body(c, xs):
-            carry, store, infl = c
+            if m is None:
+                carry, store, infl = c
+                mm = None
+            else:
+                carry, store, infl, mm = c
             d = disc.dispatch(carry, xs)                  # wave k
+            if mm is not None:
+                mm = record_row(mm, self._metric_row(d, xs, mm.count))
             store, reply, c_ovf = disc.commit(store, infl["recv"])  # k-1
             fused = jnp.concatenate([self._pack_request(d), reply], axis=-1)
             out = lax.all_to_all(fused, self.axis, 0, 0, tiled=True)
@@ -279,10 +349,17 @@ class WaveEngine:
             infl = {"recv": out[..., :C_req], "owner": d.owner,
                     "wants": d.wants_reply, "outs": d.outs,
                     "ovf": jnp.asarray(d.overflow), "aux": d.aux}
-            return (d.carry, store, infl), emitted
+            nc = ((d.carry, store, infl) if m is None
+                  else (d.carry, store, infl, mm))
+            return nc, emitted
 
-        (carry, store, infl), stacked = lax.scan(
-            body, (carry0, store0, prime), ops)
+        init = ((carry0, store0, prime) if m is None
+                else (carry0, store0, prime, m))
+        final, stacked = lax.scan(body, init, ops)
+        if m is None:
+            carry, store, infl = final
+        else:
+            carry, store, infl, m = final
         # epilogue: commit the last in-flight wave, reply-only collective
         store, reply, c_ovf = disc.commit(store, infl["recv"])
         back = lax.all_to_all(reply, self.axis, 0, 0, tiled=True)
@@ -293,24 +370,38 @@ class WaveEngine:
         # drop the priming wave's garbage row, append the drained last wave
         outs = tuple(jnp.concatenate([s[1:], l[None]], axis=0)
                      for s, l in zip(stacked, last))
-        return (disc.merge(carry, store),) + outs
+        merged = disc.merge(carry, store)
+        if m is None:
+            return (merged,) + outs
+        return ((merged, m),) + outs
 
     # ---------------------------------------------------- jitted wrappers --
+    def _m_specs(self):
+        return MetricsState(P(), P(self.axis))
+
     def _out_specs(self, multi: bool = False):
         d = self.disc
         op = P(None, self.axis) if multi else P(self.axis)
         rep = P(None) if multi else P()
-        return ((d.state_specs,) + (op,) * (d.n_disp_outs + 2)
+        st = ((d.state_specs, self._m_specs()) if self.metrics
+              else d.state_specs)
+        return ((st,) + (op,) * (d.n_disp_outs + 2)
                 + (rep,) * (1 + d.n_aux))
 
     def _build_step(self):
-        def fn(state, *ops):
-            st, outs = self._wave(state, ops)
-            return (st,) + outs
+        if self.metrics:
+            def fn(sm, *ops):
+                smm, outs = self._wave(sm[0], ops, sm[1])
+                return (smm,) + outs
+        else:
+            def fn(state, *ops):
+                st, outs = self._wave(state, ops)
+                return (st,) + outs
+        in_state = ((self.disc.state_specs, self._m_specs())
+                    if self.metrics else self.disc.state_specs)
         wrapped = shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self.disc.state_specs,)
-            + (P(self.axis),) * self.disc.n_ops,
+            in_specs=(in_state,) + (P(self.axis),) * self.disc.n_ops,
             out_specs=self._out_specs())
         return jax.jit(wrapped, donate_argnums=(0,))
 
@@ -318,22 +409,58 @@ class WaveEngine:
         body = (self._multi_pipelined if self.pipelined
                 else self._multi_sequential)
 
-        def fn(state, *ops):
-            return body(state, ops)
+        if self.metrics:
+            def fn(sm, *ops):
+                return body(sm[0], ops, sm[1])
+        else:
+            def fn(state, *ops):
+                return body(state, ops)
+        in_state = ((self.disc.state_specs, self._m_specs())
+                    if self.metrics else self.disc.state_specs)
         wrapped = shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self.disc.state_specs,)
-            + (P(None, self.axis),) * self.disc.n_ops,
+            in_specs=(in_state,) + (P(None, self.axis),) * self.disc.n_ops,
             out_specs=self._out_specs(multi=True))
         return jax.jit(wrapped, donate_argnums=(0,))
 
     def step(self, state, *ops):
-        """One wave.  The state argument is DONATED."""
-        return self._step(state, *ops)
+        """One wave.  The state argument is DONATED.  With metrics on,
+        the engine-owned telemetry ring rides the donated tuple
+        internally — same external signature either way."""
+        if not self.metrics:
+            return self._step(state, *ops)
+        out = self._step((state, self._mstate), *ops)
+        st, self._mstate = out[0]
+        return (st,) + tuple(out[1:])
 
     def run_waves(self, state, *ops):
         """K pre-staged waves in ONE device dispatch (state DONATED)."""
-        return self._run_waves(state, *ops)
+        if not self.metrics:
+            return self._run_waves(state, *ops)
+        out = self._run_waves((state, self._mstate), *ops)
+        st, self._mstate = out[0]
+        return (st,) + tuple(out[1:])
+
+    # ----------------------------------------------------- metrics drain ---
+    def init_metrics_state(self) -> MetricsState:
+        """A zeroed Wavescope ring placed on this engine's mesh."""
+        return init_metrics_state(self.n_shards, self.metrics_ring,
+                                  self.disc.n_windows, self.mesh, self.axis)
+
+    def drain_metrics(self, *, reset: bool = False) -> list:
+        """Drain the telemetry ring to host wave-summary dicts (oldest
+        first).  THE sanctioned burst-boundary device→host telemetry
+        read; with ``reset=True`` the ring restarts empty (the wave
+        sequence number keeps running)."""
+        if not self.metrics:
+            return []
+        rows = _drain_rows(self._mstate)
+        for r in rows:
+            r["seq"] += self._seq0
+        if reset:
+            self._seq0 += int(jnp.asarray(self._mstate.count))
+            self._mstate = self.init_metrics_state()
+        return rows
 
 
 # -------------------------------------------------- migration machinery ----

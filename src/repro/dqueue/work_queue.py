@@ -40,6 +40,8 @@ from typing import Dict, List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.recorder import FlightRecorder
+from ..obs.trace import span
 from .device_queue import DeviceQueue
 from .errors import QueueOverflowError
 
@@ -52,7 +54,8 @@ class _Lease:
 
 
 class WorkQueue:
-    def __init__(self, dq: DeviceQueue, lease_steps: int = 8):
+    def __init__(self, dq: DeviceQueue, lease_steps: int = 8,
+                 flight_k: int = 16):
         self.dq = dq
         self.state = dq.init_state()
         self.lease_steps = lease_steps
@@ -61,6 +64,18 @@ class WorkQueue:
         self.completed: set = set()
         self.stats = {"reissued": 0, "duplicate_acks": 0, "items_done": 0}
         self._next_eid = 0
+        self.recorder = FlightRecorder(flight_k)
+
+    def _drain_telemetry(self) -> None:
+        """Burst-boundary Wavescope drain (no-op unless the backing
+        DeviceQueue was built with ``metrics=True``)."""
+        eng = getattr(self.dq, "engine", None)
+        if eng is not None and eng.metrics:
+            self.recorder.extend(eng.drain_metrics(reset=True))
+
+    def trajectory(self) -> list:
+        """Flight-recorder trajectory (last K wave summaries)."""
+        return self.recorder.trajectory()
 
     # -- one synchronous scheduling step ------------------------------------
     def step(self, submit: List[np.ndarray], want: List[int]
@@ -132,9 +147,12 @@ class WorkQueue:
             wave_meta.append((len(enq_items), list(wants[k])))
 
         self.step_no += K
-        self.state, pos, matched, deq_vals, deq_ok, overflow = \
-            self.dq.run_waves(self.state, jnp.array(is_enq),
-                              jnp.array(valid), jnp.array(payload))
+        with span("workqueue:burst", cat="wave", K=K,
+                  leases=len(self.leases)):
+            self.state, pos, matched, deq_vals, deq_ok, overflow = \
+                self.dq.run_waves(self.state, jnp.array(is_enq),
+                                  jnp.array(valid), jnp.array(payload))
+        self._drain_telemetry()
         o = np.asarray(overflow)
         if bool(o.any()):
             size = (int(np.asarray(self.state.last))
@@ -143,7 +161,8 @@ class WorkQueue:
                 "workqueue", self.dq.n_shards * self.dq.cap, [size],
                 wave=int(np.flatnonzero(o)[0]) if o.ndim >= 1 else None,
                 detail=f"{len(self.leases)} leases outstanding, "
-                       f"{self.stats['items_done']} items done")
+                       f"{self.stats['items_done']} items done",
+                trajectory=self.recorder.trajectory())
         deq_vals = np.asarray(deq_vals)
         deq_ok = np.asarray(deq_ok)
         all_grants: List[List[Tuple[int, np.ndarray]]] = []

@@ -25,6 +25,7 @@ import dataclasses
 from typing import Callable, Dict, Optional
 
 from ..checkpoint import latest_step, load_checkpoint, save_checkpoint
+from ..obs.trace import span
 
 
 class SimulatedFailure(RuntimeError):
@@ -118,7 +119,8 @@ def run_with_restarts(*, init_state: Callable[[], tuple],
         state = init_state()
         step0 = 0
         if start is not None:
-            host, manifest = load_checkpoint(ckpt_dir, start, state)
+            with span("checkpoint:restore", cat="checkpoint", step=start):
+                host, manifest = load_checkpoint(ckpt_dir, start, state)
             state = host
             step0 = int(manifest["step"])
             log(f"[fault] restored step {step0}")
@@ -134,7 +136,9 @@ def run_with_restarts(*, init_state: Callable[[], tuple],
                     if elastic is None:
                         raise
                     log(f"[fault] {e}; LEAVE instead of restart")
-                    state = elastic.shrink(state, e.shard)
+                    with span("fault:leave", cat="membership",
+                              shard=e.shard, step=step):
+                        state = elastic.shrink(state, e.shard)
                     metrics["leaves"] += 1
                     degraded += 1
                     healthy = 0
@@ -143,13 +147,16 @@ def run_with_restarts(*, init_state: Callable[[], tuple],
                 step += 1
                 healthy += 1
                 if step % ckpt_every == 0 or step == n_steps:
-                    save_checkpoint(ckpt_dir, step, state)
+                    with span("checkpoint:save", cat="checkpoint",
+                              step=step):
+                        save_checkpoint(ckpt_dir, step, state)
                 if (elastic is not None and degraded > 0
                         and elastic.regrow is not None
                         and elastic.regrow_after > 0
                         and healthy >= elastic.regrow_after):
                     log("[fault] recovered; JOIN of a replacement shard")
-                    state = elastic.regrow(state)
+                    with span("fault:join", cat="membership", step=step):
+                        state = elastic.regrow(state)
                     metrics["joins"] += 1
                     degraded -= 1
                     healthy = 0

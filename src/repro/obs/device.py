@@ -1,0 +1,119 @@
+"""Device-side Wavescope metrics: the donated ring buffer the wave fills.
+
+The telemetry contract is **zero extra collectives**: every field of a
+wave's metrics row is pure arithmetic on values the wave already
+materializes at dispatch time — the op masks, the :class:`~..dqueue.
+wave_engine.Dispatch` routing decisions, and the (replicated) interval
+carry.  Per-shard counters are summed on the HOST at drain time (each
+shard's row holds its local count; the global count is the sum over the
+sharded ring's leading axis), so nothing about telemetry touches the
+wire.  The ring rides the engine's donated state tuple through
+``lax.scan`` bursts and is drained only at burst boundaries via
+:meth:`~..dqueue.wave_engine.WaveEngine.drain_metrics` — the ONE
+sanctioned device→host telemetry read (see the ``no-host-callback-in-
+wave`` AST lint rule).
+
+Row layout (all int32)::
+
+    seq ‖ puts ‖ gets ‖ valid ‖ bottom ‖ aux ‖ headroom ‖ occ[n_windows]
+
+* ``seq``      replicated wave sequence number (monotone across bursts);
+* ``puts``     PER-SHARD admitted enqueues this wave (sum at drain);
+* ``gets``     PER-SHARD admitted dequeues this wave (sum at drain);
+* ``valid``    PER-SHARD valid ops offered this wave (sum at drain);
+* ``bottom``   PER-SHARD valid ops that got the ⊥ reply, i.e. were not
+               routed (sum at drain);
+* ``aux``      the discipline's replicated per-wave extra — ``n_relaxed``
+               for the priority discipline, ``n_active`` (directory size,
+               whose deltas are the split/merge signal) for Seap, 0
+               otherwise;
+* ``headroom`` replicated free-slot count across every tier/bucket
+               window after the wave's reservations;
+* ``occ[w]``   replicated post-dispatch occupancy of window ``w`` (the
+               FIFO/LIFO interval, each priority tier, each Seap bucket).
+
+This module is imported by ``wave_engine`` — it must not import anything
+from ``repro.dqueue`` (and it does not).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# replicated-vs-per-shard split of the fixed row head (occ tail follows)
+METRIC_HEAD = ("seq", "puts", "gets", "valid", "bottom", "aux", "headroom")
+N_HEAD = len(METRIC_HEAD)
+_ADDITIVE = frozenset({"puts", "gets", "valid", "bottom"})
+
+
+class MetricsState(NamedTuple):
+    """The donated telemetry ring carried through the wave path.
+
+    ``count`` is the replicated total number of waves ever recorded (the
+    next row's ``seq``); ``rows`` is ``[n_shards, ring, N_HEAD +
+    n_windows]`` int32 sharded on the leading axis — inside shard_map
+    each shard sees its local ``[1, ring, M]`` block.
+    """
+    count: jax.Array
+    rows: jax.Array
+
+
+def row_width(n_windows: int) -> int:
+    return N_HEAD + int(n_windows)
+
+
+def init_metrics_state(n_shards: int, ring: int, n_windows: int,
+                       mesh=None, axis_name: str | None = None):
+    """A zeroed ring.  With ``mesh``/``axis_name`` the buffers are placed
+    explicitly (count replicated, rows sharded) so donation works from
+    the first burst."""
+    count = jnp.int32(0)
+    rows = jnp.zeros((n_shards, ring, row_width(n_windows)), jnp.int32)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        count = jax.device_put(count, NamedSharding(mesh, P()))
+        rows = jax.device_put(rows, NamedSharding(mesh, P(axis_name)))
+    return MetricsState(count, rows)
+
+
+def record_row(m: MetricsState, row: jax.Array) -> MetricsState:
+    """Append one wave's ``[M]`` row at ring index ``count % ring``.
+
+    Runs INSIDE shard_map on the local ``[1, ring, M]`` view; pure
+    ``dynamic_update_slice`` arithmetic — no collective, no host
+    callback."""
+    ring = m.rows.shape[1]
+    idx = jnp.mod(m.count, ring)
+    rows = lax.dynamic_update_slice(
+        m.rows, row.astype(jnp.int32)[None, None, :], (0, idx, 0))
+    return MetricsState(m.count + 1, rows)
+
+
+def drain(m: MetricsState) -> list:
+    """HOST-side drain at a burst boundary: materialize the ring, order
+    rows chronologically, and combine the shard dimension (per-shard
+    counters summed, replicated fields read off shard 0).
+
+    Returns a list of wave-summary dicts, oldest first; ``occ`` is the
+    per-window occupancy list."""
+    count = int(np.asarray(m.count))
+    rows = np.asarray(m.rows)              # [n_shards, ring, M]
+    ring = rows.shape[1]
+    n_valid = min(count, ring)
+    if n_valid == 0:
+        return []
+    order = [(count - k) % ring for k in range(n_valid, 0, -1)]
+    summed = rows.sum(axis=0)              # per-shard counters
+    rep = rows[0]                          # replicated fields
+    out = []
+    for i in order:
+        d = {name: int((summed if name in _ADDITIVE else rep)[i, j])
+             for j, name in enumerate(METRIC_HEAD)}
+        d["occ"] = [int(v) for v in rep[i, N_HEAD:]]
+        out.append(d)
+    return out

@@ -1,0 +1,47 @@
+"""The flight recorder: a bounded host-side ring of wave summaries.
+
+Elastic queue wrappers (and :class:`~repro.dqueue.work_queue.WorkQueue` /
+:class:`~repro.serve.engine.ServeEngine`) drain the device metrics ring
+at every burst boundary into one of these; when a wave overflows, the
+recorder's trajectory — the last K wave summaries, i.e. the occupancy
+pressure ramp that led to the failure — is attached to the raised
+:class:`~repro.dqueue.errors.QueueOverflowError` /
+:class:`~repro.serve.engine.ServeInvariantError` so the post-mortem no
+longer starts from "this was data loss" but from the 16-wave history
+that caused it.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, Optional
+
+
+class FlightRecorder:
+    """Keep the last ``k`` wave-summary dicts (see
+    :func:`repro.obs.device.drain` for the row schema)."""
+
+    def __init__(self, k: int = 16):
+        if k < 1:
+            raise ValueError("flight recorder needs k >= 1")
+        self.k = k
+        self._ring: deque = deque(maxlen=k)
+
+    def record(self, summary: dict) -> None:
+        self._ring.append(dict(summary))
+
+    def extend(self, summaries: Iterable[dict]) -> None:
+        for s in summaries:
+            self.record(s)
+
+    def trajectory(self) -> list:
+        """Oldest-first copy of the recorded summaries."""
+        return [dict(s) for s in self._ring]
+
+    def last(self) -> Optional[dict]:
+        return dict(self._ring[-1]) if self._ring else None
+
+    def clear(self) -> None:
+        self._ring.clear()
+
+    def __len__(self) -> int:
+        return len(self._ring)

@@ -55,6 +55,15 @@ path: the elastic wrappers raise
 and :meth:`resize` raises :class:`~repro.dqueue.ServeInvariantError`
 instead of a stripped-under-``-O`` bare assert when its enqueue-only
 drain wave misbehaves.
+
+Observability (PR 7): ``ServeEngine(telemetry=True)`` turns on Wavescope —
+each fused queue wave also writes one row of admission/occupancy counters
+into a device-side metrics ring (pure arithmetic on values the wave already
+materializes; zero extra collectives), drained host-side at burst
+boundaries into the queue's flight recorder.  :meth:`metrics` returns the
+structured snapshot (export via ``repro.obs.to_json`` /
+``to_prometheus``), ``submit``/refill/resize emit ``repro.obs.trace``
+spans, and overflow/invariant errors carry the last-K wave trajectory.
 """
 from __future__ import annotations
 
@@ -67,6 +76,7 @@ import numpy as np
 
 from ..dqueue import (ElasticDeviceQueue, ElasticDevicePriorityQueue,
                       ElasticDeviceSeapQueue, ServeInvariantError)
+from ..obs.trace import span
 
 
 @dataclasses.dataclass
@@ -88,7 +98,8 @@ class ServeEngine:
                  max_seq: int = 64, queue_cap: int = 256,
                  priorities: int = 1, relaxation: int = 0,
                  deadline: bool = False, n_buckets: int = 8,
-                 deadline_horizon: int = 64, pipelined: bool = True):
+                 deadline_horizon: int = 64, pipelined: bool = True,
+                 telemetry: bool = False, flight_k: int = 16):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -97,6 +108,7 @@ class ServeEngine:
         self.max_seq = max_seq
         self.priorities = priorities
         self.deadline = deadline
+        self.telemetry = bool(telemetry)
         if deadline and priorities > 1:
             raise ValueError("deadline=True (EDF via the Seap queue) and "
                              "priorities > 1 (SLA tiers) are exclusive "
@@ -113,17 +125,21 @@ class ServeEngine:
                 payload_width=2, ops_per_shard=max(8, 2 * max_slots),
                 split_occupancy=max(1, 2 * max_slots),
                 seed_bounds=[i * grid for i in range(1, n_buckets)],
-                pipelined=pipelined)
+                pipelined=pipelined, metrics=telemetry,
+                flight_k=flight_k)
         elif priorities > 1:
             self.queue = ElasticDevicePriorityQueue(
                 mesh.shape["data"], n_prios=priorities,
                 relaxation=relaxation, cap=queue_cap, payload_width=2,
-                ops_per_shard=max(8, 2 * max_slots), pipelined=pipelined)
+                ops_per_shard=max(8, 2 * max_slots), pipelined=pipelined,
+                metrics=telemetry, flight_k=flight_k)
         else:
             self.queue = ElasticDeviceQueue(mesh.shape["data"],
                                             cap=queue_cap, payload_width=2,
                                             ops_per_shard=max(8, 2 * max_slots),
-                                            pipelined=pipelined)
+                                            pipelined=pipelined,
+                                            metrics=telemetry,
+                                            flight_k=flight_k)
         self.requests: Dict[int, Request] = {}
         self.slots: List[Optional[int]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)
@@ -165,6 +181,12 @@ class ServeEngine:
         step) sets the EDF key — requests with earlier deadlines are
         admitted first, bucket-granular.
         """
+        with span("serve:submit", cat="serve", n=len(reqs),
+                  step=self.step_no):
+            self._submit(reqs, prio, deadline)
+
+    def _submit(self, reqs: List[Request], prio: Optional[int],
+                deadline: Optional[int]):
         for r in reqs:
             if prio is not None:
                 r.prio = prio
@@ -225,7 +247,9 @@ class ServeEngine:
         """ONE fused queue dispatch: staged enqueues + free-slot dequeues."""
         free = [i for i, s in enumerate(self.slots) if s is None]
         enq_rids, self._staged = self._staged, []
-        got = self._queue_wave(enq_rids, len(free))
+        with span("serve:refill", cat="serve", step=self.step_no,
+                  enq=len(enq_rids), free=len(free)):
+            got = self._queue_wave(enq_rids, len(free))
         for slot, rid in zip(free, got):
             r = self.requests[rid]
             r.start_step = self.step_no
@@ -301,8 +325,56 @@ class ServeEngine:
                 "resize drain wave granted requests from an enqueue-only "
                 "wave", granted_rids=got, staged=len(enq_rids),
                 n_shards_from=self.queue.n_shards, n_shards_to=n_shards,
-                host_qsize=self._host_qsize, step=self.step_no)
+                host_qsize=self._host_qsize, step=self.step_no,
+                trajectory=self.queue.trajectory())
         return self.queue.resize(n_shards)
+
+    # ------------------------------------------------------ observability ---
+    def metrics(self) -> dict:
+        """Structured Wavescope snapshot of the serving fabric — feed it to
+        :func:`repro.obs.to_json` / :func:`repro.obs.to_prometheus`.
+
+        Always-on scalars come from host bookkeeping (served count, slot
+        utilization, queue-depth mirror, admission-wait percentiles,
+        per-tier / deadline stats where configured).  With
+        ``telemetry=True`` the snapshot additionally drains the device-side
+        metrics ring into the flight recorder and attaches the recent wave
+        summaries under ``"waves"`` — no extra collectives, the drain is a
+        burst-boundary host read."""
+        q = self.queue
+        occ = [int(x) for x in q._occupancies()]
+        snap = {
+            "step": self.step_no,
+            "served": self.stats["served"],
+            "slots": {"active": sum(s is not None for s in self.slots),
+                      "max": self.max_slots},
+            "staged": len(self._staged),
+            "queue": {
+                "kind": q._kind,
+                "n_shards": q.n_shards,
+                "depth": self._host_qsize,
+                "window_capacity": q._wave_capacity(),
+                "occupancy": occ,
+                "headroom": q._wave_capacity() - max(occ, default=0),
+                "migrations": len(q.migrations),
+            },
+        }
+        waits = self.stats["queue_waits"]
+        adm = {"n": len(waits)}
+        if waits:
+            w = np.asarray(waits, np.float64)
+            adm.update(mean=float(w.mean()),
+                       p50=float(np.percentile(w, 50)),
+                       p99=float(np.percentile(w, 99)))
+        snap["admission"] = adm
+        if self.priorities > 1:
+            snap["tiers"] = self.tier_wait_stats()
+        if self.deadline:
+            snap["deadline"] = self.deadline_stats()
+        if self.telemetry:
+            q._drain_telemetry()
+            snap["waves"] = q.trajectory()
+        return snap
 
     # ------------------------------------------------------------ decode ---
     def step(self):

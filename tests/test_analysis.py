@@ -28,8 +28,11 @@ def test_run_all_zero_violations_8dev():
     assert report["passed"], report["violations"]
     assert report["n_violations"] == 0, report["violations"]
     # every discipline x schedule is present: 4x3 wave programs + legacy
-    # step + 4 migrations = 17
-    assert len(report["programs"]) == 17, sorted(report["programs"])
+    # step + 4 migrations + 4x2 telemetry-on [obs] twins (PR 7) = 25
+    assert len(report["programs"]) == 25, sorted(report["programs"])
+    # the [obs] twins lower against the SAME budgets as their off twins
+    obs = [n for n in report["programs"] if "[obs]" in n or ",obs]" in n]
+    assert len(obs) == 8, sorted(report["programs"])
     # the budgets are exact on the headline invariant: 2 a2a per wave
     for name, info in report["programs"].items():
         if name.endswith(".step") and "legacy" not in name:
@@ -105,10 +108,12 @@ def test_astlint_flags_device_scope_sins():
     from repro.analysis.astlint import lint_source
 
     bad = textwrap.dedent("""
+        import jax
         from jax import lax
         def body(c, x):
             k = int(x)
             assert k > 0
+            jax.debug.print("occ={}", c)
             return c, x
         def run(c, xs):
             out = lax.scan(body, c, xs)
@@ -118,11 +123,30 @@ def test_astlint_flags_device_scope_sins():
     """)
     checks = {v.detail["check"] for v in lint_source(bad, "bad.py")}
     assert checks == {"no-bare-assert", "no-traced-cast",
-                      "no-block-in-burst"}, checks
+                      "no-block-in-burst",
+                      "no-host-callback-in-wave"}, checks
 
     # int()/float() OUTSIDE device scope stays legal (host-side code)
     ok = "def host(x):\n    return int(x) + 1\n"
     assert lint_source(ok, "ok.py") == []
+
+    # the sanctioned Wavescope drain is exempt from the callback rule
+    sanctioned = textwrap.dedent("""
+        def dispatch(self, carry, ops):
+            def drain_metrics(m):
+                return jax.device_get(m.rows)
+            return drain_metrics
+    """)
+    assert lint_source(sanctioned, "obs.py") == []
+
+    # ... but any other callback nested in a wave method is flagged
+    smuggled = textwrap.dedent("""
+        def dispatch(self, carry, ops):
+            jax.debug.callback(lambda x: None, carry)
+            return carry
+    """)
+    checks = {v.detail["check"] for v in lint_source(smuggled, "bad2.py")}
+    assert checks == {"no-host-callback-in-wave"}, checks
 
     # and the shipped device-path modules are clean
     violations, info = lint_paths()

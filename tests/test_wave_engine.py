@@ -411,3 +411,132 @@ def test_random_mixed_membership_schedule_matches_oracles_8dev(
     assert "OK property stack" in out
     assert "OK property pqueue" in out
     assert "OK property seap" in out
+
+
+# --------------------------------------------------------------------------
+# PR 7 Wavescope: telemetry-on legs of the HLO matrix.  Metrics must add
+# ZERO collectives (static a2a count identical on vs off for step,
+# sequential burst AND pipelined burst, all four disciplines) and must not
+# perturb results (outputs and final state bit-identical on vs off).
+# --------------------------------------------------------------------------
+TELEMETRY_MATRIX = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import (DeviceQueue, DeviceStack, DevicePriorityQueue,
+                          DeviceSeapQueue)
+from repro.analysis import count_all_to_all
+
+mesh = make_mesh((8,), ("data",))
+rng = np.random.default_rng(5)
+K, L = 5, 4
+n = 8 * L
+
+CASES = [
+    ("queue", lambda p, m: DeviceQueue(
+        mesh, "data", cap=32, payload_width=2, ops_per_shard=L,
+        pipelined=p, metrics=m), 0),
+    ("stack", lambda p, m: DeviceStack(
+        mesh, "data", cap=32, payload_width=2, ops_per_shard=L,
+        slot_depth=8, pipelined=p, metrics=m), 0),
+    ("priority", lambda p, m: DevicePriorityQueue(
+        mesh, "data", n_prios=2, cap=32, payload_width=2, ops_per_shard=L,
+        pipelined=p, metrics=m), 2),
+    ("seap", lambda p, m: DeviceSeapQueue(
+        mesh, "data", n_buckets=4, cap=32, payload_width=2,
+        ops_per_shard=L, pipelined=p, metrics=m), 50),
+]
+for name, make, kmax in CASES:
+    E = rng.random((K, n)) < 0.6
+    V = rng.random((K, n)) < 0.9
+    args = [jnp.array(E), jnp.array(V)]
+    if kmax:
+        args.append(jnp.array(rng.integers(0, kmax, (K, n)), jnp.int32))
+    args.append(jnp.array(rng.integers(0, 999, (K, n, 2)), jnp.int32))
+    step_args = tuple(a[0] for a in args)
+    args = tuple(args)
+
+    # --- static collective counts: telemetry adds ZERO, all three modes
+    q_off, q_on = make(True, False), make(True, True)
+    c_off = count_all_to_all(q_off._step, (q_off.init_state(),) + step_args)
+    c_on = count_all_to_all(
+        q_on._step,
+        ((q_on.init_state(), q_on.engine.init_metrics_state()),)
+        + step_args)
+    assert c_on == c_off == 2, (name, "step", c_off, c_on)
+    print(f"OK obs-hlo {name} step: off={c_off} on={c_on}")
+    for tag, pipe in (("seq", False), ("pipe", True)):
+        q_off, q_on = make(pipe, False), make(pipe, True)
+        c_off = count_all_to_all(q_off._run_waves,
+                                 (q_off.init_state(),) + args)
+        c_on = count_all_to_all(
+            q_on._run_waves,
+            ((q_on.init_state(), q_on.engine.init_metrics_state()),) + args)
+        assert c_on == c_off <= 2, (name, tag, c_off, c_on)
+        print(f"OK obs-hlo {name} {tag}: off={c_off} on={c_on}")
+
+    # --- bit-identity: metrics-on run == metrics-off run (outputs AND
+    #     final state), pipelined burst
+    q_off, q_on = make(True, False), make(True, True)
+    s_off, *o_off = q_off.run_waves(q_off.init_state(), *args)
+    s_on, *o_on = q_on.run_waves(q_on.init_state(), *args)
+    for a, b in zip(o_off, o_on):
+        assert (np.asarray(a) == np.asarray(b)).all(), name
+    for a, b in zip(jax.tree.leaves(s_off), jax.tree.leaves(s_on)):
+        assert (np.asarray(a) == np.asarray(b)).all(), name
+    rows = q_on.drain_metrics()
+    assert len(rows) == K, (name, len(rows))
+    assert [r["seq"] for r in rows] == list(range(K)), name
+    occ_w = {"queue": 1, "stack": 1, "priority": 2, "seap": 4}[name]
+    assert all(len(r["occ"]) == occ_w for r in rows), name
+    print(f"OK obs-id {name}: outputs+state bit-identical, {len(rows)} rows")
+"""
+
+
+def test_telemetry_hlo_matrix_and_bit_identity_8dev():
+    """PR 7 acceptance: Wavescope metrics keep the collective budget
+    (all_to_all count identical with telemetry on vs off for step /
+    sequential burst / pipelined burst, all four disciplines) and results
+    are bit-identical with telemetry on vs off."""
+    out = run_multidev(TELEMETRY_MATRIX, n_dev=8, timeout=900)
+    for name in ("queue", "stack", "priority", "seap"):
+        assert f"OK obs-hlo {name} step: off=2 on=2" in out
+        assert f"OK obs-hlo {name} seq: off=2 on=2" in out
+        assert f"OK obs-hlo {name} pipe:" in out
+        assert f"OK obs-id {name}" in out
+
+
+# --------------------------------------------------------------------------
+# PR 7 Wavescope: the flight recorder attaches the occupancy trajectory to
+# QueueOverflowError, and the trajectory is consistent with a host replay
+# of its own puts/gets counters.
+# --------------------------------------------------------------------------
+def test_flight_recorder_trajectory_on_overflow():
+    """Drive an elastic FIFO with telemetry into a deliberate overflow:
+    the raised QueueOverflowError must carry the last-K wave summaries,
+    whose occupancies replay exactly from the recorded puts/gets."""
+    import numpy as np
+    import pytest
+    from repro.dqueue import ElasticDeviceQueue, QueueOverflowError
+
+    q = ElasticDeviceQueue(1, cap=8, payload_width=1, ops_per_shard=4,
+                           metrics=True)
+    # each wave: 3 puts + 1 get = net +2; with per-window capacity 8 the
+    # post-enqueue peak first exceeds capacity on wave 3 (6 live + 3 puts)
+    is_enq = np.array([True, True, True, False])
+    valid = np.ones(4, bool)
+    payload = np.arange(4, dtype=np.int32).reshape(4, 1)
+    with pytest.raises(QueueOverflowError) as ei:
+        for _ in range(10):
+            q.step(is_enq, valid, payload)
+    err = ei.value
+    assert err.trajectory, "overflow must carry the flight recorder"
+    assert err.trajectory == q.trajectory()
+    assert "flight recorder" in str(err)
+    # host replay: occupancy must integrate the recorded puts - gets
+    occ = 0
+    for r in err.trajectory:
+        occ += r["puts"] - r["gets"]
+        assert r["occ"] == [occ], err.trajectory
+        assert r["headroom"] == 8 - occ
+    # the failing wave is the last summary, already past capacity's edge
+    assert occ + 3 > 8 or occ > 8
