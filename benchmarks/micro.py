@@ -64,11 +64,25 @@ separately.  Results go to ``BENCH_PR7.json``:
 
     PYTHONPATH=src python -m benchmarks.micro --pr7 [path] [--quick]
 
+PR 8 adds the backpressure benchmark: the SAME bursty arrival schedule
+(10x bursts over a steady near-capacity base rate) through a ServeEngine
+with (a) no admission policy — staging is unconditional and the burst
+overflows the queue mid-wave, (b) shed, (c) defer, (d) degrade, and
+(e) shed plus the hysteresis autoscale controller.  The baseline must
+overflow; every policy must sustain ZERO QueueOverflowError, trading it
+for structured sheds/spills — goodput, shed rate, resize count, and p99
+admission-decision latency per flavor.  Results go to
+``BENCH_PR8.json``:
+
+    PYTHONPATH=src python -m benchmarks.micro --pr8 [path] [--quick]
+
 ``--all [--quick]`` runs EVERY emitter above (the CI bench-smoke entry
 point: one invocation emits every BENCH_PR*.json, and any emitter crash
 fails the run — future PRs add an emitter here instead of editing the
-workflow).  Each emitter re-execs itself on a forced 8-device CPU mesh
-when needed.
+workflow).  PR numbers with no benchmark (PR 6, the static analyzer)
+are listed in ``_NO_BENCH`` and reported with an explicit skip line
+instead of a silent hole in the artifact.  Each emitter re-execs itself
+on a forced 8-device CPU mesh when needed.
 """
 from __future__ import annotations
 
@@ -995,11 +1009,162 @@ def emit_bench_pr7(path: str = "BENCH_PR7.json", n_dev: int = 8,
     return data
 
 
+def _measure_backpressure(n_dev: int, quick: bool = False) -> dict:
+    """The SAME 10x-burst arrival schedule through a ServeEngine with no
+    admission policy (the pre-PR 8 baseline: staging is unconditional, so
+    the burst overflows the device queue MID-WAVE and poisons the engine)
+    vs. the shed / defer / degrade policies and shed + the hysteresis
+    autoscale controller.  The baseline must overflow; every policy must
+    finish with ZERO QueueOverflowError — overload becomes structured,
+    resubmittable AdmissionRejected sheds (or host-side spills, or tier
+    downgrades) decided BEFORE staging, against the zero-cost pressure
+    API.  Reported per flavor: goodput, shed rate, overflow count, p99
+    admission-decision latency; the autoscale flavor adds resize counts
+    and the shard trajectory."""
+    from repro.configs import get_config
+    from repro.dqueue import QueueOverflowError
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.serve import (AdmissionRejected, HysteresisController,
+                             Request, ServeEngine)
+
+    steps = 30 if quick else 80
+    steady, burst, burst_len, burst_every = 2, 20, 3, 10 if quick else 20
+    max_slots, max_new, queue_cap = 6, 2, 8   # window cap = 2 shards x 8
+    spill_cap = 64
+
+    cfg = get_config("mamba2_130m").reduced(n_layers=1)
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(0))
+
+    # one arrival trace shared by every flavor: steady near-capacity base
+    # rate + 10x bursts that exceed the whole queue window several-fold
+    # (offset into the cycle so the baseline provably serves the steady
+    # rate fine before the first burst overflows it)
+    arrivals = [steady + (burst if 4 <= (w % burst_every) < 4 + burst_len
+                          else 0) for w in range(steps)]
+
+    def make_engine(flavor):
+        mesh = make_host_mesh(n_data=2)
+        kw = dict(max_slots=max_slots, max_seq=4 + max_new + 2,
+                  queue_cap=queue_cap, spill_cap=spill_cap)
+        if flavor == "baseline":
+            return ServeEngine(model, params, mesh, **kw)
+        if flavor == "degrade":
+            return ServeEngine(model, params, mesh, priorities=2,
+                               admission="degrade", **kw)
+        if flavor == "shed_autoscale":
+            ctl = HysteresisController(high_watermark=0.6, high_patience=2,
+                                       low_watermark=0.15, low_patience=12,
+                                       cooldown=3, grow_k=2)
+            return ServeEngine(model, params, mesh, admission="shed",
+                               autoscale=ctl, **kw)
+        return ServeEngine(model, params, mesh, admission=flavor, **kw)
+
+    def run(flavor):
+        eng = make_engine(flavor)
+        offered = shed = spill_overflows = overflows = 0
+        rid = 0
+        for w in range(steps):
+            reqs = [Request(rid=rid + j, prompt=[1, 2, 3],
+                            max_new=max_new) for j in range(arrivals[w])]
+            rid += len(reqs)
+            offered += len(reqs)
+            try:
+                eng.submit(reqs)
+            except AdmissionRejected as e:
+                shed += len(e.shed)
+                spill_overflows += int(e.kind == "spill-overflow")
+            except QueueOverflowError:
+                overflows += 1
+                break
+            try:
+                eng.step()
+            except QueueOverflowError:
+                overflows += 1
+                break
+        else:
+            try:
+                eng.run_until_drained(max_steps=1000)
+            except QueueOverflowError:
+                overflows += 1
+        st = eng.admission_stats
+        lat = np.asarray(st["decide_us"], np.float64)
+        row = {"offered": offered, "served": eng.stats["served"],
+               "goodput": eng.stats["served"] / offered,
+               "shed": shed, "shed_rate": shed / offered,
+               "degraded": st["degraded"],
+               "spill_peak": st["spill_peak"],
+               "spill_overflow_rejects": spill_overflows,
+               "queue_overflows": overflows,
+               "admission_decide_us_p99":
+                   float(np.percentile(lat, 99)) if lat.size else None}
+        if eng.autoscale is not None:
+            snap = eng.autoscale.snapshot()
+            row["resizes"] = snap["grows"] + snap["shrinks"]
+            row["grows"] = snap["grows"]
+            row["shrinks"] = snap["shrinks"]
+            row["final_shards"] = eng.queue.n_shards
+        return row
+
+    out = {"n_dev": n_dev, "n_shards": 2,
+           "window_capacity": 2 * queue_cap, "steps": steps,
+           "arrivals": {"steady_per_step": steady, "burst": burst,
+                        "burst_len": burst_len,
+                        "burst_every": burst_every},
+           "service": {"max_slots": max_slots, "max_new": max_new},
+           "spill_cap": spill_cap}
+    for flavor in ("baseline", "shed", "defer", "degrade",
+                   "shed_autoscale"):
+        out[flavor] = run(flavor)
+    # ---- the headline claims, asserted so the artifact can't lie ----
+    assert out["baseline"]["queue_overflows"] > 0, \
+        "baseline failed to overflow — the burst no longer stresses it"
+    for flavor in ("shed", "defer", "degrade", "shed_autoscale"):
+        assert out[flavor]["queue_overflows"] == 0, \
+            f"{flavor} let the queue overflow"
+        assert out[flavor]["served"] > out["baseline"]["served"], \
+            f"{flavor} served less than the overflowing baseline"
+    assert out["shed_autoscale"]["resizes"] > 0, \
+        "controller never resized under sustained bursts"
+    return out
+
+
+def emit_bench_pr8(path: str = "BENCH_PR8.json", n_dev: int = 8,
+                   quick: bool = False) -> dict:
+    """Measure backpressure policies vs. the overflowing baseline under
+    10x bursts and write JSON (re-execs on a forced ``n_dev``-device CPU
+    mesh)."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    child = _reexec_on_mesh(
+        "PR8", path, n_dev,
+        ["--pr8", path, "--n-dev", str(n_dev)]
+        + (["--quick"] if quick else []))
+    if child is not None:
+        return child
+    data = _measure_backpressure(n_dev=n_dev, quick=quick)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
+# PR numbers that deliberately ship NO benchmark emitter.  emit_all
+# prints one explicit skip line per entry so a missing BENCH_PRn.json in
+# the CI artifact is documented output, not a silent gap (PR 8 satellite
+# bugfix: --all used to skip PR 6 without a trace).
+_NO_BENCH = {
+    "BENCH_PR6.json": "PR 6 is the wavecheck static analyzer — nothing "
+                      "to time; run `python -m repro.analysis --all`",
+}
+
+
 def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
     """The CI bench-smoke entry point: run EVERY BENCH_PR*.json emitter.
 
     Any emitter crash fails the whole run (after attempting the rest, so
-    one regression doesn't mask another's numbers)."""
+    one regression doesn't mask another's numbers).  PRs with no
+    benchmark are announced via ``_NO_BENCH`` skip lines."""
     emitters = [("BENCH_PR1.json", lambda p: emit_bench_pr1(
                      p, n_dev=n_dev, quick=quick)),
                 ("BENCH_PR2.json", lambda p: emit_bench_pr2(
@@ -1011,7 +1176,11 @@ def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
                 ("BENCH_PR5.json", lambda p: emit_bench_pr5(
                      p, n_dev=n_dev, quick=quick)),
                 ("BENCH_PR7.json", lambda p: emit_bench_pr7(
+                     p, n_dev=n_dev, quick=quick)),
+                ("BENCH_PR8.json", lambda p: emit_bench_pr8(
                      p, n_dev=n_dev, quick=quick))]
+    for path, why in sorted(_NO_BENCH.items()):
+        print(f"bench: skipping {path} ({why})")
     out, failures = {}, []
     for path, emit in emitters:
         try:
@@ -1081,6 +1250,9 @@ if __name__ == "__main__":
     ap.add_argument("--pr7", nargs="?", const="BENCH_PR7.json", default=None,
                     help="measure Wavescope telemetry overhead and write "
                          "BENCH_PR7.json")
+    ap.add_argument("--pr8", nargs="?", const="BENCH_PR8.json", default=None,
+                    help="measure admission backpressure vs the "
+                         "overflowing baseline and write BENCH_PR8.json")
     ap.add_argument("--all", action="store_true",
                     help="run every BENCH_PR*.json emitter (CI bench smoke)")
     ap.add_argument("--quick", action="store_true",
@@ -1112,6 +1284,9 @@ if __name__ == "__main__":
     elif cli.pr7:
         out = emit_bench_pr7(cli.pr7, n_dev=cli.n_dev, K=cli.waves,
                              quick=cli.quick)
+        print(json.dumps(out, indent=2))
+    elif cli.pr8:
+        out = emit_bench_pr8(cli.pr8, n_dev=cli.n_dev, quick=cli.quick)
         print(json.dumps(out, indent=2))
     else:
         for row in run_all():

@@ -1,3 +1,16 @@
+"""SKUEUE device path: the wave protocol as fused jax collectives.
+
+One :class:`WaveEngine` drives every discipline — FIFO
+(:class:`DeviceQueue`), LIFO (:class:`DeviceStack`), P-tier priority
+(:class:`DevicePriorityQueue`), arbitrary-key Seap
+(:class:`DeviceSeapQueue`) — at two fused ``all_to_all`` collectives per
+wave (one per wave in pipelined bursts).  The ``Elastic*`` wrappers add
+runtime JOIN/LEAVE membership, checkpointing, the structured
+:class:`QueueOverflowError` on capacity violation, and the zero-cost
+pre-wave pressure API (``occupancy()`` / ``headroom()`` / ``pressure()``)
+that the PR 8 admission control plane decides on.  See
+``docs/ARCHITECTURE.md``.
+"""
 from .device_queue import (DeviceQueue, DeviceQueueState, DeviceStack,
                            FifoDiscipline, LifoDiscipline)
 from .elastic import ElasticDeviceQueue, ElasticDeviceStack

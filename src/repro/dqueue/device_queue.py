@@ -58,6 +58,10 @@ from .wave_engine import (TAG_GET, TAG_INACTIVE, TAG_PUT, Discipline,
 
 
 class DeviceQueueState(NamedTuple):
+    """FIFO queue state: replicated ``[first, last]`` live window plus the
+    per-shard ring store (``store_vals`` ``[n_shards, cap+1, W]`` sharded,
+    ``store_full`` occupancy bits; the extra slot is the junk row)."""
+
     first: jax.Array          # replicated int32
     last: jax.Array           # replicated int32
     store_vals: jax.Array     # [n_shards(sharded), cap+1, W] int32
@@ -65,6 +69,7 @@ class DeviceQueueState(NamedTuple):
 
     @property
     def size(self) -> jax.Array:
+        """Live element count (``last - first + 1``), as a traced scalar."""
         return self.last - self.first + 1
 
 
@@ -86,13 +91,16 @@ class FifoDiscipline(Discipline):
         self.state_specs = DeviceQueueState(P(), P(), P(axis), P(axis))
 
     def split(self, state):
+        """Split state into its (replicated carry, sharded store) halves."""
         return (state.first, state.last), (state.store_vals,
                                            state.store_full)
 
     def merge(self, carry, store):
+        """Reassemble the full state from (carry, store) halves."""
         return DeviceQueueState(carry[0], carry[1], store[0], store[1])
 
     def dispatch(self, carry, ops) -> Dispatch:
+        """Stages 1-3: assign positions and build the routed Dispatch."""
         is_enq, valid, payload = ops
         pos, matched, new_qs = sharded_queue_scan(
             is_enq, QueueState(carry[0], carry[1]), self.axis,
@@ -109,12 +117,15 @@ class FifoDiscipline(Discipline):
                         (new_qs.first, new_qs.last), ovf, ())
 
     def commit(self, store, recv):
+        """Stage 4: apply this shard's routed requests to its store."""
         return ring_commit(store, recv, self.junk, self.W)
 
     def zero_outs(self, L: int) -> tuple:
+        """All-invalid per-op dispatch outputs (padding waves)."""
         return (jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
 
     def occupancy(self, carry):
+        """Per-window occupancy vector from the carry (traced)."""
         return jnp.reshape(carry[1] - carry[0] + 1, (1,))
 
 
@@ -166,6 +177,7 @@ class DeviceQueue:
             self._run_waves = self._build_legacy_run_waves()
 
     def init_state(self) -> DeviceQueueState:
+        """Freshly sharded empty state on this structure's mesh."""
         n, cap, W = self.n_shards, self.cap, self.W
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         rep = jax.sharding.NamedSharding(self.mesh, P())
@@ -319,14 +331,17 @@ class LifoDiscipline(Discipline):
                             "ticks": P(axis)}
 
     def split(self, state):
+        """Split state into its (replicated carry, sharded store) halves."""
         return (state["last"], state["ticket"]), (state["vals"],
                                                   state["ticks"])
 
     def merge(self, carry, store):
+        """Reassemble the full state from (carry, store) halves."""
         return {"last": carry[0], "ticket": carry[1],
                 "vals": store[0], "ticks": store[1]}
 
     def dispatch(self, carry, ops) -> Dispatch:
+        """Stages 1-3: assign positions and build the routed Dispatch."""
         is_push, valid, payload = ops
         n_shards, cap = self.n_shards, self.cap
         # global order over shards: one packed descriptor all_gather, then
@@ -353,6 +368,7 @@ class LifoDiscipline(Discipline):
                         jnp.zeros((), bool), ())   # capacity is commit-time
 
     def commit(self, store, recv):
+        """Stage 4: apply this shard's routed requests to its store."""
         cap, W, D = self.cap, self.W, self.D
         sv = store[0][0]     # [cap+1, D, W]
         stk = store[1][0]    # [cap+1, D]
@@ -409,9 +425,11 @@ class LifoDiscipline(Discipline):
         return (sv[None], stk[None]), reply, slot_overflow
 
     def zero_outs(self, L: int) -> tuple:
+        """All-invalid per-op dispatch outputs (padding waves)."""
         return (jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
 
     def occupancy(self, carry):
+        """Per-window occupancy vector from the carry (traced)."""
         # stack positions start at 1: the live window is [1, last]
         return jnp.reshape(carry[0], (1,))
 
@@ -451,6 +469,7 @@ class DeviceStack:
         self._run_waves = self.engine._run_waves
 
     def init_state(self):
+        """Freshly sharded empty state on this structure's mesh."""
         n, cap, W, D = self.n_shards, self.cap, self.W, self.D
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         rep = jax.sharding.NamedSharding(self.mesh, P())

@@ -170,6 +170,76 @@ class _ElasticBase:
         """The flight recorder's last-K wave summaries, oldest first."""
         return self.recorder.trajectory()
 
+    # ------------------------------------------------------ pressure API ---
+    def window_capacity(self) -> int:
+        """Elements ONE store window holds under the current membership.
+
+        ``n_shards * cap`` for FIFO (per tier/bucket for the tiered
+        structures; times ``slot_depth`` for the stack).  A host-side
+        constant of the current shard count — admission policies
+        (:mod:`repro.serve.admission`) compare it against
+        :meth:`occupancy` without any device work.
+
+        Returns:
+            Per-window element capacity as a host int.
+        """
+        return self._wave_capacity()
+
+    def occupancy(self) -> List[int]:
+        """Committed post-burst occupancy per window, as host ints.
+
+        Reads only the replicated interval bookkeeping (``first``/``last``
+        scalars) the last wave already materialized — a tiny device→host
+        scalar copy with NO collective and NO wave dispatch, so pre-wave
+        admission decisions cannot perturb the wave pipeline.
+
+        Returns:
+            One entry per window: ``[size]`` for FIFO/LIFO, a per-tier
+            vector for the priority queue, per-bucket for the Seap queue.
+        """
+        # ``_occupancies`` builds on the ``size``/``sizes`` host properties,
+        # which already return concrete Python ints — no cast needed here
+        # (and ``occupancy`` doubles as a Discipline *device* method name,
+        # so wavecheck's no-traced-cast rule watches this scope).
+        return list(self._occupancies())
+
+    def headroom(self) -> List[int]:
+        """Free slots per window before the next enqueue overwrites data.
+
+        ``window_capacity() - occupancy()`` per window; enqueueing into a
+        window with zero headroom is exactly the wrap-around that raises
+        :class:`~.errors.QueueOverflowError` mid-wave.  Same zero-cost
+        host read as :meth:`occupancy`.
+
+        Returns:
+            One int per window (negative only after an overflow already
+            corrupted the window).
+        """
+        cap = self._wave_capacity()
+        return [cap - o for o in self.occupancy()]
+
+    def pressure(self) -> dict:
+        """One-call snapshot for host-side admission/autoscale decisions.
+
+        Returns:
+            Dict with ``capacity`` (per-window int), ``occupancy`` /
+            ``headroom`` (per-window vectors), ``n_windows``,
+            ``n_shards``, ``pool_size``, and ``utilization`` — the
+            hottest window's ``occupancy / capacity`` as a float in
+            ``[0, 1]`` (above 1 only after an overflow already happened).
+        """
+        cap = self._wave_capacity()
+        occ = self.occupancy()
+        return {
+            "capacity": cap,
+            "occupancy": occ,
+            "headroom": [cap - o for o in occ],
+            "n_windows": len(occ),
+            "n_shards": self.n_shards,
+            "pool_size": self.pool_size,
+            "utilization": (max(occ) / cap) if cap else 1.0,
+        }
+
     def _burst_span(self, K: int):
         """Span wrapping one multi-wave burst dispatch."""
         return span(f"{self._kind}:burst", cat="wave", K=int(K),
@@ -196,14 +266,23 @@ class _ElasticBase:
     # -------------------------------------------------------- membership ---
     @property
     def n_shards(self) -> int:
+        """Current number of active shards (the runtime-variable P)."""
         return len(self._active)
 
     @property
+    def pool_size(self) -> int:
+        """Total devices available to this queue (active + spare); the
+        hard upper bound :meth:`grow` can reach."""
+        return len(self._pool)
+
+    @property
     def mesh(self):
+        """The active shards' jax mesh (changes identity across resizes)."""
         return self.inner.mesh
 
     @property
     def devices(self) -> list:
+        """The active shard devices, in shard-index order."""
         return list(self._active)
 
     def grow(self, k: int = 1) -> dict:
@@ -438,12 +517,14 @@ class _MultiWindowElastic(_ElasticBase):
 
     @property
     def sizes(self) -> list:
+        """Per-window occupancy vector (one host int per tier/bucket)."""
         f = np.asarray(self.state.firsts)
         l = np.asarray(self.state.lasts)
         return [int(x) for x in (l - f + 1)]
 
     @property
     def size(self) -> int:
+        """Total live elements across every window."""
         return sum(self.sizes)
 
     def _occupancies(self) -> list:
@@ -565,6 +646,7 @@ class ElasticDeviceQueue(_ElasticBase):
 
     @property
     def size(self) -> int:
+        """Live elements in the FIFO window (``last - first + 1``)."""
         return int(self.state.last) - int(self.state.first) + 1
 
     # -------------------------------------------------------- migration ----
@@ -664,6 +746,9 @@ class ElasticDeviceStack(_ElasticBase):
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_push, valid, payload):
+        """One wave on the current mesh; state is threaded internally.
+        Returns (positions, matched, pop_vals, pop_ok, overflow); raises
+        :class:`~.errors.QueueOverflowError` when the wave overflowed."""
         with self._burst_span(1):
             self.state, pos, m, pv, pok, ovf = self.inner.step(
                 self.state, jnp.asarray(is_push), jnp.asarray(valid),
@@ -672,6 +757,8 @@ class ElasticDeviceStack(_ElasticBase):
         return pos, m, pv, pok, ovf
 
     def run_waves(self, is_push, valid, payload):
+        """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
+        Raises :class:`~.errors.QueueOverflowError` on overflow."""
         is_push = jnp.asarray(is_push)
         with self._burst_span(is_push.shape[0]):
             self.state, pos, m, pv, pok, ovf = self.inner.run_waves(
@@ -682,6 +769,7 @@ class ElasticDeviceStack(_ElasticBase):
 
     @property
     def size(self) -> int:
+        """Live elements on the stack (positions start at 1)."""
         return int(self.state["last"])
 
     # -------------------------------------------------------- migration ----

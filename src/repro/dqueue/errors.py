@@ -8,6 +8,14 @@ worse, sailed through under ``python -O``.  The device wave cannot raise
 owners of queue state — the elastic wrappers, WorkQueue, ServeEngine —
 convert the flag into :class:`QueueOverflowError` here, carrying the
 per-tier/bucket occupancy a shed/defer admission policy needs.
+
+PR 8 closed that loop: :mod:`repro.serve.admission` consults the elastic
+wrappers' zero-cost pressure API (``occupancy()`` / ``headroom()`` /
+``pressure()``) BEFORE staging, so a full window rejects with a
+structured, retryable ``AdmissionRejected`` at submit time instead of
+raising this error mid-wave.  Seeing :class:`QueueOverflowError` with an
+admission policy installed is therefore a bug report, not an operational
+event — see ``docs/BACKPRESSURE.md`` for the residual loss windows.
 """
 from __future__ import annotations
 
@@ -69,6 +77,15 @@ class QueueOverflowError(RuntimeError):
             msg += (f"; flight recorder: {len(self.trajectory)}-wave "
                     f"occupancy ramp {ramp}")
         super().__init__(msg)
+
+    @property
+    def headroom(self) -> list:
+        """Free slots per window at the post-burst snapshot
+        (``capacity - occupancy``; negative entries mark the windows that
+        wrapped).  The same vector the elastic wrappers' pre-wave
+        ``headroom()`` API would have reported — an admission policy
+        acting on it at submit time prevents this error entirely."""
+        return [self.capacity - o for o in self.occupancy]
 
 
 class ServeInvariantError(RuntimeError):

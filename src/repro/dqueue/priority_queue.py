@@ -53,6 +53,9 @@ from .wave_engine import (Discipline, Dispatch, TAG_GET, TAG_INACTIVE,
 
 
 class PriorityQueueState(NamedTuple):
+    """P-tier queue state: per-tier replicated ``[firsts, lasts]`` live
+    windows plus the sharded ring store (one slot window per tier)."""
+
     firsts: jax.Array         # [P] replicated int32
     lasts: jax.Array          # [P] replicated int32
     store_vals: jax.Array     # [n_shards(sharded), P*cap + 1, W] int32
@@ -60,6 +63,7 @@ class PriorityQueueState(NamedTuple):
 
     @property
     def sizes(self) -> jax.Array:
+        """Per-tier occupancy vector ``[P]`` (traced)."""
         return self.lasts - self.firsts + 1
 
 
@@ -85,13 +89,16 @@ class PriorityDiscipline(Discipline):
         self.state_specs = PriorityQueueState(P(), P(), P(axis), P(axis))
 
     def split(self, state):
+        """Split state into its (replicated carry, sharded store) halves."""
         return (state.firsts, state.lasts), (state.store_vals,
                                              state.store_full)
 
     def merge(self, carry, store):
+        """Reassemble the full state from (carry, store) halves."""
         return PriorityQueueState(carry[0], carry[1], store[0], store[1])
 
     def dispatch(self, carry, ops) -> Dispatch:
+        """Stages 1-3: assign positions and build the routed Dispatch."""
         is_enq, valid, prio, payload = ops
         firsts, lasts = carry
         n_shards, cap, P_ = self.n_shards, self.cap, self.n_prios
@@ -126,16 +133,20 @@ class PriorityDiscipline(Discipline):
                         (new_firsts, new_lasts), ovf, (n_relaxed,))
 
     def commit(self, store, recv):
+        """Stage 4: apply this shard's routed requests to its store."""
         return ring_commit(store, recv, self.junk, self.W)
 
     def zero_outs(self, L: int) -> tuple:
+        """All-invalid per-op dispatch outputs (padding waves)."""
         return (jnp.full((L,), -1, jnp.int32),
                 jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
 
     def zero_aux(self) -> tuple:
+        """Zeroed auxiliary per-wave outputs (padding waves)."""
         return (jnp.int32(0),)
 
     def occupancy(self, carry):
+        """Per-window occupancy vector from the carry (traced)."""
         return carry[1] - carry[0] + 1
 
 
@@ -179,6 +190,7 @@ class DevicePriorityQueue:
         self._run_waves = self.engine._run_waves
 
     def init_state(self) -> PriorityQueueState:
+        """Freshly sharded empty state on this structure's mesh."""
         n, cap, W, P_ = self.n_shards, self.cap, self.W, self.n_prios
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         rep = jax.sharding.NamedSharding(self.mesh, P())

@@ -57,6 +57,10 @@ from .wave_engine import (Discipline, Dispatch, TAG_GET, TAG_INACTIVE,
 
 
 class SeapQueueState(NamedTuple):
+    """Seap queue state: per-bucket replicated intervals, the replicated
+    bucket directory (``lo``/``active`` boundary table plus observed key
+    range), and the sharded ring store (one slot window per bucket)."""
+
     firsts: jax.Array         # [B] replicated int32 (per-bucket interval)
     lasts: jax.Array          # [B] replicated int32
     lo: jax.Array             # [B] replicated int32 bucket key boundaries
@@ -68,6 +72,7 @@ class SeapQueueState(NamedTuple):
 
     @property
     def sizes(self) -> jax.Array:
+        """Per-bucket occupancy vector ``[B]`` (traced)."""
         return self.lasts - self.firsts + 1
 
 
@@ -95,14 +100,17 @@ class SeapDiscipline(Discipline):
                                           P(axis), P(axis))
 
     def split(self, state):
+        """Split state into its (replicated carry, sharded store) halves."""
         return ((state.firsts, state.lasts, state.lo, state.active,
                  state.key_lo, state.key_hi),
                 (state.store_vals, state.store_full))
 
     def merge(self, carry, store):
+        """Reassemble the full state from (carry, store) halves."""
         return SeapQueueState(*carry, store[0], store[1])
 
     def dispatch(self, carry, ops) -> Dispatch:
+        """Stages 1-3: assign positions and build the routed Dispatch."""
         is_enq, valid, key, payload = ops
         firsts, lasts, lo, active, key_lo, key_hi = carry
         n_shards, cap = self.n_shards, self.cap
@@ -137,16 +145,20 @@ class SeapDiscipline(Discipline):
                          new_key_lo, new_key_hi), ovf, (n_active,))
 
     def commit(self, store, recv):
+        """Stage 4: apply this shard's routed requests to its store."""
         return ring_commit(store, recv, self.junk, self.W)
 
     def zero_outs(self, L: int) -> tuple:
+        """All-invalid per-op dispatch outputs (padding waves)."""
         return (jnp.full((L,), -1, jnp.int32),
                 jnp.full((L,), -1, jnp.int32), jnp.zeros((L,), bool))
 
     def zero_aux(self) -> tuple:
+        """Zeroed auxiliary per-wave outputs (padding waves)."""
         return (jnp.int32(0),)
 
     def occupancy(self, carry):
+        """Per-window occupancy vector from the carry (traced)."""
         return carry[1] - carry[0] + 1
 
 
@@ -209,6 +221,7 @@ class DeviceSeapQueue:
         self._run_waves = self.engine._run_waves
 
     def init_state(self) -> SeapQueueState:
+        """Freshly sharded empty state on this structure's mesh."""
         n, cap, W, B = self.n_shards, self.cap, self.W, self.n_buckets
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         rep = jax.sharding.NamedSharding(self.mesh, P())
@@ -329,6 +342,7 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
 
     @property
     def n_active(self) -> int:
+        """Active buckets in the directory (host read, no dispatch)."""
         return int(np.asarray(self.state.active).sum())
 
     def directory(self) -> list:

@@ -54,6 +54,18 @@ class _Lease:
 
 
 class WorkQueue:
+    """Lease-based work-stealing scheduler over a :class:`DeviceQueue`.
+
+    Args:
+      dq: the backing device queue (item payloads live sharded on it).
+      lease_steps: steps before an unacknowledged dequeue is reissued.
+      flight_k: flight-recorder depth for the telemetry trajectory.
+
+    Raises:
+      QueueOverflowError: on oversized submit batches ("work") or when
+        the backing device queue overflows ("workqueue").
+    """
+
     def __init__(self, dq: DeviceQueue, lease_steps: int = 8,
                  flight_k: int = 16):
         self.dq = dq
@@ -203,4 +215,5 @@ class WorkQueue:
 
     @property
     def outstanding(self) -> int:
+        """Leased-but-unacknowledged item count."""
         return len(self.leases)

@@ -77,7 +77,8 @@ class ElasticPolicy:
     regrow_after: int = 0
 
 
-def elastic_queue_policy(queue, regrow_after: int = 0) -> ElasticPolicy:
+def elastic_queue_policy(queue, regrow_after: int = 0,
+                         controller=None) -> ElasticPolicy:
     """An :class:`ElasticPolicy` wired to any elastic queue wrapper
     (``ElasticDeviceQueue`` / ``ElasticDeviceStack`` /
     ``ElasticDevicePriorityQueue`` — all WaveEngine disciplines share the
@@ -85,11 +86,38 @@ def elastic_queue_policy(queue, regrow_after: int = 0) -> ElasticPolicy:
     :class:`ShardFailure` LEAVEs the dead shard out of the queue fabric,
     and recovery JOINs one replacement shard back after ``regrow_after``
     healthy steps.  The training/serving state passes through untouched —
-    the queue re-materializes itself."""
+    the queue re-materializes itself.
+
+    Args:
+      queue: the elastic wrapper whose membership the policy drives.
+      regrow_after: consecutive healthy steps before a replacement JOIN
+        (0 disables regrowing).
+      controller: an optional
+        :class:`~repro.serve.HysteresisController` sharing this queue
+        (the PR 8 autoscaler).  Every failure-LEAVE and regrow-JOIN is
+        reported to it as an *external* resize, which resets its
+        patience counters and starts its cooldown — so the autoscaler
+        does not immediately JOIN back a shard the fault layer removed
+        because it died, and does not count the fault layer's membership
+        changes as its own decisions.
+    """
+    def _notify():
+        if controller is not None:
+            controller.notify_resize(queue.n_shards, external=True)
+
+    def _shrink(state, shard):
+        queue.shrink([shard])
+        _notify()
+        return state
+
+    def _regrow(state):
+        queue.grow(1)
+        _notify()
+        return state
+
     return ElasticPolicy(
-        shrink=lambda state, shard: (queue.shrink([shard]), state)[1],
-        regrow=((lambda state: (queue.grow(1), state)[1])
-                if regrow_after > 0 else None),
+        shrink=_shrink,
+        regrow=_regrow if regrow_after > 0 else None,
         regrow_after=regrow_after)
 
 

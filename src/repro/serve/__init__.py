@@ -1,5 +1,19 @@
+"""Serving layer: continuous batching fed by the SKUEUE device queue.
+
+:class:`ServeEngine` is the entry point; PR 8 added the backpressure
+control plane — admission policies (:mod:`repro.serve.admission`) and the
+:class:`HysteresisController` autoscaler (:mod:`repro.serve.controller`).
+See ``docs/BACKPRESSURE.md``.
+"""
 from ..dqueue import QueueOverflowError, ServeInvariantError
+from .admission import (AdmissionPolicy, AdmissionRejected, DeferPolicy,
+                        DegradePolicy, PressureSignal, ShedPolicy,
+                        resolve_policy)
+from .controller import ControllerConfig, HysteresisController
 from .engine import Request, ServeEngine
 
-__all__ = ["QueueOverflowError", "Request", "ServeEngine",
-           "ServeInvariantError"]
+__all__ = ["AdmissionPolicy", "AdmissionRejected", "ControllerConfig",
+           "DeferPolicy", "DegradePolicy", "HysteresisController",
+           "PressureSignal", "QueueOverflowError", "Request",
+           "ServeEngine", "ShedPolicy", "ServeInvariantError",
+           "resolve_policy"]

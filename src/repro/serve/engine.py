@@ -56,6 +56,19 @@ and :meth:`resize` raises :class:`~repro.dqueue.ServeInvariantError`
 instead of a stripped-under-``-O`` bare assert when its enqueue-only
 drain wave misbehaves.
 
+Backpressure (PR 8): ``ServeEngine(admission=...)`` installs an admission
+policy (``"shed"`` / ``"defer"`` / ``"degrade"``, see
+:mod:`repro.serve.admission`) that :meth:`submit` consults against the
+queue's zero-cost pre-wave pressure API before staging anything — a full
+window rejects with a structured, retryable
+:class:`~repro.serve.AdmissionRejected` instead of overwriting live data
+mid-wave; deferred requests wait in a bounded host-side spill buffer that
+drains ahead of new arrivals on every refill.  ``autoscale=`` wires a
+:class:`~repro.serve.HysteresisController` that turns sustained pressure
+above its high watermark into ``resize(n + k)`` (and sustained idleness
+into a shrink) over the PR 2 one-collective migration — the system's
+first closed feedback loop.  ``docs/BACKPRESSURE.md`` is the design doc.
+
 Observability (PR 7): ``ServeEngine(telemetry=True)`` turns on Wavescope —
 each fused queue wave also writes one row of admission/occupancy counters
 into a device-side metrics ring (pure arithmetic on values the wave already
@@ -67,7 +80,10 @@ spans, and overflow/invariant errors carry the last-K wave trajectory.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import time
+from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -77,10 +93,28 @@ import numpy as np
 from ..dqueue import (ElasticDeviceQueue, ElasticDevicePriorityQueue,
                       ElasticDeviceSeapQueue, ServeInvariantError)
 from ..obs.trace import span
+from .admission import AdmissionRejected, PressureSignal, resolve_policy
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request and its lifecycle bookkeeping.
+
+    Attributes:
+      rid: caller-chosen unique request id (rides the queue as payload).
+      prompt: prompt token ids, teacher-forced through the decode path.
+      max_new: tokens to generate after the prompt.
+      prio: SLA tier on ``priorities > 1`` engines (0 = most urgent; the
+        degrade admission policy may raise this).
+      deadline: absolute engine step to start by on EDF engines (the
+        degrade policy may extend it); -1 = unset.
+      out: generated token ids (filled by the engine).
+      done: True once ``max_new`` tokens (or ``max_seq``) were produced.
+      enqueue_step: step the request was accepted (staged or deferred).
+      start_step: step it won a decode slot; -1 while queued.
+      finish_step: step it completed; -1 while running.
+    """
+
     rid: int
     prompt: List[int]
     max_new: int = 8
@@ -94,12 +128,44 @@ class Request:
 
 
 class ServeEngine:
+    """Continuous-batching serving engine over the SKUEUE device queue.
+
+    See the module docstring for the architecture.  Constructor args:
+
+    Args:
+      model / params / mesh: the decode model, its parameters, and the
+        jax mesh whose ``"data"`` axis sizes the queue's shard count.
+      max_slots: concurrent decode slots (continuous-batching width).
+      max_seq: per-slot sequence capacity.
+      queue_cap: per-shard ring capacity of the request queue.
+      priorities: > 1 swaps in the priority queue with that many SLA
+        tiers (exclusive with ``deadline``).
+      relaxation: Skeap bounded tier-relaxation knob (tiers only).
+      deadline: True swaps in the Seap queue for EDF admission.
+      n_buckets / deadline_horizon: Seap directory shape (EDF only).
+      pipelined: software-pipelined multi-wave bursts (default).
+      telemetry: enable Wavescope device metrics + flight recorder.
+      flight_k: flight-recorder depth.
+      admission: None, a policy name ("shed" / "defer" / "degrade"), or
+        an :class:`~repro.serve.admission.AdmissionPolicy` — consulted by
+        :meth:`submit` before staging (PR 8).
+      spill_cap: bound of the defer policy's host-side spill buffer.
+      autoscale: a :class:`~repro.serve.HysteresisController` driving
+        :meth:`resize` from sustained pressure (PR 8); its
+        ``max_shards`` defaults to the queue's device-pool size.
+
+    Raises:
+      ValueError: incompatible discipline flags or unknown policy name.
+    """
+
     def __init__(self, model, params, mesh, *, max_slots: int = 4,
                  max_seq: int = 64, queue_cap: int = 256,
                  priorities: int = 1, relaxation: int = 0,
                  deadline: bool = False, n_buckets: int = 8,
                  deadline_horizon: int = 64, pipelined: bool = True,
-                 telemetry: bool = False, flight_k: int = 16):
+                 telemetry: bool = False, flight_k: int = 16,
+                 admission=None, spill_cap: int = 64,
+                 autoscale=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -162,6 +228,18 @@ class ServeEngine:
                       "queue_waits_by_prio": {p: [] for
                                               p in range(priorities)},
                       "deadline_lateness": []}
+        # ---- backpressure control plane (PR 8) ----
+        self.admission = resolve_policy(admission)
+        self.spill_cap = int(spill_cap)
+        self._spill: deque = deque()   # deferred Requests, oldest first
+        self.autoscale = autoscale
+        if autoscale is not None and autoscale.cfg.max_shards is None:
+            autoscale.cfg.max_shards = self.queue.pool_size
+        self._overloaded = False       # shed/defer seen since last tick
+        self._in_autoscale = False     # resize() call is the controller's
+        self.admission_stats = {"offered": 0, "admitted": 0, "shed": 0,
+                                "deferred": 0, "degraded": 0,
+                                "spill_peak": 0, "decide_us": []}
 
     # ---------------------------------------------------------- frontend ---
     def submit(self, reqs: List[Request], prio: Optional[int] = None,
@@ -180,6 +258,17 @@ class ServeEngine:
         now) or each request's ``.deadline`` field (an absolute engine
         step) sets the EDF key — requests with earlier deadlines are
         admitted first, bucket-granular.
+
+        With an admission policy installed (``admission=``), the batch is
+        first decided against the queue's live pressure (PR 8): what fits
+        is staged, the defer policy spills the rest host-side, and
+        anything rejected raises — AFTER the fitting part was staged.
+
+        Raises:
+          ValueError: bad tier / missing deadline.
+          AdmissionRejected: the policy rejected part of the batch (or
+            the spill buffer was full); ``err.shed`` holds the untouched,
+            resubmittable requests.
         """
         with span("serve:submit", cat="serve", n=len(reqs),
                   step=self.step_no):
@@ -199,9 +288,139 @@ class ServeEngine:
                 if r.deadline < 0:
                     raise ValueError(f"request {r.rid} needs a deadline "
                                      "(engine runs EDF admission)")
-            self.requests[r.rid] = r
-            r.enqueue_step = self.step_no
+        if self.admission is None:
+            for r in reqs:
+                self._accept(r, stage=True)
+            return
+        t0 = time.perf_counter()
+        sig = self._pressure_signal()
+        dec = self.admission.decide(list(reqs), sig)
+        st = self.admission_stats
+        st["decide_us"].append((time.perf_counter() - t0) * 1e6)
+        st["offered"] += len(reqs)
+        st["admitted"] += len(dec.admit)
+        st["deferred"] += len(dec.defer)
+        st["degraded"] += dec.degraded
+        for r in dec.admit:
+            self._accept(r, stage=True)
+        for r in dec.defer:
+            self._accept(r, stage=False)
+            self._spill.append(r)
+        st["spill_peak"] = max(st["spill_peak"], len(self._spill))
+        if dec.shed or dec.defer or dec.degraded:
+            self._overloaded = True
+            self.queue.recorder.record({
+                "event": "admission", "step": self.step_no,
+                "policy": self.admission.name, "shed": len(dec.shed),
+                "deferred": len(dec.defer), "degraded": dec.degraded,
+                "occ": list(sig.occupancy)})
+        if dec.shed:
+            st["shed"] += len(dec.shed)
+            backlog = len(dec.shed) + len(self._spill)
+            raise AdmissionRejected(
+                self.admission.name,
+                "spill-overflow" if dec.spill_overflow else "shed",
+                dec.shed, admitted=len(dec.admit),
+                deferred=len(dec.defer), degraded=dec.degraded,
+                pressure=sig.snapshot(),
+                retry_after=-(-backlog // max(1, self.max_slots)))
+
+    def _accept(self, r: Request, *, stage: bool):
+        """Register an admitted request; stage it for the next flush (or
+        leave it to the spill buffer when ``stage`` is False)."""
+        self.requests[r.rid] = r
+        r.enqueue_step = self.step_no
+        if stage:
             self._staged.append(r.rid)
+
+    # ------------------------------------------------------- backpressure ---
+    def _pressure_signal(self) -> PressureSignal:
+        """Snapshot the queue + host pressure for an admission decision.
+
+        Occupancy and the Seap directory come from the elastic wrapper's
+        pre-wave pressure API — replicated host reads, no collective and
+        no wave dispatch; staged/spill counts are pure host bookkeeping."""
+        q = self.queue
+        occ = q.occupancy()
+        staged = [0] * len(occ)
+        window_order = None
+        window_lo = None
+        if self.deadline:
+            entries = q.directory()       # (lo, bucket) in key order
+            los = [lo for lo, _ in entries]
+            ids = [b for _, b in entries]
+            window_order = ids
+            window_lo = {b: lo for lo, b in entries}
+
+            def window_of(r, _los=los, _ids=ids):
+                return _ids[max(0, bisect.bisect_right(_los,
+                                                       r.deadline) - 1)]
+        elif self.priorities > 1:
+            def window_of(r):
+                return r.prio
+        else:
+            def window_of(r):
+                return 0
+        for rid in self._staged:
+            staged[window_of(self.requests[rid])] += 1
+        late = self.stats["deadline_lateness"][-128:]
+        p99 = (float(np.percentile(np.asarray(late, np.float64), 99))
+               if late else 0.0)
+        return PressureSignal(
+            capacity=q.window_capacity(), occupancy=occ, staged=staged,
+            spill=len(self._spill), spill_cap=self.spill_cap,
+            step=self.step_no,
+            mode=("edf" if self.deadline
+                  else "tiers" if self.priorities > 1 else "fifo"),
+            lateness_p99=p99, drain_per_step=self.max_slots,
+            window_of=window_of, window_order=window_order,
+            window_lo=window_lo)
+
+    def _drain_spill(self):
+        """Re-offer deferred requests ahead of new arrivals, as far as the
+        current headroom allows (oldest first; the rest keep waiting)."""
+        if not self._spill:
+            return
+        sig = self._pressure_signal()
+        keep: deque = deque()
+        front: List[int] = []
+        while self._spill:
+            r = self._spill.popleft()
+            w = sig.window_of(r)
+            if sig.headroom(w) > 0:
+                sig.take(w)
+                front.append(r.rid)
+            else:
+                keep.append(r)
+        self._spill = keep
+        self._staged = front + self._staged
+
+    def _autoscale_tick(self):
+        """One controller observation; executes the resize it decides.
+
+        Utilization feeds the hottest window's occupancy PLUS everything
+        still host-side (staged + spilled), so load a policy absorbed
+        before the device saw it still registers as pressure."""
+        q = self.queue
+        cap = q.window_capacity()
+        occ = q.occupancy()
+        backlog = max(occ, default=0) + len(self._staged) + len(self._spill)
+        util = backlog / cap if cap else 1.0
+        target = self.autoscale.observe(util, q.n_shards,
+                                        overloaded=self._overloaded)
+        self._overloaded = False
+        if target is None or target == q.n_shards:
+            return
+        with span("serve:autoscale", cat="serve", step=self.step_no,
+                  target=target):
+            self._in_autoscale = True
+            try:
+                self.resize(target)
+            finally:
+                self._in_autoscale = False
+        self.autoscale.notify_resize(target)
+        q.recorder.record({"event": "autoscale", "step": self.step_no,
+                           "n_shards": target, "occ": occ})
 
     def _queue_wave(self, enq_rids: List[int], n_deq: int) -> List[int]:
         """Run enqueues + dequeues as chunked fused waves; returns granted
@@ -244,7 +463,9 @@ class ServeEngine:
         return got
 
     def _flush_and_refill(self):
-        """ONE fused queue dispatch: staged enqueues + free-slot dequeues."""
+        """ONE fused queue dispatch: staged enqueues + free-slot dequeues.
+        Deferred (spilled) requests drain first, ahead of new arrivals."""
+        self._drain_spill()
         free = [i for i, s in enumerate(self.slots) if s is None]
         enq_rids, self._staged = self._staged, []
         with span("serve:refill", cat="serve", step=self.step_no,
@@ -327,7 +548,12 @@ class ServeEngine:
                 n_shards_from=self.queue.n_shards, n_shards_to=n_shards,
                 host_qsize=self._host_qsize, step=self.step_no,
                 trajectory=self.queue.trajectory())
-        return self.queue.resize(n_shards)
+        stats = self.queue.resize(n_shards)
+        if self.autoscale is not None and not self._in_autoscale:
+            # a resize the controller did NOT decide (operator or fault
+            # layer): reset its counters so it re-learns the new shape
+            self.autoscale.notify_resize(n_shards, external=True)
+        return stats
 
     # ------------------------------------------------------ observability ---
     def metrics(self) -> dict:
@@ -342,7 +568,7 @@ class ServeEngine:
         summaries under ``"waves"`` — no extra collectives, the drain is a
         burst-boundary host read."""
         q = self.queue
-        occ = [int(x) for x in q._occupancies()]
+        occ = q.occupancy()
         snap = {
             "step": self.step_no,
             "served": self.stats["served"],
@@ -353,12 +579,27 @@ class ServeEngine:
                 "kind": q._kind,
                 "n_shards": q.n_shards,
                 "depth": self._host_qsize,
-                "window_capacity": q._wave_capacity(),
+                "window_capacity": q.window_capacity(),
                 "occupancy": occ,
-                "headroom": q._wave_capacity() - max(occ, default=0),
+                "headroom": q.window_capacity() - max(occ, default=0),
                 "migrations": len(q.migrations),
             },
         }
+        if self.admission is not None:
+            st = self.admission_stats
+            ac = {"policy": self.admission.name,
+                  "offered": st["offered"], "admitted": st["admitted"],
+                  "shed": st["shed"], "deferred": st["deferred"],
+                  "degraded": st["degraded"],
+                  "spill": len(self._spill), "spill_cap": self.spill_cap,
+                  "spill_peak": st["spill_peak"]}
+            if st["decide_us"]:
+                d = np.asarray(st["decide_us"], np.float64)
+                ac.update(decide_us_mean=float(d.mean()),
+                          decide_us_p99=float(np.percentile(d, 99)))
+            snap["admission_control"] = ac
+        if self.autoscale is not None:
+            snap["autoscale"] = self.autoscale.snapshot()
         waits = self.stats["queue_waits"]
         adm = {"n": len(waits)}
         if waits:
@@ -378,9 +619,13 @@ class ServeEngine:
 
     # ------------------------------------------------------------ decode ---
     def step(self):
-        """One engine step: flush+refill in one fused wave, advance slots."""
+        """One engine step: flush+refill in one fused wave, advance slots.
+        With ``autoscale=`` set, also runs one controller tick (which may
+        execute a resize migration between the wave and the decode)."""
         self.step_no += 1
         self._flush_and_refill()
+        if self.autoscale is not None:
+            self._autoscale_tick()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
@@ -416,6 +661,7 @@ class ServeEngine:
         for _ in range(max_steps):
             self.step()
             if (all(r.done for r in self.requests.values())
-                    and not self._staged and self._host_qsize == 0):
+                    and not self._staged and not self._spill
+                    and self._host_qsize == 0):
                 return True
         return False

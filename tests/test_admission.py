@@ -1,0 +1,310 @@
+"""Admission control plane (PR 8): policies, pressure signal, controller.
+
+Host-level tests drive the policies against hand-built PressureSignals
+(no devices needed); the integration block runs every policy against a
+real EDF (deadline=True) ServeEngine, pinning the tentpole guarantee:
+with a policy installed, overload surfaces as structured, retryable
+AdmissionRejected at the submit edge — never QueueOverflowError from
+the wave.
+"""
+import pytest
+
+import jax
+
+from repro.serve.admission import (AdmissionPolicy, DeferPolicy,
+                                   DegradePolicy, PressureSignal,
+                                   ShedPolicy, resolve_policy)
+from repro.serve.controller import ControllerConfig, HysteresisController
+
+
+class R:
+    """Light Request stand-in: policies only read prio/deadline/rid."""
+
+    def __init__(self, rid, prio=0, deadline=-1):
+        self.rid, self.prio, self.deadline = rid, prio, deadline
+
+    def __repr__(self):
+        return f"R({self.rid})"
+
+
+def fifo_sig(cap=8, occ=0, staged=0, spill=0, spill_cap=4, step=0):
+    return PressureSignal(capacity=cap, occupancy=[occ], staged=[staged],
+                          spill=spill, spill_cap=spill_cap, step=step,
+                          mode="fifo", lateness_p99=0.0, drain_per_step=4,
+                          window_of=lambda r: 0)
+
+
+def tier_sig(cap, occ, **kw):
+    return PressureSignal(capacity=cap, occupancy=list(occ),
+                          staged=[0] * len(occ), spill=kw.get("spill", 0),
+                          spill_cap=kw.get("spill_cap", 4), step=0,
+                          mode="tiers", lateness_p99=0.0, drain_per_step=4,
+                          window_of=lambda r: r.prio)
+
+
+def edf_sig(cap, occ, window_order, window_lo, *, step=0, lateness=0.0):
+    los = sorted((lo, w) for w, lo in window_lo.items())
+
+    def window_of(r):
+        best = los[0][1]
+        for lo, w in los:
+            if r.deadline >= lo:
+                best = w
+        return best
+
+    return PressureSignal(capacity=cap, occupancy=list(occ),
+                          staged=[0] * len(occ), spill=0, spill_cap=4,
+                          step=step, mode="edf", lateness_p99=lateness,
+                          drain_per_step=4, window_of=window_of,
+                          window_order=list(window_order),
+                          window_lo=dict(window_lo))
+
+
+# --------------------------------------------------------- policy core ----
+
+def test_exactly_at_capacity_admits_all():
+    """A batch that exactly fills live headroom is admitted whole — the
+    boundary where one-off errors would either lose a slot or overflow."""
+    sig = fifo_sig(cap=8, occ=3, staged=1)           # headroom = 4
+    reqs = [R(i) for i in range(4)]
+    dec = ShedPolicy().decide(reqs, sig)
+    assert [r.rid for r in dec.admit] == [0, 1, 2, 3]
+    assert dec.shed == [] and dec.defer == []
+    assert sig.headroom(0) == 0                      # every slot reserved
+
+
+def test_capacity_plus_one_sheds_latest_arrival_fifo():
+    sig = fifo_sig(cap=8, occ=4)                     # headroom = 4
+    reqs = [R(i) for i in range(5)]
+    dec = ShedPolicy().decide(reqs, sig)
+    assert [r.rid for r in dec.admit] == [0, 1, 2, 3]
+    assert [r.rid for r in dec.shed] == [4]          # newest is the victim
+
+
+def test_contended_tier_sheds_its_own_latest_not_other_tiers():
+    """Victim selection is per-window: a full low tier sheds ITS latest
+    arrival; the high tier with headroom is untouched."""
+    sig = tier_sig(cap=2, occ=[0, 1])                # t0 room 2, t1 room 1
+    reqs = [R(0, prio=0), R(1, prio=1), R(2, prio=0), R(3, prio=1)]
+    dec = ShedPolicy().decide(reqs, sig)
+    assert [r.rid for r in dec.admit] == [0, 1, 2]
+    assert [r.rid for r in dec.shed] == [3]          # t1's later arrival
+
+
+def test_edf_doomed_shed_before_meetable():
+    """Within a contended bucket a deadline that is already unmeetable
+    (behind now + lateness p99) sheds before a later-but-meetable one:
+    serving it would spend capacity on a guaranteed miss."""
+    sig = edf_sig(cap=1, occ=[0], window_order=[0], window_lo={0: 0},
+                  step=10, lateness=2.0)
+    doomed, meetable = R(0, deadline=11), R(1, deadline=20)
+    dec = ShedPolicy().decide([doomed, meetable], sig)
+    assert dec.admit == [meetable]
+    assert dec.shed == [doomed]
+
+
+def test_defer_overflow_is_structured_not_silent():
+    """When the spill buffer cannot hold the overflow either, the excess
+    is shed and COUNTED as spill_overflow — the engine surfaces it as
+    AdmissionRejected(kind="spill-overflow"), never a silent drop."""
+    sig = fifo_sig(cap=4, occ=4, spill=1, spill_cap=2)   # spill room = 1
+    reqs = [R(i) for i in range(3)]
+    dec = DeferPolicy().decide(reqs, sig)
+    assert dec.admit == []
+    assert [r.rid for r in dec.defer] == [0]
+    assert [r.rid for r in dec.shed] == [1, 2]
+    assert dec.spill_overflow == 2
+
+
+def test_degrade_moves_tier_down_and_rewrites_prio():
+    sig = tier_sig(cap=2, occ=[2, 0])                # t0 full, t1 free
+    r = R(7, prio=0)
+    dec = DegradePolicy().decide([r], sig)
+    assert dec.admit == [r] and dec.degraded == 1
+    assert r.prio == 1                               # visibly downgraded
+    assert sig.headroom(1) == 1                      # slot reserved in t1
+
+
+def test_degrade_edf_extends_deadline_along_key_order():
+    """Seap bucket ids are NOT key-ordered; degrade must walk the
+    directory's key order (window_order) and extend the deadline to the
+    next bucket's lower bound — the smallest extension that moves it."""
+    sig = edf_sig(cap=1, occ=[0, 0, 0], window_order=[2, 0, 1],
+                  window_lo={2: 0, 0: 64, 1: 128})
+    r = R(9, deadline=5)                             # lands in bucket 2
+    dec = DegradePolicy().decide([R(8, deadline=3), r], sig)
+    assert dec.degraded == 1 and r in dec.admit      # R(8) fit normally
+    assert r.deadline == 64                          # next bucket's lo
+    assert sig.headroom(0) == 0                      # slot reserved there
+
+
+def test_degrade_falls_back_when_everything_full():
+    sig = tier_sig(cap=1, occ=[1, 1])
+    r = R(5, prio=0)
+    shed_dec = DegradePolicy(fallback="shed").decide([r], sig)
+    assert shed_dec.shed == [r] and shed_dec.degraded == 0
+    sig2 = tier_sig(cap=1, occ=[1, 1])
+    defer_dec = DegradePolicy(fallback="defer").decide([r], sig2)
+    assert defer_dec.defer == [r]
+
+
+def test_admit_order_is_arrival_order_even_after_urgency_sort():
+    sig = tier_sig(cap=4, occ=[0, 0])
+    reqs = [R(0, prio=1), R(1, prio=0), R(2, prio=1), R(3, prio=0)]
+    dec = ShedPolicy().decide(reqs, sig)
+    assert [r.rid for r in dec.admit] == [0, 1, 2, 3]
+
+
+def test_resolve_policy():
+    assert resolve_policy(None) is None
+    assert isinstance(resolve_policy("shed"), ShedPolicy)
+    p = DeferPolicy()
+    assert resolve_policy(p) is p
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        resolve_policy("yolo")
+    with pytest.raises(ValueError, match="takes None"):
+        resolve_policy(42)
+    assert isinstance(AdmissionPolicy(), AdmissionPolicy)
+
+
+# ---------------------------------------------------------- controller ----
+
+def test_controller_flap_guard_on_square_wave():
+    """A square-wave load whose half-period is shorter than the patience
+    window must produce ZERO resizes: the streak counter resets every
+    time the load crosses back over the watermark."""
+    ctl = HysteresisController(high_patience=3, low_patience=3, cooldown=2)
+    for cycle in range(10):                          # 2 high, 2 low, ...
+        for util in (0.9, 0.9, 0.1, 0.1):
+            assert ctl.observe(util, n_shards=4) is None
+    snap = ctl.snapshot()
+    assert snap["grows"] == 0 and snap["shrinks"] == 0
+
+
+def test_controller_grows_then_cooldown_suppresses():
+    ctl = HysteresisController(high_patience=2, cooldown=3, grow_k=1,
+                               max_shards=8)
+    assert ctl.observe(0.9, n_shards=2) is None
+    assert ctl.observe(0.9, n_shards=2) == 3         # patience met -> grow
+    ctl.notify_resize(3)
+    for _ in range(3):                               # cooldown window
+        assert ctl.observe(0.95, n_shards=3) is None
+    assert ctl.snapshot()["suppressed_cooldown"] == 3
+    assert ctl.observe(0.95, n_shards=3) is None     # patience restarts
+    assert ctl.observe(0.95, n_shards=3) == 4
+
+
+def test_controller_shrink_is_lazier_and_clamped():
+    ctl = HysteresisController(high_patience=2, low_patience=4, cooldown=0,
+                               min_shards=2)
+    for _ in range(3):
+        assert ctl.observe(0.05, n_shards=2) is None
+    assert ctl.observe(0.05, n_shards=2) is None     # already at floor
+    ctl2 = HysteresisController(low_patience=2, cooldown=0, min_shards=1)
+    assert ctl2.observe(0.05, n_shards=3) is None
+    assert ctl2.observe(0.05, n_shards=3) == 2
+
+
+def test_controller_overloaded_flag_counts_as_high():
+    """A step that shed/deferred counts as above-watermark even when the
+    post-shed utilization reads low — shedding IS the overload signal."""
+    ctl = HysteresisController(high_patience=2, cooldown=0, max_shards=4)
+    assert ctl.observe(0.1, n_shards=2, overloaded=True) is None
+    assert ctl.observe(0.1, n_shards=2, overloaded=True) == 3
+
+
+def test_controller_external_resize_resets_and_counts():
+    ctl = HysteresisController(high_patience=2, cooldown=4)
+    ctl.observe(0.9, n_shards=4)
+    ctl.notify_resize(3, external=True)              # fault LEAVEd a shard
+    snap = ctl.snapshot()
+    assert snap["external_resizes"] == 1 and snap["grows"] == 0
+    assert ctl.observe(0.9, n_shards=3) is None      # cooldown holds
+
+
+def test_controller_watermark_validation():
+    with pytest.raises(ValueError):
+        HysteresisController(high_watermark=0.2, low_watermark=0.5)
+    with pytest.raises(ValueError):
+        HysteresisController(ControllerConfig(low_watermark=-0.1))
+    with pytest.raises(ValueError):
+        HysteresisController(cooldown=-1)
+
+
+# ------------------------------------------- policies x deadline engine ----
+
+@pytest.fixture(scope="module")
+def edf_parts():
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    cfg = get_config("mamba2_130m").reduced(n_layers=1)
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(0))
+    return model, params, make_host_mesh(n_data=1)
+
+
+def _edf_engine(edf_parts, **kw):
+    from repro.serve import ServeEngine
+    model, params, mesh = edf_parts
+    return ServeEngine(model, params, mesh, max_slots=2, max_seq=16,
+                       queue_cap=4, deadline=True, n_buckets=4,
+                       deadline_horizon=32, **kw)
+
+
+def _burst(n, start_rid=0, deadline=24):
+    from repro.serve import Request
+    return [Request(rid=start_rid + i, prompt=[1, 2], max_new=2,
+                    deadline=deadline) for i in range(n)]
+
+
+def test_edf_engine_shed_rejects_structured_and_retryable(edf_parts):
+    from repro.serve import AdmissionRejected
+    eng = _edf_engine(edf_parts, admission="shed")
+    big = _burst(64)                         # far beyond any bucket window
+    with pytest.raises(AdmissionRejected) as ei:
+        eng.submit(big)
+    err = ei.value
+    assert err.kind == "shed" and err.policy == "shed"
+    assert err.admitted > 0 and len(err.shed) > 0
+    assert err.admitted + len(err.shed) == len(big)
+    assert err.retry_after >= 1
+    # shed requests were never registered: the engine is untouched by them
+    assert all(r.rid not in eng.requests for r in err.shed)
+    assert eng.run_until_drained(max_steps=400)
+    assert eng.stats["served"] == err.admitted
+    # ... and resubmitting the victims later is safe (no double-admission)
+    retry = err.shed[:2]
+    eng.submit(retry, deadline=24)
+    assert eng.run_until_drained(max_steps=400)
+    assert eng.stats["served"] == err.admitted + len(retry)
+
+
+def test_edf_engine_defer_spills_then_drains_lossless(edf_parts):
+    eng = _edf_engine(edf_parts, admission="defer", spill_cap=64)
+    big = _burst(24)
+    eng.submit(big)                          # no raise: overflow spilled
+    assert eng.admission_stats["deferred"] > 0
+    assert eng.run_until_drained(max_steps=400)
+    assert eng.stats["served"] == len(big)   # lossless within spill_cap
+    assert all(r.done for r in big)
+
+
+def test_edf_engine_degrade_extends_deadlines(edf_parts):
+    eng = _edf_engine(edf_parts, admission=DegradePolicy(fallback="defer"))
+    big = _burst(24, deadline=8)             # one hot near-term bucket
+    eng.submit(big)
+    assert eng.admission_stats["degraded"] > 0
+    assert max(r.deadline for r in big) > 8  # visibly extended
+    assert eng.run_until_drained(max_steps=400)
+    assert eng.stats["served"] == len(big)
+
+
+def test_edf_engine_no_policy_still_overflows(edf_parts):
+    """The pre-PR 8 behavior is preserved when admission is off: a burst
+    past the window capacity overflows the wave itself."""
+    from repro.dqueue import QueueOverflowError
+    eng = _edf_engine(edf_parts)
+    eng.submit(_burst(64))
+    with pytest.raises(QueueOverflowError):
+        eng.run_until_drained(max_steps=400)
