@@ -1,0 +1,136 @@
+"""The PR 9 perf regression gate: BENCH_PR9.json vs committed floors.
+
+CI runs the compact-waves benchmark (``benchmarks.micro --pr9 --quick``)
+and then this gate, which compares the fresh numbers against the
+committed ``BENCH_BASELINE.json``:
+
+* **throughput metrics** (waves/sec): fail when a current value drops
+  more than ``tolerance_pct`` (default 25%) below its baseline value —
+  a compact-wave speed regression breaks the build instead of rotting
+  silently in an artifact nobody reads;
+* **ratio floors** (compact-vs-full speedups): fail when a current
+  ratio falls below its committed floor.  Ratios are machine-portable —
+  they compare two timings taken on the same box in the same process —
+  so their floors are absolute, not tolerance-banded.
+
+The baseline is refreshed from a real run, never hand-edited::
+
+    PYTHONPATH=src python -m benchmarks.micro --pr9 --quick
+    PYTHONPATH=src python -m benchmarks.gate BENCH_PR9.json --update
+
+Absolute waves/sec floors are tied to the machine class that produced
+them (see docs/PERFORMANCE.md); ``--update`` re-records them while
+keeping the ratio floors pinned at the acceptance threshold.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(_REPO_ROOT, "BENCH_BASELINE.json")
+
+# dotted paths into BENCH_PR9.json whose waves/sec values are tracked
+# against the committed baseline (higher is better)
+TRACKED_THROUGHPUT = tuple(
+    f"occupancy.disciplines.{d}.{occ}.{flavor}.waves_per_sec"
+    for d in ("queue", "priority")
+    for occ in ("5%", "25%", "100%")
+    for flavor in ("compact", "full"))
+
+# machine-portable ratio floors: compact must stay >= 1.3x at low
+# occupancy (the PR 9 acceptance bar) and must never cost > 10% at full
+RATIO_FLOORS = {
+    **{f"occupancy.disciplines.{d}.{occ}.speedup_waves_per_sec": 1.3
+       for d in ("queue", "priority") for occ in ("5%", "25%")},
+    **{f"occupancy.disciplines.{d}.100%.speedup_waves_per_sec": 0.9
+       for d in ("queue", "priority")},
+}
+
+
+def _lookup(doc: dict, path: str):
+    cur = doc
+    for part in path.split("."):
+        cur = cur[part]
+    return cur
+
+
+def build_baseline(bench: dict, tolerance_pct: float = 25.0) -> dict:
+    """Record the tracked throughput values of a fresh run as the new
+    baseline, keeping the ratio floors pinned at the acceptance bar."""
+    return {
+        "tolerance_pct": tolerance_pct,
+        "throughput": {p: _lookup(bench, p) for p in TRACKED_THROUGHPUT},
+        "ratio_floors": dict(RATIO_FLOORS),
+    }
+
+
+def check(bench: dict, baseline: dict) -> list:
+    """Return a list of human-readable failures (empty == gate passes)."""
+    failures = []
+    tol = float(baseline.get("tolerance_pct", 25.0)) / 100.0
+    for path, base in baseline.get("throughput", {}).items():
+        try:
+            cur = float(_lookup(bench, path))
+        except KeyError:
+            failures.append(f"{path}: missing from the benchmark output")
+            continue
+        floor = float(base) * (1.0 - tol)
+        if cur < floor:
+            failures.append(
+                f"{path}: {cur:.1f} waves/s is {100 * (1 - cur / base):.1f}%"
+                f" below baseline {float(base):.1f} (floor {floor:.1f})")
+    for path, floor in baseline.get("ratio_floors", {}).items():
+        try:
+            cur = float(_lookup(bench, path))
+        except KeyError:
+            failures.append(f"{path}: missing from the benchmark output")
+            continue
+        if cur < float(floor):
+            failures.append(f"{path}: {cur:.2f}x below the committed "
+                            f"floor {float(floor):.2f}x")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench", nargs="?", default="BENCH_PR9.json",
+                    help="benchmark JSON to gate (default BENCH_PR9.json)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline JSON (BENCH_BASELINE.json)")
+    ap.add_argument("--update", action="store_true",
+                    help="re-record the baseline from this run instead of "
+                         "gating against it")
+    cli = ap.parse_args(argv)
+    bench_path = cli.bench if os.path.isabs(cli.bench) \
+        else os.path.join(_REPO_ROOT, cli.bench)
+    with open(bench_path) as f:
+        bench = json.load(f)
+    if cli.update:
+        base = build_baseline(bench)
+        with open(cli.baseline, "w") as f:
+            json.dump(base, f, indent=2)
+            f.write("\n")
+        print(f"gate: baseline refreshed -> {cli.baseline} "
+              f"({len(base['throughput'])} throughput metrics, "
+              f"{len(base['ratio_floors'])} ratio floors)")
+        return 0
+    with open(cli.baseline) as f:
+        baseline = json.load(f)
+    failures = check(bench, baseline)
+    n = len(baseline.get("throughput", {})) + len(
+        baseline.get("ratio_floors", {}))
+    if failures:
+        print(f"gate: FAIL — {len(failures)}/{n} tracked metrics regressed")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print(f"gate: PASS — {n} tracked metrics within "
+          f"{baseline.get('tolerance_pct', 25)}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

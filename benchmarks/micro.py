@@ -76,6 +76,22 @@ admission-decision latency per flavor.  Results go to
 
     PYTHONPATH=src python -m benchmarks.micro --pr8 [path] [--quick]
 
+PR 9 adds the compact-waves benchmark: the SAME logical op stream at 5% /
+25% / 100% of the full wave envelope, staged (a) compact — each wave at
+the smallest bucket-ladder width {L/4, L/2, L} that fits its live ops —
+vs (b) padded to the full ``n_shards * L`` envelope, for the FIFO and
+priority disciplines.  Bit-identical per-op outputs and final device
+state are ASSERTED inside the emitter (compaction must not change one
+answer), as is the headline >= 1.3x waves/sec at <= 25% occupancy.  A
+second section times the segscan dispatch modes: the jnp core scan (the
+compiled-XLA oracle / CPU hot path) vs the pallas kernel in interpret
+mode, plus compiled pallas on TPU/GPU.  Results go to
+``BENCH_PR9.json``, and ``benchmarks.gate`` compares them against the
+committed ``BENCH_BASELINE.json`` floors (CI fails a >25% regression):
+
+    PYTHONPATH=src python -m benchmarks.micro --pr9 [path] [--quick]
+    PYTHONPATH=src python -m benchmarks.gate BENCH_PR9.json
+
 ``--all [--quick]`` runs EVERY emitter above (the CI bench-smoke entry
 point: one invocation emits every BENCH_PR*.json, and any emitter crash
 fails the run — future PRs add an emitter here instead of editing the
@@ -1149,6 +1165,183 @@ def emit_bench_pr8(path: str = "BENCH_PR8.json", n_dev: int = 8,
     return data
 
 
+def _measure_compact_occupancy(n_dev: int, K: int, ops_per_shard: int = 256,
+                               iters: int = 12, quick: bool = False) -> dict:
+    """Occupancy-adaptive envelopes (PR 9): the SAME logical op stream
+    driven (a) compact — every wave staged at the smallest bucket-ladder
+    width that fits its live ops — vs (b) full — every wave padded to the
+    full ``n_shards * L`` envelope.  At 5% / 25% occupancy the compact
+    envelope is 4x narrower (ladder {L/4, L/2, L}); at 100% the bucket
+    choice degenerates to the full width and the ratio must be ~1.  Both
+    drivers advance twin queue instances through identical logical ops,
+    so the emitter can assert bit-identical per-op outputs AND final
+    device state (modulo the write-only padding scratch row) — the
+    speedup is not allowed to change a single answer."""
+    from repro.dqueue import ElasticDevicePriorityQueue, ElasticDeviceQueue
+    if quick:
+        K, iters = min(K, 8), 3
+    L = ops_per_shard
+    n_full = n_dev * L
+    cap = max(512, 2 * K * L // n_dev)
+    occupancies = [("5%", max(1, n_full * 5 // 100)),
+                   ("25%", n_full // 4),
+                   ("100%", n_full)]
+    cases = {
+        "queue": (lambda: ElasticDeviceQueue(
+            n_dev, cap=cap, payload_width=4, ops_per_shard=L), False),
+        "priority": (lambda: ElasticDevicePriorityQueue(
+            n_dev, n_prios=2, cap=cap, payload_width=4, ops_per_shard=L),
+            True),
+    }
+    out = {"n_dev": n_dev, "ops_per_shard": L, "full_ops_per_wave": n_full,
+           "K": K, "bucket_ladder": None, "disciplines": {}}
+    for name, (make, has_prio) in cases.items():
+        rows = {}
+        for label, n_ops in occupancies:
+            eq_c, eq_f = make(), make()
+            out["bucket_ladder"] = list(eq_c.bucket_widths())
+            rng = np.random.default_rng(abs(hash((name, label))) % 9973)
+            # exactly balanced enq/deq per wave keeps the depth bounded
+            # across every warmup+timing pass without touching the cap
+            enq = np.zeros((K, n_ops), bool)
+            for k in range(K):
+                enq[k, rng.permutation(n_ops)[:n_ops // 2 + 1]] = True
+            pri = rng.integers(0, 2, (K, n_ops)).astype(np.int32)
+            pay = rng.integers(0, 1 << 20, (K, n_ops, 4)).astype(np.int32)
+
+            def drive(eq, compact, n_ops=n_ops, enq=enq, pri=pri, pay=pay,
+                      has_prio=has_prio):
+                outs = []
+                for k in range(K):
+                    w = eq.pick_width(n_ops) if compact else L
+                    n = eq.n_shards * w
+                    E = np.zeros(n, bool)
+                    E[:n_ops] = enq[k]
+                    V = np.zeros(n, bool)
+                    V[:n_ops] = True
+                    PW = np.zeros((n, 4), np.int32)
+                    PW[:n_ops] = pay[k]
+                    if has_prio:
+                        PR = np.zeros(n, np.int32)
+                        PR[:n_ops] = pri[k]
+                        res = eq.step(E, V, PR, PW)[:5]
+                    else:
+                        res = eq.step(E, V, PW)[:4]
+                    outs.append([np.asarray(x)[:n_ops] for x in res])
+                return outs
+
+            # compile pass: hits every envelope width each driver uses,
+            # advancing BOTH states through the same logical ops
+            drive(eq_c, True), drive(eq_f, False)
+            t_c = t_f = float("inf")
+            outs_c = outs_f = None
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                outs_c = drive(eq_c, True)
+                t_c = min(t_c, time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                outs_f = drive(eq_f, False)
+                t_f = min(t_f, time.perf_counter() - t0)
+            # ---- bit-identity, asserted so the artifact can't lie ----
+            for k, (oc, of) in enumerate(zip(outs_c, outs_f)):
+                for a, b in zip(oc, of):
+                    assert np.array_equal(a, b), \
+                        (name, label, k, "per-op outputs differ")
+            dc, df = eq_c._state_dict(), eq_f._state_dict()
+            assert set(dc) == set(df)
+            for key in sorted(dc):
+                a, b = np.asarray(dc[key]), np.asarray(df[key])
+                if key in type(eq_c)._sharded_keys:
+                    # the trailing slot row is write-only padding scratch;
+                    # its garbage legitimately differs across widths
+                    a, b = a[:, :-1], b[:, :-1]
+                assert np.array_equal(a, b), \
+                    (name, label, key, "final device state differs")
+            rows[label] = {
+                "n_ops_per_wave": n_ops,
+                "bucket_width_compact": eq_c.pick_width(n_ops),
+                "envelope_compact": n_dev * eq_c.pick_width(n_ops),
+                "envelope_full": n_full,
+                "compact": {"waves_per_sec": K / t_c,
+                            "us_per_wave": t_c / K * 1e6},
+                "full": {"waves_per_sec": K / t_f,
+                         "us_per_wave": t_f / K * 1e6},
+                "speedup_waves_per_sec": t_f / t_c,
+                "bit_identical": True,
+            }
+        out["disciplines"][name] = rows
+    # headline acceptance: >= 1.3x waves/sec at <= 25% occupancy
+    for name, rows in out["disciplines"].items():
+        for label in ("5%", "25%"):
+            sp = rows[label]["speedup_waves_per_sec"]
+            assert sp >= 1.3, \
+                (name, label, f"compact speedup {sp:.2f}x < 1.3x")
+    return out
+
+
+def _measure_segscan_modes(n: int = 1 << 15, iters: int = 10) -> dict:
+    """Single-shard segscan dispatch: the jnp core scan (the compiled-XLA
+    oracle and the CPU hot path) vs the pallas kernel in interpret mode
+    (the CPU CI correctness path) vs compiled pallas (TPU/GPU only — on
+    the CPU mesh it is reported as null with a note, because
+    ``use_fused_dispatch()`` keeps the wave off the kernel there)."""
+    from repro.core.scan_queue import QueueState, queue_scan
+    from repro.kernels.backend import default_interpret, use_fused_dispatch
+    from repro.kernels.segscan import queue_scan_pallas
+
+    rng = np.random.default_rng(5)
+    e = jnp.array(rng.random(n) < 0.5)
+    v = jnp.ones((n,), bool)
+    f0, l0 = jnp.int32(0), jnp.int32(-1)
+    core = jax.jit(lambda a, b: queue_scan(a, QueueState.empty(), valid=b))
+    row = {"n": n, "backend": jax.default_backend(),
+           "default_interpret": bool(default_interpret()),
+           "use_fused_dispatch": bool(use_fused_dispatch())}
+    row["core_jnp_us"] = _time_us(core, e, v, iters=iters)
+    row["pallas_interpret_us"] = _time_us(
+        lambda a, b: queue_scan_pallas(a, b, f0, l0, interpret=True), e, v,
+        iters=max(3, iters // 3), warmup=1)
+    if jax.default_backend() != "cpu":
+        row["pallas_compiled_us"] = _time_us(
+            lambda a, b: queue_scan_pallas(a, b, f0, l0, interpret=False),
+            e, v, iters=iters)
+    else:
+        row["pallas_compiled_us"] = None
+        row["note"] = ("compiled pallas needs a TPU/GPU backend; on the "
+                       "CPU mesh the wave hot path keeps the jnp core "
+                       "scans and tests drive the kernels in interpret "
+                       "mode")
+    # the interpret kernel must agree with the oracle on this input
+    ref = core(e, v)
+    pos, matched, *_ = queue_scan_pallas(e, v, f0, l0, interpret=True)
+    assert np.array_equal(np.asarray(pos), np.asarray(ref[0])), \
+        "pallas interpret pos diverged from the core oracle"
+    return row
+
+
+def emit_bench_pr9(path: str = "BENCH_PR9.json", n_dev: int = 8,
+                   K: int = 32, quick: bool = False) -> dict:
+    """Measure occupancy-adaptive compact waves vs the full envelope (with
+    bit-identity asserted) plus segscan dispatch-mode timings, and write
+    JSON (re-execs on a forced ``n_dev``-device CPU mesh)."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    child = _reexec_on_mesh(
+        "PR9", path, n_dev,
+        ["--pr9", path, "--n-dev", str(n_dev), "--waves", str(K)]
+        + (["--quick"] if quick else []))
+    if child is not None:
+        return child
+    data = {
+        "occupancy": _measure_compact_occupancy(n_dev=n_dev, K=K,
+                                                quick=quick),
+        "segscan": _measure_segscan_modes(iters=3 if quick else 10),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
 # PR numbers that deliberately ship NO benchmark emitter.  emit_all
 # prints one explicit skip line per entry so a missing BENCH_PRn.json in
 # the CI artifact is documented output, not a silent gap (PR 8 satellite
@@ -1178,6 +1371,8 @@ def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
                 ("BENCH_PR7.json", lambda p: emit_bench_pr7(
                      p, n_dev=n_dev, quick=quick)),
                 ("BENCH_PR8.json", lambda p: emit_bench_pr8(
+                     p, n_dev=n_dev, quick=quick)),
+                ("BENCH_PR9.json", lambda p: emit_bench_pr9(
                      p, n_dev=n_dev, quick=quick))]
     for path, why in sorted(_NO_BENCH.items()):
         print(f"bench: skipping {path} ({why})")
@@ -1253,6 +1448,9 @@ if __name__ == "__main__":
     ap.add_argument("--pr8", nargs="?", const="BENCH_PR8.json", default=None,
                     help="measure admission backpressure vs the "
                          "overflowing baseline and write BENCH_PR8.json")
+    ap.add_argument("--pr9", nargs="?", const="BENCH_PR9.json", default=None,
+                    help="measure occupancy-adaptive compact waves vs the "
+                         "full envelope and write BENCH_PR9.json")
     ap.add_argument("--all", action="store_true",
                     help="run every BENCH_PR*.json emitter (CI bench smoke)")
     ap.add_argument("--quick", action="store_true",
@@ -1287,6 +1485,10 @@ if __name__ == "__main__":
         print(json.dumps(out, indent=2))
     elif cli.pr8:
         out = emit_bench_pr8(cli.pr8, n_dev=cli.n_dev, quick=cli.quick)
+        print(json.dumps(out, indent=2))
+    elif cli.pr9:
+        out = emit_bench_pr9(cli.pr9, n_dev=cli.n_dev, K=cli.waves,
+                             quick=cli.quick)
         print(json.dumps(out, indent=2))
     else:
         for row in run_all():

@@ -17,6 +17,11 @@ adding its row.  The numbers encode the paper's wave contract:
   lower the metrics-on entry points against the SAME budgets as their
   metrics-off twins — a telemetry implementation that added a collective
   (or broke the ``(state, metrics)`` donation) fails wavecheck statically;
+* occupancy buckets (PR 9) are budget-NEUTRAL too: the ``[compact]``
+  variants lower the same step / pipelined-burst entry points at every
+  narrower envelope width of the bucket ladder against IDENTICAL budgets
+  — compaction shrinks the all_to_all payloads, never the collective
+  structure;
 * the elastic migration wave is exactly 1 all_to_all + <= 2 all_reduce
   (lost-element pmax + moved-count psum);
 * the legacy (pre-fusion) queue step is pinned at exactly 5 all_to_all —
@@ -95,14 +100,15 @@ def build_programs(mesh, *, L: int = 2, K: int = 3, cap: int = 16,
     zb = lambda *s: jnp.zeros(s, bool)
     zi = lambda *s: jnp.zeros(s, jnp.int32)
 
-    def wave_args(q, kind: str, burst: bool):
+    def wave_args(q, kind: str, burst: bool, width: int = L):
         lead = (K,) if burst else ()
-        args: List[Any] = [q.init_state(), zb(*lead, n), zb(*lead, n)]
+        nw = p * width
+        args: List[Any] = [q.init_state(), zb(*lead, nw), zb(*lead, nw)]
         if kind == "priority":
-            args.append(zi(*lead, n))
+            args.append(zi(*lead, nw))
         if kind == "seap":
-            args.append(zi(*lead, n))
-        args.append(zi(*lead, n, W))
+            args.append(zi(*lead, nw))
+        args.append(zi(*lead, nw, W))
         return tuple(args)
 
     kinds = [
@@ -152,6 +158,24 @@ def build_programs(mesh, *, L: int = 2, K: int = 3, cap: int = 16,
                 _wave_budget(kind, p, pipelined=pipelined, burst=burst),
                 donated_leaves=leaves + 2,
                 meta={"discipline": kind, "telemetry": True}))
+        # occupancy-bucket twins (PR 9): the SAME entry points lowered at
+        # every narrower envelope width of the bucket ladder, pinned
+        # against IDENTICAL budgets — compaction must shrink the wire
+        # payloads, never change the collective structure
+        from ..dqueue.wave_engine import bucket_ladder
+        for w in bucket_ladder(L)[:-1]:
+            specs.append(ProgramSpec(
+                f"{kind}.step[compact:w{w}]", seq._step,
+                wave_args(seq, kind, burst=False, width=w),
+                _wave_budget(kind, p, pipelined=False, burst=False),
+                donated_leaves=leaves,
+                meta={"discipline": kind, "compact": True, "width": w}))
+            specs.append(ProgramSpec(
+                f"{kind}.run_waves[pipe,compact:w{w}]", pipe._run_waves,
+                wave_args(pipe, kind, burst=True, width=w),
+                _wave_budget(kind, p, pipelined=True, burst=True),
+                donated_leaves=leaves,
+                meta={"discipline": kind, "compact": True, "width": w}))
 
     legacy = DeviceQueue(mesh, "data", cap=cap, payload_width=W,
                          ops_per_shard=L, fused=False)

@@ -4,8 +4,9 @@
 once per *real* backend compile and stays silent on cache hits — exactly
 the observable we need to assert the elastic layer's mesh / inner-engine /
 migration caches (PR 2) prevent recompilation when membership bounces
-between shard counts, and that the burst-length jit cache holds when K
-bounces.
+between shard counts, that the burst-length jit cache holds when K
+bounces, and that bouncing across the occupancy-bucket envelope ladder
+(PR 9) re-uses the per-width executables instead of recompiling.
 
 The scenario runs every bounce twice: the first pass is allowed (and
 expected) to compile; the second identical pass must compile *nothing*.
@@ -59,14 +60,17 @@ class CompilationTracker:
 
 
 def _bounce(eq, K_a: int, K_b: int, grow_by: int) -> None:
-    """One full membership + burst-length bounce on an elastic queue:
-    step, burst K_a, burst K_b, grow, step, shrink back."""
+    """One full membership + burst-length + bucket-width bounce on an
+    elastic queue: step, burst K_a, burst K_b, the occupancy-bucket
+    ladder, grow, step, shrink back.  The PR 9 envelope buckets are pure
+    jit shape keys, so bouncing across widths must hit the same
+    per-shape executable cache the K bounce exercises."""
     import jax.numpy as jnp
 
     P0 = eq.n_shards
 
-    def drive_step():
-        n = eq.n_shards * eq.L
+    def drive_step(w=None):
+        n = eq.n_shards * (eq.L if w is None else w)
         eq.step(jnp.zeros(n, bool), jnp.zeros(n, bool),
                 jnp.zeros((n, eq.W), jnp.int32))
 
@@ -75,13 +79,21 @@ def _bounce(eq, K_a: int, K_b: int, grow_by: int) -> None:
         eq.run_waves(jnp.zeros((K, n), bool), jnp.zeros((K, n), bool),
                      jnp.zeros((K, n, eq.W), jnp.int32))
 
+    def drive_ladder():
+        for w in eq.bucket_widths():      # narrow -> full envelope
+            drive_step(w)
+        for w in reversed(eq.bucket_widths()):   # bounce back down
+            drive_step(w)
+
     drive_step()
     drive_waves(K_a)
     drive_waves(K_b)
     drive_waves(K_a)                      # K bounce back: cached jit shape
+    drive_ladder()                        # width bounce: cached jit shapes
     eq.grow(grow_by)
     drive_step()
     drive_waves(K_a)
+    drive_ladder()                        # ladder on the grown membership
     eq.shrink(list(range(P0, P0 + grow_by)))
     drive_step()
 

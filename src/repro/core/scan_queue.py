@@ -222,7 +222,7 @@ def strict_batch_deletemin(deq: jax.Array, avail: jax.Array,
 def priority_queue_scan(is_enq: jax.Array, prio: jax.Array, valid: jax.Array,
                         firsts: jax.Array, lasts: jax.Array, *, n_prios: int,
                         relaxation: int = 0, shard_of: jax.Array | None = None,
-                        n_shards: int | None = None):
+                        n_shards: int | None = None, tier_scan=None):
     """Batch position assignment for the P-tier constant-priority queue
     (Skeap's constant-priority regime, arXiv:1805.03472).
 
@@ -250,6 +250,10 @@ def priority_queue_scan(is_enq: jax.Array, prio: jax.Array, valid: jax.Array,
       relaxation: static int k >= 0; 0 is the strict mode.
       shard_of/n_shards: issuing shard per op and shard count — required
         when relaxation > 0 (the locality rule needs owners).
+      tier_scan: optional fused replacement for the per-tier enqueue
+        loop, ``(enq, tier, firsts, lasts) -> (pos, new_lasts)`` —
+        ``kernels.segscan.make_tier_scan`` provides the pallas sweep
+        (PR 9); None keeps this jnp path, which remains the oracle.
     Returns:
       (tier [n] int32 (-1 unmatched), pos [n] int32 (⊥ = -1), matched [n]
       bool, new_firsts, new_lasts, n_relaxed) — ``n_relaxed`` counts the
@@ -260,15 +264,20 @@ def priority_queue_scan(is_enq: jax.Array, prio: jax.Array, valid: jax.Array,
     deq = (~is_enq) & valid
     tier = jnp.full(is_enq.shape, -1, jnp.int32)
     pos = jnp.full(is_enq.shape, BOTTOM, jnp.int32)
-    new_lasts = []
-    for p in range(P_):
-        mask = enq & (prio == p)
-        pos_p, _, st_p = queue_scan(
-            mask, QueueState(firsts[p], lasts[p]), valid=mask)
-        tier = jnp.where(mask, p, tier)
-        pos = jnp.where(mask, pos_p, pos)
-        new_lasts.append(st_p.last)
-    new_lasts = jnp.stack(new_lasts)
+    if tier_scan is not None:
+        pos_e, new_lasts = tier_scan(enq, prio, firsts, lasts)
+        tier = jnp.where(enq & (pos_e >= 0), prio.astype(jnp.int32), tier)
+        pos = jnp.where(enq, pos_e, pos)
+    else:
+        new_lasts = []
+        for p in range(P_):
+            mask = enq & (prio == p)
+            pos_p, _, st_p = queue_scan(
+                mask, QueueState(firsts[p], lasts[p]), valid=mask)
+            tier = jnp.where(mask, p, tier)
+            pos = jnp.where(mask, pos_p, pos)
+            new_lasts.append(st_p.last)
+        new_lasts = jnp.stack(new_lasts)
     avail = new_lasts - firsts + 1                      # sizes after enqueues
 
     if relaxation == 0:
@@ -332,7 +341,7 @@ def seap_queue_scan(is_enq: jax.Array, key: jax.Array, valid: jax.Array,
                     firsts: jax.Array, lasts: jax.Array, lo: jax.Array,
                     active: jax.Array, key_lo: jax.Array,
                     key_hi: jax.Array, *, n_buckets: int,
-                    split_occupancy: int):
+                    split_occupancy: int, tier_scan=None):
     """Batch position assignment for the arbitrary-key Seap queue
     (arXiv:1805.03472's search structure collapsed to a two-level bucket
     directory; see ``core.seap.SeapOracle`` for the full semantics).
@@ -375,15 +384,22 @@ def seap_queue_scan(is_enq: jax.Array, key: jax.Array, valid: jax.Array,
     bucket_e = seap_bucket_lookup(key, lo, active)
     bucket = jnp.full(is_enq.shape, -1, jnp.int32)
     pos = jnp.full(is_enq.shape, BOTTOM, jnp.int32)
-    new_lasts = []
-    for b in range(B):
-        mask = enq & (bucket_e == b)
-        pos_b, _, st_b = queue_scan(
-            mask, QueueState(firsts[b], lasts[b]), valid=mask)
-        bucket = jnp.where(mask, b, bucket)
-        pos = jnp.where(mask, pos_b, pos)
-        new_lasts.append(st_b.last)
-    new_lasts = jnp.stack(new_lasts)
+    if tier_scan is not None:
+        # fused per-bucket sweep (tier := bucket), same hook as the
+        # priority scan — kernels.segscan.make_tier_scan (PR 9)
+        pos_e, new_lasts = tier_scan(enq, bucket_e, firsts, lasts)
+        bucket = jnp.where(enq & (pos_e >= 0), bucket_e, bucket)
+        pos = jnp.where(enq, pos_e, pos)
+    else:
+        new_lasts = []
+        for b in range(B):
+            mask = enq & (bucket_e == b)
+            pos_b, _, st_b = queue_scan(
+                mask, QueueState(firsts[b], lasts[b]), valid=mask)
+            bucket = jnp.where(mask, b, bucket)
+            pos = jnp.where(mask, pos_b, pos)
+            new_lasts.append(st_b.last)
+        new_lasts = jnp.stack(new_lasts)
     avail = new_lasts - firsts + 1               # sizes after enqueues
 
     # dequeues: batch-DeleteMin over the directory in boundary order

@@ -52,6 +52,7 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from ..core.scan_queue import (QueueState, StackState, sharded_queue_scan,
                                stack_scan)
+from ..kernels.backend import use_fused_dispatch
 from .wave_engine import (TAG_GET, TAG_INACTIVE, TAG_PUT, Discipline,
                           Dispatch, WaveEngine, build_send,
                           post_enqueue_peak_overflow, ring_commit)
@@ -318,7 +319,8 @@ class LifoDiscipline(Discipline):
     TAG_PUSH = TAG_PUT
     TAG_POP = TAG_GET
 
-    def __init__(self, axis: str, n_shards: int, cap: int, W: int, D: int):
+    def __init__(self, axis: str, n_shards: int, cap: int, W: int, D: int,
+                 fused_dispatch: bool | None = None):
         self.axis = axis
         self.n_shards = n_shards
         self.cap = cap
@@ -327,6 +329,11 @@ class LifoDiscipline(Discipline):
         self.junk = cap
         self.n_windows = 1
         self.window_capacity = n_shards * cap * D
+        # route the replicated max-plus scan through the compiled pallas
+        # sweep on TPU/GPU; the jnp stack_scan stays the CPU path AND the
+        # differential oracle (None = backend autodetect, PR 9)
+        self.fused_dispatch = (use_fused_dispatch() if fused_dispatch is None
+                               else bool(fused_dispatch))
         self.state_specs = {"last": P(), "ticket": P(), "vals": P(axis),
                             "ticks": P(axis)}
 
@@ -348,8 +355,15 @@ class LifoDiscipline(Discipline):
         # the replicated max-plus scan (its carries are 3 ints — cheap)
         code = (is_push.astype(jnp.int32) * 2 + valid.astype(jnp.int32))
         g = lax.all_gather(code, self.axis, tiled=True)
-        pos_g, tick_g, matched_g, new_ss = stack_scan(
-            (g & 2) > 0, StackState(carry[0], carry[1]), valid=(g & 1) > 0)
+        if self.fused_dispatch:
+            from ..kernels.segscan import stack_scan_pallas
+            pos_g, tick_g, matched_g, nl, nt = stack_scan_pallas(
+                (g & 2) > 0, (g & 1) > 0, carry[0], carry[1])
+            new_ss = StackState(nl, nt)
+        else:
+            pos_g, tick_g, matched_g, new_ss = stack_scan(
+                (g & 2) > 0, StackState(carry[0], carry[1]),
+                valid=(g & 1) > 0)
         L = is_push.shape[0]
         i0 = lax.axis_index(self.axis) * L
         pos = lax.dynamic_slice_in_dim(pos_g, i0, L)
@@ -450,7 +464,8 @@ class DeviceStack:
     def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
                  payload_width: int = 4, ops_per_shard: int = 64,
                  slot_depth: int = 4, pipelined: bool = True,
-                 metrics: bool = False, metrics_ring: int = 64):
+                 metrics: bool = False, metrics_ring: int = 64,
+                 fused_dispatch: bool | None = None):
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -463,7 +478,7 @@ class DeviceStack:
         self.engine = WaveEngine(
             mesh, axis_name,
             LifoDiscipline(axis_name, self.n_shards, cap, payload_width,
-                           slot_depth),
+                           slot_depth, fused_dispatch=fused_dispatch),
             pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves

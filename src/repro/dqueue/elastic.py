@@ -240,6 +240,39 @@ class _ElasticBase:
             "utilization": (max(occ) / cap) if cap else 1.0,
         }
 
+    # ------------------------------------------------- occupancy buckets ---
+    def bucket_widths(self) -> tuple:
+        """The occupancy-bucket envelope ladder for this queue (PR 9).
+
+        Ascending per-shard wave widths ``{L/4, L/2, L}`` (deduplicated,
+        floored at 1).  Every width is a separately cached wave program —
+        same discipline, same ≤2-all_to_all budget, smaller request/reply
+        columns on the wire.  A host-side constant of ``L``; no device
+        work.
+
+        Returns:
+            Tuple of ints, ascending, ending in ``L``.
+        """
+        from .wave_engine import bucket_ladder
+        return bucket_ladder(self.L)
+
+    def pick_width(self, n_ops: int) -> int:
+        """Smallest ladder width whose global wave fits ``n_ops`` (PR 9).
+
+        The burst driver's envelope choice: the narrowest ``w`` with
+        ``n_shards * w >= n_ops``, falling back to the full ``L`` when
+        even the widest bucket cannot hold the burst in one wave.  Pure
+        host arithmetic on the current membership.
+
+        Args:
+            n_ops: Valid ops staged for the next wave (global count).
+
+        Returns:
+            A width from :meth:`bucket_widths`.
+        """
+        from .wave_engine import pick_bucket_width
+        return pick_bucket_width(self.L, self.n_shards, n_ops)
+
     def _burst_span(self, K: int):
         """Span wrapping one multi-wave burst dispatch."""
         return span(f"{self._kind}:burst", cat="wave", K=int(K),

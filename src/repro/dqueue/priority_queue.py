@@ -46,6 +46,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..core.scan_queue import priority_queue_scan
+from ..kernels.backend import use_fused_dispatch
 from .elastic import _MultiWindowElastic
 from .wave_engine import (Discipline, Dispatch, TAG_GET, TAG_INACTIVE,
                           TAG_PUT, WaveEngine,
@@ -76,7 +77,8 @@ class PriorityDiscipline(Discipline):
     n_aux = 1           # n_relaxed
 
     def __init__(self, axis: str, n_shards: int, n_prios: int, cap: int,
-                 W: int, relaxation: int):
+                 W: int, relaxation: int,
+                 fused_dispatch: bool | None = None):
         self.axis = axis
         self.n_shards = n_shards
         self.n_prios = n_prios
@@ -86,6 +88,17 @@ class PriorityDiscipline(Discipline):
         self.junk = n_prios * cap
         self.n_windows = n_prios
         self.window_capacity = n_shards * cap
+        # on compiled backends the P masked min-plus scans collapse to ONE
+        # pallas sweep (grid = tiers x tiles); the jnp loop stays the CPU
+        # path AND the differential oracle (None = autodetect, PR 9)
+        if fused_dispatch is None:
+            fused_dispatch = use_fused_dispatch()
+        self.fused_dispatch = bool(fused_dispatch)
+        if self.fused_dispatch:
+            from ..kernels.segscan import make_tier_scan
+            self._tier_scan = make_tier_scan(n_prios)
+        else:
+            self._tier_scan = None
         self.state_specs = PriorityQueueState(P(), P(), P(axis), P(axis))
 
     def split(self, state):
@@ -114,7 +127,8 @@ class PriorityDiscipline(Discipline):
             priority_queue_scan(
                 (g & 2) > 0, g >> 2, (g & 1) > 0, firsts, lasts,
                 n_prios=P_, relaxation=self.relaxation,
-                shard_of=shard_of, n_shards=n_shards))
+                shard_of=shard_of, n_shards=n_shards,
+                tier_scan=self._tier_scan))
 
         i0 = lax.axis_index(self.axis) * L
         tier = lax.dynamic_slice_in_dim(tier_g, i0, L)
@@ -168,7 +182,8 @@ class DevicePriorityQueue:
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, relaxation: int = 0,
                  pipelined: bool = True, metrics: bool = False,
-                 metrics_ring: int = 64):
+                 metrics_ring: int = 64,
+                 fused_dispatch: bool | None = None):
         if n_prios < 1:
             raise ValueError("need at least one priority tier")
         self.mesh = mesh
@@ -184,7 +199,8 @@ class DevicePriorityQueue:
         self.engine = WaveEngine(
             mesh, axis_name,
             PriorityDiscipline(axis_name, self.n_shards, n_prios, cap,
-                               payload_width, relaxation),
+                               payload_width, relaxation,
+                               fused_dispatch=fused_dispatch),
             pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves

@@ -50,6 +50,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.scan_queue import seap_queue_scan
 from ..core.seap import INT32_MAX, INT32_MIN, check_seed_bounds
+from ..kernels.backend import use_fused_dispatch
 from .elastic import _MultiWindowElastic
 from .wave_engine import (Discipline, Dispatch, TAG_GET, TAG_INACTIVE,
                           TAG_PUT, WaveEngine,
@@ -86,7 +87,8 @@ class SeapDiscipline(Discipline):
     n_aux = 1           # n_active (directory size after the rebalance)
 
     def __init__(self, axis: str, n_shards: int, n_buckets: int, cap: int,
-                 W: int, split_occupancy: int):
+                 W: int, split_occupancy: int,
+                 fused_dispatch: bool | None = None):
         self.axis = axis
         self.n_shards = n_shards
         self.n_buckets = n_buckets
@@ -96,6 +98,17 @@ class SeapDiscipline(Discipline):
         self.junk = n_buckets * cap
         self.n_windows = n_buckets
         self.window_capacity = n_shards * cap
+        # on compiled backends the B masked min-plus scans collapse to ONE
+        # pallas sweep (grid = buckets x tiles); the jnp loop stays the
+        # CPU path AND the differential oracle (None = autodetect, PR 9)
+        if fused_dispatch is None:
+            fused_dispatch = use_fused_dispatch()
+        self.fused_dispatch = bool(fused_dispatch)
+        if self.fused_dispatch:
+            from ..kernels.segscan import make_tier_scan
+            self._tier_scan = make_tier_scan(n_buckets)
+        else:
+            self._tier_scan = None
         self.state_specs = SeapQueueState(P(), P(), P(), P(), P(), P(),
                                           P(axis), P(axis))
 
@@ -125,7 +138,8 @@ class SeapDiscipline(Discipline):
          new_active, new_key_lo, new_key_hi, n_active) = seap_queue_scan(
             (g[:, 0] & 2) > 0, g[:, 1], (g[:, 0] & 1) > 0,
             firsts, lasts, lo, active, key_lo, key_hi,
-            n_buckets=self.n_buckets, split_occupancy=self.split_occupancy)
+            n_buckets=self.n_buckets, split_occupancy=self.split_occupancy,
+            tier_scan=self._tier_scan)
 
         i0 = lax.axis_index(self.axis) * L
         bucket = lax.dynamic_slice_in_dim(bucket_g, i0, L)
@@ -194,7 +208,8 @@ class DeviceSeapQueue:
                  ops_per_shard: int = 64,
                  split_occupancy: Optional[int] = None,
                  seed_bounds=None, pipelined: bool = True,
-                 metrics: bool = False, metrics_ring: int = 64):
+                 metrics: bool = False, metrics_ring: int = 64,
+                 fused_dispatch: bool | None = None):
         if n_buckets < 1:
             raise ValueError("need at least one bucket")
         self.mesh = mesh
@@ -215,7 +230,8 @@ class DeviceSeapQueue:
         self.engine = WaveEngine(
             mesh, axis_name,
             SeapDiscipline(axis_name, self.n_shards, n_buckets, cap,
-                           payload_width, split_occupancy),
+                           payload_width, split_occupancy,
+                           fused_dispatch=fused_dispatch),
             pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves

@@ -44,6 +44,26 @@ one-wave-at-a-time schedule for differential testing.
 
 ``step`` is always the sequential single wave (two collectives, the PR 1
 contract, HLO-tested).
+
+Occupancy buckets (PR 9)
+------------------------
+Every wave ships a ``[n_shards, width, C]`` request and a
+``[n_shards, width, 1+W]`` reply through the two all_to_alls — padded to
+the envelope width whether the burst staged 3 ops or 300.  The engine's
+wave bodies are deliberately *width-agnostic*: every discipline derives
+its per-wave length from the op arrays themselves, so lowering the same
+jitted entry point at a narrower op width yields a program whose
+collective operands shrink proportionally.  :func:`bucket_ladder` defines
+the static ladder of envelope widths (L/4, L/2, L — deduplicated,
+minimum 1) and :func:`pick_bucket_width` picks the smallest bucket that
+fits a staged burst; the host-side drivers (``ElasticDeviceQueue`` and
+friends via ``pick_width``, ``ServeEngine`` refill) stage their op
+arrays at that width.  ``jax.jit`` keys its executable cache on the
+abstract shapes, so each bucket compiles exactly once and bouncing
+between widths never recompiles (the wavecheck recompile guard drives
+the whole ladder to prove it); the ``[compact]`` ProgramSpecs in
+``analysis/programs.py`` pin every bucket to the same ≤2-all_to_all
+budget.
 """
 from __future__ import annotations
 
@@ -62,6 +82,27 @@ from ..obs.device import (MetricsState, drain as _drain_rows,
 TAG_INACTIVE = 0
 TAG_PUT = 1
 TAG_GET = 2
+
+
+# ------------------------------------------------- occupancy buckets -------
+def bucket_ladder(L: int) -> tuple:
+    """The static ladder of per-shard envelope widths for full width
+    ``L``: {L/4, L/2, L} deduplicated, ascending, floored at 1.  Small
+    and static on purpose — each rung is one cached executable per entry
+    point, and three rungs already cover the low-utilization regimes
+    (≤25%, ≤50%) where compaction pays."""
+    return tuple(sorted({max(1, L // 4), max(1, L // 2), L}))
+
+
+def pick_bucket_width(L: int, n_shards: int, n_ops: int) -> int:
+    """Smallest ladder width ``w`` with ``n_shards * w >= n_ops`` —
+    the envelope a burst of ``n_ops`` staged ops rides.  Bursts larger
+    than the full envelope return ``L`` (the multi-wave chunking above
+    this call handles them)."""
+    for w in bucket_ladder(L):
+        if n_shards * w >= n_ops:
+            return w
+    return L
 
 
 # ------------------------------------------------------ shared helpers -----
@@ -270,8 +311,11 @@ class WaveEngine:
         headroom = (jnp.int32(disc.n_windows * disc.window_capacity)
                     - jnp.sum(occ))
         aux = (d.aux[0].astype(jnp.int32) if d.aux else jnp.int32(0))
+        # the wave's per-shard envelope width — static per trace, so each
+        # occupancy bucket stamps its rows with the width it rode (PR 9)
+        width = jnp.int32(valid.shape[0])
         head = jnp.stack([seq.astype(jnp.int32), puts, gets, offered,
-                          bottom, aux, headroom])
+                          bottom, aux, headroom, width])
         return jnp.concatenate([head, occ])
 
     # ------------------------------------------------------- wave bodies ---

@@ -1,3 +1,6 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from .backend import default_interpret, use_fused_dispatch
+
+__all__ = ["default_interpret", "use_fused_dispatch"]

@@ -1,0 +1,61 @@
+"""Pallas execution-mode selection shared by every kernel package.
+
+Every ``kernels/*/ops.py`` wrapper takes ``interpret: bool | None = None``
+and resolves ``None`` through :func:`default_interpret`:
+
+  * on CPU (the CI mesh, laptops) pallas has no compiled lowering worth
+    using — kernels run in interpret mode, which is plain traced jax and
+    therefore exact but slow;
+  * on TPU/GPU the kernels compile for real and ``interpret=False`` is
+    the right default.
+
+The env var ``REPRO_PALLAS_INTERPRET`` overrides the autodetect in both
+directions (``1``/``true`` forces interpret mode everywhere, ``0``/
+``false`` forces compiled mode even on CPU — useful for debugging a
+lowering, and for CI legs that want to pin one mode).  See
+docs/OPERATIONS.md ("Pallas execution mode").
+
+:func:`use_fused_dispatch` is the wave-path gate built on the same
+detection: the disciplines route their dispatch arithmetic (per-tier
+masked min-plus scans, the max-plus stack scan) through the fused
+``kernels/segscan`` pallas sweep ONLY where that sweep actually compiles
+— on CPU the ``core/scan_queue`` jnp path is both the oracle and the
+fastest implementation, so interpret-mode pallas is never put on the hot
+path implicitly.
+"""
+from __future__ import annotations
+
+import os
+
+_TRUE = frozenset({"1", "true", "yes", "on"})
+_FALSE = frozenset({"0", "false", "no", "off"})
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret`` default: True iff running on CPU.
+
+    ``REPRO_PALLAS_INTERPRET=1|0`` overrides the backend autodetect.
+    Read at trace time — flipping the env var mid-process only affects
+    traces that have not been cached yet.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    import jax
+    return jax.default_backend() == "cpu"
+
+
+def use_fused_dispatch() -> bool:
+    """True when wave dispatch should ride the compiled pallas sweep.
+
+    Follows :func:`default_interpret` inverted: compiled backends get the
+    fused kernel, CPU keeps the ``core/scan_queue`` jnp path (which would
+    otherwise run the pallas sweep in interpret mode — strictly slower
+    than the code it replaces).  ``REPRO_PALLAS_INTERPRET=0`` therefore
+    also force-enables fused dispatch on CPU; the differential tests
+    instead pin ``fused_dispatch=True`` per queue instance, which runs
+    the sweep in interpret mode inside the wave — slow, but bit-exact.
+    """
+    return not default_interpret()

@@ -82,8 +82,11 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 
 def flash_attention_kernel(q, k, v, *, causal=True, window=None,
-                           block_q=128, block_k=128, interpret=True):
+                           block_q=128, block_k=128, interpret=None):
     """q: [B, Lq, D]; k/v: [B, Lk, D] -> [B, Lq, D]."""
+    if interpret is None:
+        from ..backend import default_interpret
+        interpret = default_interpret()
     B, Lq, D = q.shape
     Lk = k.shape[1]
     bq = min(block_q, Lq)

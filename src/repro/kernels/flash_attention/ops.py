@@ -7,19 +7,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..backend import default_interpret
 from .kernel import flash_attention_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                    causal: bool = True, window: Optional[int] = None,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
-    """q: [B, Hq, Lq, D]; k/v: [B, Hkv, Lk, D]; Hq % Hkv == 0 (GQA).
-
-    Returns [B, Hq, Lq, D].  Queries align to the end of the key sequence.
-    """
+def _flash_attention(q, k, v, causal, window, block_q, block_k, interpret):
     B, Hq, Lq, D = q.shape
     Hkv = k.shape[1]
     G = Hq // Hkv
@@ -41,3 +35,19 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                 interpret=interpret))
         out = jnp.concatenate(outs, axis=1)
     return out.reshape(B, Hkv, G, Lq, D).reshape(B, Hq, Lq, D)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: [B, Hq, Lq, D]; k/v: [B, Hkv, Lk, D]; Hq % Hkv == 0 (GQA).
+
+    Returns [B, Hq, Lq, D].  Queries align to the end of the key sequence.
+    ``interpret=None`` autodetects: interpret on CPU, compiled on TPU/GPU
+    (``REPRO_PALLAS_INTERPRET`` overrides — see docs/OPERATIONS.md).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_attention(q, k, v, causal, window, block_q, block_k,
+                            interpret)

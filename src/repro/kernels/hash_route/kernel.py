@@ -47,7 +47,10 @@ def _route_kernel(pos_ref, valid_ref, owner_ref, hist_ref, *, n_shards):
 
 
 def hash_route_kernel(pos: jax.Array, valid: jax.Array, n_shards: int,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
+    if interpret is None:
+        from ..backend import default_interpret
+        interpret = default_interpret()
     n = pos.shape[0]
     assert n % TILE == 0
     T = n // TILE

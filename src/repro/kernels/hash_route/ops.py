@@ -6,13 +6,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..backend import default_interpret
 from .kernel import TILE, hash_route_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("n_shards", "interpret"))
-def hash_route_pallas(pos: jax.Array, valid: jax.Array, n_shards: int,
-                      interpret: bool = True):
-    """Owner shard + per-shard counts for a batch of DHT positions."""
+def _hash_route_pallas(pos, valid, n_shards, interpret):
     n = pos.shape[0]
     pad = (-n) % TILE
     if pad:
@@ -21,3 +20,15 @@ def hash_route_pallas(pos: jax.Array, valid: jax.Array, n_shards: int,
     owner, counts = hash_route_kernel(pos, valid, n_shards,
                                       interpret=interpret)
     return owner[:n], counts
+
+
+def hash_route_pallas(pos: jax.Array, valid: jax.Array, n_shards: int,
+                      interpret: bool | None = None):
+    """Owner shard + per-shard counts for a batch of DHT positions.
+
+    ``interpret=None`` autodetects: interpret on CPU, compiled on TPU/GPU
+    (``REPRO_PALLAS_INTERPRET`` overrides — see docs/OPERATIONS.md).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _hash_route_pallas(pos, valid, n_shards, interpret)

@@ -1,5 +1,8 @@
-from .ops import priority_queue_scan_pallas, queue_scan_pallas
+from .ops import (make_tier_scan, priority_queue_scan_pallas,
+                  queue_scan_pallas, stack_scan_pallas,
+                  tiered_queue_scan_pallas)
 from .ref import queue_scan_ref
 
-__all__ = ["priority_queue_scan_pallas", "queue_scan_pallas",
-           "queue_scan_ref"]
+__all__ = ["make_tier_scan", "priority_queue_scan_pallas",
+           "queue_scan_pallas", "queue_scan_ref", "stack_scan_pallas",
+           "tiered_queue_scan_pallas"]

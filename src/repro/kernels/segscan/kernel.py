@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: SKUEUE batch position-assignment scan.
+"""Pallas TPU kernels: SKUEUE batch position-assignment sweeps.
 
 The paper's Stages 1-3 for one device's request array, as a two-phase
 Blelloch scan tiled for VMEM:
@@ -13,9 +13,23 @@ The inter-tile exclusive scan of the tiny per-tile carries happens in jnp
 between the two pallas_calls (it is O(n/TILE) elements — negligible), which
 mirrors the paper's anchor step: the carries ARE the aggregated batches.
 
+Three sweeps share the machinery (one per discipline family):
+
+  * :func:`queue_scan_kernel`  — FIFO min-plus (ENQ/DEQ transforms);
+  * :func:`stack_scan_kernel`  — LIFO max-plus (PUSH/POP on (last, ticket));
+  * :func:`tiered_queue_scan_kernel` — the fused per-tier sweep: ONE
+    pallas_call pair with grid (n_tiers, tiles) replacing n_tiers separate
+    masked launches — this is the dispatch arithmetic of the priority
+    (tier := SLA class) and Seap (tier := bucket) disciplines; the
+    batch-DeleteMin epilogue stays prefix arithmetic on the tiny per-tier
+    totals (``core.scan_queue.strict_batch_deletemin``) inside the same
+    jitted program.
+
 Layout: requests are reshaped to [T, 8, 128] tiles; the scan order is the
 row-major flattened order.  All arithmetic is int32 in VMEM; the MXU is not
-involved (this is a VPU kernel).
+involved (these are VPU kernels).  ``interpret=None`` resolves through
+``repro.kernels.default_interpret()`` (interpret on CPU, compiled on
+TPU/GPU; env override ``REPRO_PALLAS_INTERPRET``).
 """
 from __future__ import annotations
 
@@ -24,12 +38,15 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from ..backend import default_interpret
+
 INF = 2 ** 30  # plain int: Pallas kernels need literals, not traced consts
 TILE_ROWS = 8
 TILE_LANES = 128
 TILE = TILE_ROWS * TILE_LANES
 
 
+# ------------------------------------------------- min-plus (queue) ---------
 def _compose(t1, t2):
     A1, B1, C1 = t1
     A2, B2, C2 = t2
@@ -47,20 +64,66 @@ def _tile_transforms(is_enq, valid):
     return A, B, C
 
 
-def _totals_kernel(is_enq_ref, valid_ref, out_ref):
-    """Phase A: reduce one [8,128] tile to its total (A,B,C)."""
-    A, B, C = _tile_transforms(is_enq_ref[...], valid_ref[...])
-    flat = (A.reshape(-1), B.reshape(-1), C.reshape(-1))
-    # log-step tree reduction over the flattened tile.  The min-plus compose
-    # is non-commutative: pair ADJACENT elements (2i, 2i+1) at every level so
-    # the reduction respects the left-to-right request order.
+# ------------------------------------------------- max-plus (stack) ---------
+def _stack_compose(t1, t2):
+    a1, b1, d1 = t1
+    a2, b2, d2 = t2
+    return (a1 + a2,
+            jnp.maximum(jnp.maximum(b1 + a2, b2), -INF),
+            d1 + d2)
+
+
+def _stack_tile_transforms(is_push, valid):
+    e = jnp.logical_and(is_push != 0, valid != 0).astype(jnp.int32)
+    v = (valid != 0)
+    a = jnp.where(v, 2 * e - 1, 0)
+    b = jnp.where(v, jnp.where(e > 0, -INF, 0), -INF)
+    d = jnp.where(v, e, 0)
+    return a, b, d
+
+
+# ---------------------------------------------------- shared scan bodies ----
+def _tree_reduce(compose, flat):
+    """Log-step tree reduction over a flattened tile.  The tropical compose
+    is non-commutative: pair ADJACENT elements (2i, 2i+1) at every level so
+    the reduction respects the left-to-right request order."""
     n = TILE
     a, b, c = flat
     while n > 1:
         left = (a[0:n:2], b[0:n:2], c[0:n:2])
         right = (a[1:n:2], b[1:n:2], c[1:n:2])
-        a, b, c = _compose(left, right)
+        a, b, c = compose(left, right)
         n //= 2
+    return a, b, c
+
+
+def _hillis_steele_exclusive(compose, fills, tr):
+    """Intra-tile exclusive scan (log2(TILE) Hillis-Steele steps + shift)."""
+    a, b, c = tr
+    f_a, f_b, f_c = fills
+    shift = 1
+    while shift < TILE:
+        ap = jnp.concatenate([jnp.full((shift,), f_a, jnp.int32), a[:-shift]])
+        bp = jnp.concatenate([jnp.full((shift,), f_b, jnp.int32), b[:-shift]])
+        cp = jnp.concatenate([jnp.full((shift,), f_c, jnp.int32), c[:-shift]])
+        na, nb, nc = compose((ap, bp, cp), (a, b, c))
+        idx = lax.broadcasted_iota(jnp.int32, (TILE,), 0)
+        keep = idx < shift
+        a = jnp.where(keep, a, na)
+        b = jnp.where(keep, b, nb)
+        c = jnp.where(keep, c, nc)
+        shift *= 2
+    a_x = jnp.concatenate([jnp.full((1,), f_a, jnp.int32), a[:-1]])
+    b_x = jnp.concatenate([jnp.full((1,), f_b, jnp.int32), b[:-1]])
+    c_x = jnp.concatenate([jnp.full((1,), f_c, jnp.int32), c[:-1]])
+    return a_x, b_x, c_x
+
+
+def _totals_kernel(is_enq_ref, valid_ref, out_ref):
+    """Phase A: reduce one [8,128] tile to its total (A,B,C)."""
+    A, B, C = _tile_transforms(is_enq_ref[...], valid_ref[...])
+    a, b, c = _tree_reduce(
+        _compose, (A.reshape(-1), B.reshape(-1), C.reshape(-1)))
     out_ref[0, 0] = a[0]
     out_ref[0, 1] = b[0]
     out_ref[0, 2] = c[0]
@@ -70,26 +133,9 @@ def _scan_kernel(is_enq_ref, valid_ref, carry_ref, state_ref,
                  pos_ref, match_ref):
     """Phase B: intra-tile exclusive scan after the tile's carry."""
     A, B, C = _tile_transforms(is_enq_ref[...], valid_ref[...])
-    a = A.reshape(-1)
-    b = B.reshape(-1)
-    c = C.reshape(-1)
-    # Hillis-Steele inclusive scan over TILE elems (log2(TILE)=10 steps)
-    shift = 1
-    while shift < TILE:
-        ap = jnp.concatenate([jnp.zeros((shift,), jnp.int32), a[:-shift]])
-        bp = jnp.concatenate([jnp.full((shift,), INF, jnp.int32), b[:-shift]])
-        cp = jnp.concatenate([jnp.zeros((shift,), jnp.int32), c[:-shift]])
-        na, nb, nc = _compose((ap, bp, cp), (a, b, c))
-        idx = lax.broadcasted_iota(jnp.int32, (TILE,), 0)
-        keep = idx < shift
-        a = jnp.where(keep, a, na)
-        b = jnp.where(keep, b, nb)
-        c = jnp.where(keep, c, nc)
-        shift *= 2
-    # exclusive = shift by one
-    a_x = jnp.concatenate([jnp.zeros((1,), jnp.int32), a[:-1]])
-    b_x = jnp.concatenate([jnp.full((1,), INF, jnp.int32), b[:-1]])
-    c_x = jnp.concatenate([jnp.zeros((1,), jnp.int32), c[:-1]])
+    a_x, b_x, c_x = _hillis_steele_exclusive(
+        _compose, (0, INF, 0),
+        (A.reshape(-1), B.reshape(-1), C.reshape(-1)))
     # prepend the inter-tile carry and the initial anchor state
     ca = carry_ref[0, 0]
     cb = carry_ref[0, 1]
@@ -109,12 +155,100 @@ def _scan_kernel(is_enq_ref, valid_ref, carry_ref, state_ref,
         1, TILE_ROWS, TILE_LANES).astype(jnp.int32)
 
 
+def _stack_totals_kernel(is_push_ref, valid_ref, out_ref):
+    """Phase A (max-plus): reduce one tile to its total (a, b, dt)."""
+    a, b, d = _stack_tile_transforms(is_push_ref[...], valid_ref[...])
+    a, b, d = _tree_reduce(
+        _stack_compose, (a.reshape(-1), b.reshape(-1), d.reshape(-1)))
+    out_ref[0, 0] = a[0]
+    out_ref[0, 1] = b[0]
+    out_ref[0, 2] = d[0]
+
+
+def _stack_scan_kernel(is_push_ref, valid_ref, carry_ref, state_ref,
+                       pos_ref, tick_ref):
+    """Phase B (max-plus): positions + tickets after the tile's carry."""
+    a, b, d = _stack_tile_transforms(is_push_ref[...], valid_ref[...])
+    a_x, b_x, d_x = _hillis_steele_exclusive(
+        _stack_compose, (0, -INF, 0),
+        (a.reshape(-1), b.reshape(-1), d.reshape(-1)))
+    ca = carry_ref[0, 0]
+    cb = carry_ref[0, 1]
+    cd = carry_ref[0, 2]
+    a_x, b_x, d_x = _stack_compose((ca, cb, cd), (a_x, b_x, d_x))
+    last0 = state_ref[0, 0]
+    tick0 = state_ref[0, 1]
+    l_i = jnp.maximum(last0 + a_x, b_x)
+    t_i = tick0 + d_x
+    is_push = (is_push_ref[...].reshape(-1) != 0)
+    vmask = (valid_ref[...].reshape(-1) != 0)
+    pos = jnp.where(is_push, l_i + 1,
+                    jnp.where(l_i >= 1, l_i, jnp.int32(-1)))
+    pos = jnp.where(vmask, pos, jnp.int32(-1))
+    tick = jnp.where(is_push, t_i + 1, t_i)
+    pos_ref[...] = pos.reshape(1, TILE_ROWS, TILE_LANES)
+    tick_ref[...] = tick.reshape(1, TILE_ROWS, TILE_LANES)
+
+
+def _tiered_totals_kernel(tier_ref, enq_ref, out_ref):
+    """Phase A over grid (tier, tile): totals of THIS tier's enqueue mask."""
+    p = pl.program_id(0)
+    mask = jnp.logical_and(enq_ref[...] != 0,
+                           tier_ref[...] == p).astype(jnp.int32)
+    A, B, C = _tile_transforms(mask, mask)
+    a, b, c = _tree_reduce(
+        _compose, (A.reshape(-1), B.reshape(-1), C.reshape(-1)))
+    out_ref[0, 0, 0] = a[0]
+    out_ref[0, 0, 1] = b[0]
+    out_ref[0, 0, 2] = c[0]
+
+
+def _tiered_scan_kernel(tier_ref, enq_ref, carry_ref, state_ref, pos_ref):
+    """Phase B over grid (tier, tile): per-tier enqueue positions."""
+    p = pl.program_id(0)
+    mask32 = jnp.logical_and(enq_ref[...] != 0,
+                             tier_ref[...] == p).astype(jnp.int32)
+    A, B, C = _tile_transforms(mask32, mask32)
+    a_x, b_x, c_x = _hillis_steele_exclusive(
+        _compose, (0, INF, 0),
+        (A.reshape(-1), B.reshape(-1), C.reshape(-1)))
+    ca = carry_ref[0, 0, 0]
+    cb = carry_ref[0, 0, 1]
+    cc = carry_ref[0, 0, 2]
+    a_x, b_x, c_x = _compose((ca, cb, cc), (a_x, b_x, c_x))
+    last0 = state_ref[0, 1]
+    l_i = last0 + c_x
+    mask = (mask32.reshape(-1) != 0)
+    pos_ref[...] = jnp.where(mask, l_i + 1, jnp.int32(-1)).reshape(
+        1, 1, TILE_ROWS, TILE_LANES)
+
+
+# -------------------------------------------------------- entry points ------
+def _carry_scan(compose, totals, ident_row, axis=0):
+    """Inter-tile exclusive scan of the tiny per-tile carries (jnp)."""
+    def comp(x, y):
+        return jnp.stack(compose((x[..., 0], x[..., 1], x[..., 2]),
+                                 (y[..., 0], y[..., 1], y[..., 2])), -1)
+    incl = lax.associative_scan(comp, totals, axis=axis)
+    ident = jnp.broadcast_to(
+        jnp.asarray(ident_row, jnp.int32),
+        totals.shape[:axis] + (1,) + totals.shape[axis + 1:])
+    excl = lax.concatenate(
+        [ident, lax.slice_in_dim(incl, 0, totals.shape[axis] - 1, axis=axis)],
+        axis)
+    tot = lax.index_in_dim(incl, totals.shape[axis] - 1, axis=axis,
+                           keepdims=False)
+    return excl, tot
+
+
 def queue_scan_kernel(is_enq: jax.Array, valid: jax.Array,
                       first: jax.Array, last: jax.Array,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """n must be a multiple of 1024 (pad with valid=False).
 
     Returns (pos[n], matched[n], new_first, new_last)."""
+    if interpret is None:
+        interpret = default_interpret()
     n = is_enq.shape[0]
     assert n % TILE == 0, f"pad request batch to a multiple of {TILE}"
     T = n // TILE
@@ -135,13 +269,7 @@ def queue_scan_kernel(is_enq: jax.Array, valid: jax.Array,
     )(e2, v2)
 
     # ---- inter-tile exclusive scan of carries (tiny; jnp) ----
-    def comp(x, y):
-        return jnp.stack(_compose((x[..., 0], x[..., 1], x[..., 2]),
-                                  (y[..., 0], y[..., 1], y[..., 2])), -1)
-    incl = lax.associative_scan(comp, totals, axis=0)
-    ident = jnp.array([[0, INF, 0]], jnp.int32)
-    excl = jnp.concatenate([ident, incl[:-1]], axis=0)
-    tot = incl[-1]
+    excl, tot = _carry_scan(_compose, totals, [0, INF, 0])
     state = jnp.stack([first.astype(jnp.int32),
                        last.astype(jnp.int32)])[None]  # [1, 2]
 
@@ -170,3 +298,118 @@ def queue_scan_kernel(is_enq: jax.Array, valid: jax.Array,
     new_last = last + tot[2]
     return (pos.reshape(n), match.reshape(n).astype(bool),
             new_first.astype(jnp.int32), new_last.astype(jnp.int32))
+
+
+def stack_scan_kernel(is_push: jax.Array, valid: jax.Array,
+                      last: jax.Array, ticket: jax.Array,
+                      interpret: bool | None = None):
+    """Max-plus LIFO sweep.  n must be a multiple of 1024.
+
+    Returns (pos[n], tick[n], new_last, new_ticket) with the exact
+    semantics of ``core.scan_queue.stack_scan``: for pushes ``tick`` is
+    the element's unique ticket, for pops the max-ticket bound."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = is_push.shape[0]
+    assert n % TILE == 0, f"pad request batch to a multiple of {TILE}"
+    T = n // TILE
+    e2 = is_push.astype(jnp.int32).reshape(T, TILE_ROWS, TILE_LANES)
+    v2 = valid.astype(jnp.int32).reshape(T, TILE_ROWS, TILE_LANES)
+
+    totals = pl.pallas_call(
+        _stack_totals_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, 3), jnp.int32),
+        interpret=interpret,
+    )(e2, v2)
+
+    excl, tot = _carry_scan(_stack_compose, totals, [0, -INF, 0])
+    state = jnp.stack([last.astype(jnp.int32),
+                       ticket.astype(jnp.int32)])[None]  # [1, 2]
+
+    pos, tick = pl.pallas_call(
+        _stack_scan_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, 3), lambda t: (t, 0)),
+            pl.BlockSpec((1, 2), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda t: (t, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, TILE_ROWS, TILE_LANES), jnp.int32),
+            jax.ShapeDtypeStruct((T, TILE_ROWS, TILE_LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(e2, v2, excl, state)
+
+    new_last = jnp.maximum(last + tot[0], tot[1])
+    new_ticket = ticket + tot[2]
+    return (pos.reshape(n), tick.reshape(n),
+            new_last.astype(jnp.int32), new_ticket.astype(jnp.int32))
+
+
+def tiered_queue_scan_kernel(tier: jax.Array, enq: jax.Array,
+                             firsts: jax.Array, lasts: jax.Array,
+                             n_tiers: int,
+                             interpret: bool | None = None):
+    """The fused per-tier enqueue sweep: grid (n_tiers, tiles), ONE
+    pallas_call pair total — versus n_tiers separate masked launches.
+
+    tier: [n] int32 (the element's tier/bucket; dequeues may carry any
+    value — gate with ``enq``); enq: [n] bool, the masked enqueue ops.
+    n must be a multiple of 1024.  Returns (pos_all [n_tiers, n] int32
+    with -1 off-tier, new_lasts [n_tiers]); firsts are unchanged by an
+    enqueue-only sweep."""
+    if interpret is None:
+        interpret = default_interpret()
+    P_ = n_tiers
+    n = enq.shape[0]
+    assert n % TILE == 0, f"pad request batch to a multiple of {TILE}"
+    T = n // TILE
+    t2 = tier.astype(jnp.int32).reshape(T, TILE_ROWS, TILE_LANES)
+    e2 = enq.astype(jnp.int32).reshape(T, TILE_ROWS, TILE_LANES)
+
+    totals = pl.pallas_call(
+        _tiered_totals_kernel,
+        grid=(P_, T),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda p, t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda p, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 3), lambda p, t: (p, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((P_, T, 3), jnp.int32),
+        interpret=interpret,
+    )(t2, e2)
+
+    excl, tot = _carry_scan(_compose, totals, [0, INF, 0], axis=1)
+    state = jnp.stack([firsts.astype(jnp.int32),
+                       lasts.astype(jnp.int32)], axis=-1)  # [P, 2]
+
+    pos_all = pl.pallas_call(
+        _tiered_scan_kernel,
+        grid=(P_, T),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda p, t: (t, 0, 0)),
+            pl.BlockSpec((1, TILE_ROWS, TILE_LANES), lambda p, t: (t, 0, 0)),
+            pl.BlockSpec((1, 1, 3), lambda p, t: (p, t, 0)),
+            pl.BlockSpec((1, 2), lambda p, t: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, TILE_ROWS, TILE_LANES),
+                               lambda p, t: (p, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((P_, T, TILE_ROWS, TILE_LANES),
+                                       jnp.int32),
+        interpret=interpret,
+    )(t2, e2, excl, state)
+
+    new_lasts = lasts + tot[:, 2]
+    return pos_all.reshape(P_, n), new_lasts.astype(jnp.int32)

@@ -64,8 +64,12 @@ def _ssd_kernel(xt_ref, loga_ref, b_ref, c_ref, y_ref, s_ref, *, Q, N, P):
     s_ref[...] = jnp.exp(ltot) * s_ref[...] + s_new
 
 
-def ssd_scan_kernel(xt, loga, B, C, chunk: int = 128, interpret: bool = True):
+def ssd_scan_kernel(xt, loga, B, C, chunk: int = 128,
+                    interpret: bool | None = None):
     """xt: [BH, L, P]; loga: [BH, L]; B/C: [BH, L, N] -> y [BH, L, P]."""
+    if interpret is None:
+        from ..backend import default_interpret
+        interpret = default_interpret()
     BH, L, P = xt.shape
     N = B.shape[-1]
     Q = min(chunk, L)

@@ -6,14 +6,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..backend import default_interpret
 from .kernel import ssd_scan_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan_pallas(xt: jax.Array, loga: jax.Array, B: jax.Array,
-                    C: jax.Array, chunk: int = 128,
-                    interpret: bool = True) -> jax.Array:
-    """Chunked SSD scan. xt: [BH, L, P]; loga: [BH, L]; B/C: [BH, L, N]."""
+def _ssd_scan_pallas(xt, loga, B, C, chunk, interpret):
     L = xt.shape[1]
     if L % chunk and L > chunk:
         p = (-L) % chunk
@@ -23,3 +21,16 @@ def ssd_scan_pallas(xt: jax.Array, loga: jax.Array, B: jax.Array,
         C = jnp.pad(C, ((0, 0), (0, p), (0, 0)))
     y = ssd_scan_kernel(xt, loga, B, C, chunk=chunk, interpret=interpret)
     return y[:, :L]
+
+
+def ssd_scan_pallas(xt: jax.Array, loga: jax.Array, B: jax.Array,
+                    C: jax.Array, chunk: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Chunked SSD scan. xt: [BH, L, P]; loga: [BH, L]; B/C: [BH, L, N].
+
+    ``interpret=None`` autodetects: interpret on CPU, compiled on TPU/GPU
+    (``REPRO_PALLAS_INTERPRET`` overrides — see docs/OPERATIONS.md).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _ssd_scan_pallas(xt, loga, B, C, chunk, interpret)

@@ -15,7 +15,8 @@ wave`` AST lint rule).
 
 Row layout (all int32)::
 
-    seq ‖ puts ‖ gets ‖ valid ‖ bottom ‖ aux ‖ headroom ‖ occ[n_windows]
+    seq ‖ puts ‖ gets ‖ valid ‖ bottom ‖ aux ‖ headroom ‖ width ‖
+    occ[n_windows]
 
 * ``seq``      replicated wave sequence number (monotone across bursts);
 * ``puts``     PER-SHARD admitted enqueues this wave (sum at drain);
@@ -29,6 +30,9 @@ Row layout (all int32)::
                otherwise;
 * ``headroom`` replicated free-slot count across every tier/bucket
                window after the wave's reservations;
+* ``width``    replicated per-shard envelope width the wave rode — the
+               occupancy bucket (PR 9); a constant baked into each
+               bucket's trace, so it costs nothing at run time;
 * ``occ[w]``   replicated post-dispatch occupancy of window ``w`` (the
                FIFO/LIFO interval, each priority tier, each Seap bucket).
 
@@ -46,7 +50,8 @@ import jax.numpy as jnp
 from jax import lax
 
 # replicated-vs-per-shard split of the fixed row head (occ tail follows)
-METRIC_HEAD = ("seq", "puts", "gets", "valid", "bottom", "aux", "headroom")
+METRIC_HEAD = ("seq", "puts", "gets", "valid", "bottom", "aux", "headroom",
+               "width")
 N_HEAD = len(METRIC_HEAD)
 _ADDITIVE = frozenset({"puts", "gets", "valid", "bottom"})
 

@@ -424,11 +424,21 @@ class ServeEngine:
 
     def _queue_wave(self, enq_rids: List[int], n_deq: int) -> List[int]:
         """Run enqueues + dequeues as chunked fused waves; returns granted
-        request ids.  Wave width tracks the queue's CURRENT shard count."""
+        request ids.  Wave width tracks the queue's CURRENT shard count —
+        and, within it, the burst's occupancy bucket: a refill that fits a
+        single wave rides the narrowest envelope of the queue's bucket
+        ladder that holds it (PR 9), shrinking both all_to_all payloads.
+        Oversized bursts chunk at the full width as before."""
         n_ops = len(enq_rids) + n_deq
         if n_ops == 0:
             return []
-        n = self.queue.n_shards * self.queue.L
+        n_full = self.queue.n_shards * self.queue.L
+        if n_ops <= n_full:
+            # the admission layer knows the staged count: pick the
+            # smallest bucket that fits (each width is a cached program)
+            n = self.queue.n_shards * self.queue.pick_width(n_ops)
+        else:
+            n = n_full
         n_waves = -(-n_ops // n)  # ceil: chunk oversized bursts
         # pad the wave count to a power of two (extra waves are all-invalid
         # no-ops) so fluctuating burst sizes only ever compile the scanned

@@ -28,14 +28,20 @@ def test_run_all_zero_violations_8dev():
     assert report["passed"], report["violations"]
     assert report["n_violations"] == 0, report["violations"]
     # every discipline x schedule is present: 4x3 wave programs + legacy
-    # step + 4 migrations + 4x2 telemetry-on [obs] twins (PR 7) = 25
-    assert len(report["programs"]) == 25, sorted(report["programs"])
+    # step + 4 migrations + 4x2 telemetry-on [obs] twins (PR 7) + 4x2
+    # occupancy-bucket [compact] twins at the narrow ladder width (PR 9,
+    # L=2 so the ladder is {1, 2} and w=1 is the one narrow rung) = 33
+    assert len(report["programs"]) == 33, sorted(report["programs"])
     # the [obs] twins lower against the SAME budgets as their off twins
     obs = [n for n in report["programs"] if "[obs]" in n or ",obs]" in n]
     assert len(obs) == 8, sorted(report["programs"])
+    # ... and so do the [compact] twins (PR 9): same ≤2-a2a wave contract
+    compact = [n for n in report["programs"] if "compact:" in n]
+    assert len(compact) == 8, sorted(report["programs"])
     # the budgets are exact on the headline invariant: 2 a2a per wave
     for name, info in report["programs"].items():
-        if name.endswith(".step") and "legacy" not in name:
+        if (name.endswith(".step") or ".step[compact" in name) \
+                and "legacy" not in name:
             assert info["collectives"].get("all-to-all") == 2, (name, info)
     legacy = report["programs"]["queue-legacy.step"]
     assert legacy["collectives"].get("all-to-all") == 5, legacy

@@ -1,0 +1,387 @@
+"""PR 9 compact waves: occupancy-adaptive envelopes.
+
+Two satellites of the PR 9 acceptance bar:
+
+* a hypothesis property test driving random op streams, random JOIN/LEAVE
+  schedules AND a random per-wave envelope width (mixed across the bucket
+  ladder) through all four disciplines — op-by-op parity against the host
+  oracles, plus BIT-IDENTICAL parity (every per-op output and the final
+  device state) with the same wave partition ridden at the full width;
+* an HLO matrix test asserting each ladder width still lowers to the
+  exact 2-all_to_all wave contract while the all_to_all operand shapes
+  shrink STRICTLY monotonically with the envelope width — the compaction
+  is real bytes off the wire, not a relabeling.
+"""
+import numpy as np
+
+from _hyp import given, settings, strategies as st
+from multidev import run_multidev
+
+# --------------------------------------------------------------------------
+# Property: mixed bucket widths == full width == host oracles.
+#
+# The op stream is partitioned into single-wave chunks; each chunk rides a
+# randomly chosen ladder width that fits it (the compact run) and, in a
+# twin queue, the full width L (the reference run) — the SAME wave
+# partition, so the only difference is the envelope padding.  Membership
+# events fire between chunks on both queues.
+# --------------------------------------------------------------------------
+MIXED_BUCKETS = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.priority import DEQ as PDEQ, ENQ as PENQ, PriorityOracle
+from repro.core.seap import DEQ as SDEQ, ENQ as SENQ, SeapOracle
+from repro.dqueue import (ElasticDeviceQueue, ElasticDeviceStack,
+                          ElasticDevicePriorityQueue, ElasticDeviceSeapQueue)
+from repro.dqueue.wave_engine import bucket_ladder
+
+OPS = %(ops)r
+PRIOS = %(prios)r
+KEYS = %(keys)r
+CHUNKS = %(chunks)r          # consecutive chunk sizes partitioning OPS
+WIDTH_SEED = %(width_seed)d  # per-chunk ladder pick for the compact run
+SCHEDULE = %(schedule)r      # chunk index -> ("grow", k) | ("shrink", ids)
+P_ = %(n_prios)d
+L = 4
+B_ = 4
+SPLIT_OCC = 6
+
+
+def run_device(elastic, W, codes=None, compact=False):
+    # drive the chunk schedule; compact=True rides mixed ladder widths
+    wrng = np.random.default_rng(WIDTH_SEED)
+    outs = []
+    start = 0
+    for ci, m in enumerate(CHUNKS):
+        chunk = OPS[start:start + m]
+        if compact:
+            ladder = [w for w in elastic.bucket_widths()
+                      if elastic.n_shards * w >= m]
+            w = int(wrng.choice(ladder))
+            assert w >= elastic.pick_width(m)
+        else:
+            w = elastic.L
+        n = elastic.n_shards * w
+        E = np.zeros(n, bool)
+        V = np.zeros(n, bool)
+        PR = np.zeros(n, np.int32)
+        PW = np.zeros((n, W), np.int32)
+        for j, op in enumerate(chunk):
+            E[j] = bool(op)
+            V[j] = True
+            if codes is not None:
+                PR[j] = codes[start + j]
+            PW[j, 0] = start + j
+        if codes is not None:
+            tier, pos, mt, dv, dok, _ovf, _aux = elastic.step(E, V, PR, PW)
+        else:
+            pos, mt, dv, dok, _ovf = elastic.step(E, V, PW)
+            tier = pos
+        pos = np.asarray(pos)[:m]
+        mt = np.asarray(mt)[:m]
+        tier = np.asarray(tier)[:m]
+        dv = np.asarray(dv)[:m]
+        dok = np.asarray(dok)[:m]
+        for j, op in enumerate(chunk):
+            res = int(dv[j, 0]) if (not op) and mt[j] and dok[j] else None
+            outs.append((int(pos[j]), bool(mt[j]), res, int(tier[j])))
+        if ci in SCHEDULE:
+            kind, arg = SCHEDULE[ci]
+            if kind == "grow":
+                elastic.grow(arg)
+            else:
+                elastic.shrink(arg)
+        start += m
+    return outs
+
+
+def assert_twin(make):
+    # compact run == full-width run, bit-identically (ops AND state)
+    a = make()
+    b = make()
+    codes = {"queue": None, "stack": None,
+             "pqueue": PRIOS, "squeue": KEYS}[a._kind]
+    out_a = run_device(a, 2, codes=codes, compact=True)
+    out_b = run_device(b, 2, codes=codes, compact=False)
+    assert out_a == out_b, (a._kind, "per-op outputs differ across widths")
+    sa, sb = a._state_dict(), b._state_dict()
+    for k in sa:
+        xa, xb = np.asarray(sa[k]), np.asarray(sb[k])
+        if k in a._sharded_keys:
+            # the store's trailing junk row is write-only scratch for the
+            # wave's padding requests — more padding at wider envelopes
+            # legitimately leaves different garbage there; every live and
+            # stale data row must still match bit for bit
+            xa, xb = xa[:, :-1], xb[:, :-1]
+        assert np.array_equal(xa, xb), \
+            (a._kind, k, "final device state differs across widths")
+    return a, out_a
+
+
+# ---- FIFO / LIFO: width-mixed == full width, plus op-by-op parity with
+#      a direct sequentially-consistent host replay of the op stream
+#      (positions are wave-partition independent for both orders) ----
+q, fifo_out = assert_twin(lambda: ElasticDeviceQueue(
+    4, cap=32, payload_width=2, ops_per_shard=L))
+first, last, vals, ref = 0, -1, {}, []
+for j, op in enumerate(OPS):
+    if op:
+        last += 1
+        vals[last] = j
+        ref.append((last, True, None))
+    elif first <= last:
+        ref.append((first, True, vals[first]))
+        first += 1
+    else:
+        ref.append((-1, False, None))
+assert [(d[0], d[1], d[2]) for d in fifo_out] == ref, "queue replay"
+assert q.size == last - first + 1
+print("OK mixed queue")
+
+s, lifo_out = assert_twin(lambda: ElasticDeviceStack(
+    4, cap=32, payload_width=2, ops_per_shard=L, slot_depth=8))
+depth, stk, ref = 0, [], []
+for j, op in enumerate(OPS):
+    if op:
+        depth += 1
+        stk.append(j)
+        ref.append((depth, True, None))
+    elif depth >= 1:
+        ref.append((depth, True, stk.pop()))
+        depth -= 1
+    else:
+        ref.append((-1, False, None))
+assert [(d[0], d[1], d[2]) for d in lifo_out] == ref, "stack replay"
+assert s.size == depth
+print("OK mixed stack")
+
+# ---- priority: twin parity AND op-by-op host-oracle parity ----
+pq, dev = assert_twin(lambda: ElasticDevicePriorityQueue(
+    4, n_prios=P_, cap=32, payload_width=2, ops_per_shard=L))
+oracle = PriorityOracle(P_)
+recs = []
+start = 0
+shards = 4
+for ci, m in enumerate(CHUNKS):
+    wave = []
+    for j in range(start, start + m):
+        if OPS[j]:
+            wave.append((PENQ, PRIOS[j], j, 0))
+        else:
+            wave.append((PDEQ, 0, None, 0))
+    recs.extend(oracle.wave(wave, n_shards=shards))
+    if ci in SCHEDULE:
+        kind, arg = SCHEDULE[ci]
+        shards += arg if kind == "grow" else -len(arg)
+    start += m
+assert len(recs) == len(dev) == len(OPS)
+for j, (d, r) in enumerate(zip(dev, recs)):
+    assert d[1] == r.matched, ("pqueue matched", j)
+    assert d[0] == r.pos, ("pqueue pos", j)
+    if r.matched:
+        assert d[3] == r.tier, ("pqueue tier", j)
+    if r.matched and r.value is not None:
+        assert d[2] == r.value, ("pqueue value", j)
+assert pq.sizes == oracle.sizes
+print("OK mixed pqueue")
+
+# ---- seap: twin parity AND op-by-op host-oracle parity ----
+sq, dev = assert_twin(lambda: ElasticDeviceSeapQueue(
+    4, n_buckets=B_, split_occupancy=SPLIT_OCC, cap=32, payload_width=2,
+    ops_per_shard=L))
+oracle = SeapOracle(B_, split_occupancy=SPLIT_OCC)
+recs = []
+start = 0
+for ci, m in enumerate(CHUNKS):
+    wave = []
+    for j in range(start, start + m):
+        if OPS[j]:
+            wave.append((SENQ, KEYS[j], j))
+        else:
+            wave.append((SDEQ, 0, None))
+    recs.extend(oracle.wave(wave))
+    start += m
+assert len(recs) == len(dev) == len(OPS)
+for j, (d, r) in enumerate(zip(dev, recs)):
+    assert d[1] == r.matched, ("seap matched", j)
+    assert d[0] == r.pos, ("seap pos", j)
+    if r.matched:
+        assert d[3] == r.bucket, ("seap bucket", j)
+    if r.matched and r.value is not None:
+        assert d[2] == r.value, ("seap value", j)
+assert sq.sizes == oracle.sizes
+assert sq.directory() == oracle.directory()
+print("OK mixed seap")
+"""
+
+
+@given(st.lists(st.booleans(), min_size=16, max_size=40),
+       st.integers(0, 2 ** 31 - 1), st.integers(0, 2))
+@settings(max_examples=2, deadline=None)
+def test_mixed_bucket_widths_match_oracles_and_full_width_8dev(
+        ops, seed, n_events):
+    """PR 9 property: random op streams chunked into single waves riding
+    RANDOM ladder widths, with JOIN/LEAVE between waves, are op-by-op
+    equal to the host oracles and bit-identical (outputs and final state)
+    to the identical wave partition ridden at the full envelope width."""
+    rng = np.random.default_rng(seed)
+    n_prios = int(rng.integers(2, 4))
+    prios = [int(p) for p in rng.integers(0, n_prios, len(ops))]
+    keys = [int(k) for k in rng.integers(-1000, 1000, len(ops))]
+    # partition into chunks that always fit ONE wave at the minimum
+    # membership the schedule can reach (2 shards x L=4)
+    chunks = []
+    left = len(ops)
+    while left:
+        m = int(rng.integers(1, min(8, left) + 1))
+        chunks.append(m)
+        left -= m
+    schedule = {}
+    shards = 4
+    for idx in sorted(rng.choice(np.arange(len(chunks)),
+                                 size=min(n_events, len(chunks)),
+                                 replace=False).tolist()):
+        if rng.random() < 0.5 and shards <= 6:
+            k = int(rng.integers(1, min(2, 8 - shards) + 1))
+            schedule[int(idx)] = ("grow", k)
+            shards += k
+        elif shards >= 3:
+            m = int(rng.integers(1, min(2, shards - 2) + 1))
+            ids = sorted(rng.choice(np.arange(shards), size=m,
+                                    replace=False).tolist())
+            schedule[int(idx)] = ("shrink", [int(i) for i in ids])
+            shards -= m
+    script = MIXED_BUCKETS % {
+        "ops": [bool(o) for o in ops], "prios": prios, "keys": keys,
+        "chunks": chunks, "width_seed": int(rng.integers(2 ** 31)),
+        "schedule": schedule, "n_prios": n_prios}
+    out = run_multidev(script, n_dev=8)
+    for tag in ("queue", "stack", "pqueue", "seap"):
+        assert f"OK mixed {tag}" in out
+
+
+# --------------------------------------------------------------------------
+# HLO matrix: every ladder width keeps the exact 2-all_to_all contract and
+# the all_to_all operand shapes shrink strictly with the width.
+# --------------------------------------------------------------------------
+BUCKET_HLO = r"""
+import re
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.dqueue import (DeviceQueue, DeviceStack, DevicePriorityQueue,
+                          DeviceSeapQueue)
+from repro.dqueue.wave_engine import bucket_ladder
+from repro.analysis.hlo import compiled_text, parse_hlo
+
+mesh = make_mesh((8,), ("data",))
+L = 8
+LADDER = bucket_ladder(L)
+assert LADDER == (2, 4, 8), LADDER
+
+
+def a2a_elems(fn, args):
+    prog = parse_hlo(compiled_text(fn, args))
+    a2a = [op for op in prog.ops if op.opcode == "all-to-all"]
+    total = 0
+    for op in a2a:
+        for dims in re.findall(r"\[([\d,]*)\]", op.shape):
+            total += int(np.prod([int(d) for d in dims.split(",") if d])
+                         if dims else 1)
+    return len(a2a), total
+
+
+CASES = [
+    ("queue", lambda: DeviceQueue(
+        mesh, "data", cap=32, payload_width=2, ops_per_shard=L), 0),
+    ("stack", lambda: DeviceStack(
+        mesh, "data", cap=32, payload_width=2, ops_per_shard=L,
+        slot_depth=8), 0),
+    ("priority", lambda: DevicePriorityQueue(
+        mesh, "data", n_prios=2, cap=32, payload_width=2,
+        ops_per_shard=L), 2),
+    ("seap", lambda: DeviceSeapQueue(
+        mesh, "data", n_buckets=4, cap=32, payload_width=2,
+        ops_per_shard=L), 50),
+]
+for name, make, kmax in CASES:
+    q = make()
+    sizes = []
+    for w in LADDER:
+        n = 8 * w
+        args = [q.init_state(), jnp.zeros(n, bool), jnp.zeros(n, bool)]
+        if kmax:
+            args.append(jnp.zeros(n, jnp.int32))
+        args.append(jnp.zeros((n, 2), jnp.int32))
+        count, elems = a2a_elems(q._step, tuple(args))
+        assert count == 2, (name, w, count)
+        sizes.append(elems)
+    assert sizes[0] < sizes[1] < sizes[2], (name, sizes)
+    print(f"OK bucket-hlo {name}: a2a elems {sizes}")
+"""
+
+
+def test_bucket_hlo_matrix_two_a2a_and_strictly_smaller_shapes_8dev():
+    """PR 9 HLO matrix: for every discipline and every ladder width the
+    step program stays EXACTLY 2 all_to_all, and the total all_to_all
+    operand element count strictly shrinks with the envelope width."""
+    out = run_multidev(BUCKET_HLO, n_dev=8, timeout=900)
+    for name in ("queue", "stack", "priority", "seap"):
+        assert f"OK bucket-hlo {name}" in out
+
+
+# --------------------------------------------------------------------------
+# The perf regression gate (benchmarks/gate.py): pure-python logic units.
+# The gate has no jax dependency; load it by path so the namespace-package
+# layout of benchmarks/ doesn't matter under pytest.
+# --------------------------------------------------------------------------
+def _load_gate():
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "gate.py")
+    spec = importlib.util.spec_from_file_location("bench_gate", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _fake_bench(wps=100.0, speedup=1.7):
+    rows = {}
+    for occ in ("5%", "25%", "100%"):
+        sp = speedup if occ != "100%" else 1.0
+        rows[occ] = {"compact": {"waves_per_sec": wps * sp},
+                     "full": {"waves_per_sec": wps},
+                     "speedup_waves_per_sec": sp}
+    return {"occupancy": {"disciplines": {"queue": dict(rows),
+                                          "priority": dict(rows)}}}
+
+
+def test_gate_passes_within_tolerance_and_fails_beyond():
+    gate = _load_gate()
+    base = gate.build_baseline(_fake_bench())
+    assert gate.check(_fake_bench(), base) == []
+    # a 20% dip is inside the 25% band
+    assert gate.check(_fake_bench(wps=80.0), base) == []
+    # a 30% dip on waves/sec trips every throughput floor it touches
+    fails = gate.check(_fake_bench(wps=70.0), base)
+    assert fails and all("below baseline" in f for f in fails)
+    # a collapsed compact speedup trips the machine-portable ratio floor
+    fails = gate.check(_fake_bench(speedup=1.1), base)
+    assert any("below the committed floor" in f for f in fails)
+    # missing metrics are failures, not silent skips
+    fails = gate.check({"occupancy": {"disciplines": {}}}, base)
+    assert fails and any("missing" in f for f in fails)
+
+
+def test_gate_tracks_committed_baseline_schema():
+    """The committed BENCH_BASELINE.json must cover exactly the tracked
+    metrics (refreshed via ``--update``, never hand-edited)."""
+    import json
+    import os
+    gate = _load_gate()
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_BASELINE.json")
+    with open(path) as f:
+        base = json.load(f)
+    assert set(base["throughput"]) == set(gate.TRACKED_THROUGHPUT)
+    assert set(base["ratio_floors"]) == set(gate.RATIO_FLOORS)
+    assert all(v > 0 for v in base["throughput"].values())

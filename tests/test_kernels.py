@@ -8,7 +8,10 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.hash_route import hash_route_pallas, hash_route_ref
-from repro.kernels.segscan import queue_scan_pallas, queue_scan_ref
+from repro.kernels.segscan import (make_tier_scan, priority_queue_scan_pallas,
+                                   queue_scan_pallas, queue_scan_ref,
+                                   stack_scan_pallas,
+                                   tiered_queue_scan_pallas)
 from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_scan_ref
 
 
@@ -41,6 +44,113 @@ def test_segscan_property(seed, n, pre):
     # invariant: matched dequeue positions are unique & consumed FIFO
     deq_pos = np.asarray(pk)[np.asarray(mk) & ~np.asarray(e)]
     assert len(set(deq_pos.tolist())) == len(deq_pos)
+
+
+# ------------------------------------------- segscan PR 9 fused sweeps -----
+@pytest.mark.parametrize("n", [64, 1024, 2048 + 256])
+@pytest.mark.parametrize("p_push", [0.3, 0.7])
+def test_stack_scan_pallas_matches_core(n, p_push):
+    """Max-plus pallas sweep == core.scan_queue.stack_scan bit for bit."""
+    from repro.core.scan_queue import StackState, stack_scan
+
+    rng = np.random.default_rng(n + int(p_push * 10))
+    is_push = jnp.array(rng.random(n) < p_push)
+    valid = jnp.array(rng.random(n) < 0.85)
+    l0, t0 = jnp.int32(5), jnp.int32(11)
+    pk, tk, mk, nlk, ntk = stack_scan_pallas(is_push, valid, l0, t0)
+    pr, tr, mr, ss = stack_scan(is_push, StackState(l0, t0), valid=valid)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr))
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+    assert (int(nlk), int(ntk)) == (int(ss.last), int(ss.ticket))
+
+
+@pytest.mark.parametrize("n,n_tiers", [(300, 3), (1024, 1), (2048, 8)])
+def test_tiered_scan_pallas_matches_core_hook_contract(n, n_tiers):
+    """ONE grid-(tiers, tiles) pallas sweep == the per-tier masked
+    min-plus loop, for the enqueue positions AND the lasts update."""
+    from repro.core.scan_queue import priority_queue_scan
+
+    rng = np.random.default_rng(n * n_tiers)
+    enq = jnp.array(rng.random(n) < 0.6)
+    tier = jnp.array(rng.integers(0, n_tiers, n), jnp.int32)
+    firsts = jnp.array(rng.integers(0, 5, n_tiers), jnp.int32)
+    lasts = firsts + jnp.array(rng.integers(-1, 4, n_tiers), jnp.int32)
+    pos_k, nl_k = tiered_queue_scan_pallas(enq, tier, firsts, lasts,
+                                           n_tiers=n_tiers)
+    # oracle: enqueue-only priority scan (valid=enq so no dequeues move
+    # firsts; tier array doubles as the priority key)
+    t_r, pos_r, m_r, nf_r, nl_r, _ = priority_queue_scan(
+        enq, tier, enq, firsts, lasts, n_prios=n_tiers)
+    np.testing.assert_array_equal(
+        np.asarray(pos_k), np.where(np.asarray(m_r), np.asarray(pos_r), -1))
+    np.testing.assert_array_equal(np.asarray(nl_k), np.asarray(nl_r))
+    np.testing.assert_array_equal(np.asarray(nf_r), np.asarray(firsts))
+
+
+@pytest.mark.parametrize("n,n_prios", [(200, 2), (1024, 4)])
+def test_priority_scan_pallas_and_tier_scan_hook(n, n_prios):
+    """The fused priority entry point AND the tier_scan hook threaded
+    through the core scan both reproduce the core loop exactly."""
+    from repro.core.scan_queue import priority_queue_scan
+
+    rng = np.random.default_rng(n + n_prios)
+    enq = jnp.array(rng.random(n) < 0.55)
+    valid = jnp.array(rng.random(n) < 0.85)
+    prio = jnp.array(rng.integers(0, n_prios, n), jnp.int32)
+    firsts = jnp.zeros(n_prios, jnp.int32)
+    lasts = jnp.full(n_prios, -1, jnp.int32)
+    ref = priority_queue_scan(enq, prio, valid, firsts, lasts,
+                              n_prios=n_prios)
+    fused = priority_queue_scan_pallas(enq, prio, valid, firsts, lasts,
+                                       n_prios=n_prios)
+    hooked = priority_queue_scan(enq, prio, valid, firsts, lasts,
+                                 n_prios=n_prios,
+                                 tier_scan=make_tier_scan(n_prios))
+    for a, b in zip(fused, ref[:5]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(hooked, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_seap_scan_with_tier_scan_hook_matches_core():
+    """seap_queue_scan with the pallas bucket sweep == the jnp loop,
+    including the directory rebalance outputs."""
+    from repro.core.scan_queue import seap_queue_scan
+    from repro.core.seap import INT32_MAX, INT32_MIN
+
+    B = 4
+    rng = np.random.default_rng(7)
+    n = 640
+    enq = jnp.array(rng.random(n) < 0.6)
+    valid = jnp.array(rng.random(n) < 0.85)
+    key = jnp.array(rng.integers(-100, 100, n), jnp.int32)
+    firsts = jnp.zeros(B, jnp.int32)
+    lasts = jnp.full(B, -1, jnp.int32)
+    lo = jnp.array([INT32_MIN, INT32_MAX, INT32_MAX, INT32_MAX], jnp.int32)
+    active = jnp.array([True, False, False, False])
+    args = (enq, key, valid, firsts, lasts, lo, active,
+            jnp.int32(INT32_MAX), jnp.int32(INT32_MIN))
+    ref = seap_queue_scan(*args, n_buckets=B, split_occupancy=48)
+    hooked = seap_queue_scan(*args, n_buckets=B, split_occupancy=48,
+                             tier_scan=make_tier_scan(B))
+    for a, b in zip(hooked, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_default_interpret_env_override(monkeypatch):
+    """REPRO_PALLAS_INTERPRET pins the backend autodetect both ways."""
+    from repro.kernels import backend
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert backend.default_interpret() is True
+    assert backend.use_fused_dispatch() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert backend.default_interpret() is False
+    assert backend.use_fused_dispatch() is True
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    import jax
+    assert backend.default_interpret() == (jax.default_backend() == "cpu")
 
 
 # --------------------------------------------------------- hash_route ------

@@ -30,14 +30,15 @@ def test_metrics_ring_record_and_drain():
     assert m.rows.shape == (1, 8, row_width(2))
     for k in range(3):
         row = jnp.array([k, 10 + k, 20 + k, 30 + k, 40 + k, 50 + k,
-                         60 + k, 70 + k, 80 + k], jnp.int32)
+                         60 + k, 70 + k, 80 + k, 90 + k], jnp.int32)
         m = record_row(m, row)
     from repro.obs.device import drain
     rows = drain(m)
     assert len(rows) == 3
     assert [r["seq"] for r in rows] == [0, 1, 2]
     assert rows[1]["puts"] == 11 and rows[1]["gets"] == 21
-    assert rows[2]["occ"] == [72, 82]
+    assert rows[2]["width"] == 72
+    assert rows[2]["occ"] == [82, 92]
     assert set(rows[0]) == set(METRIC_HEAD) | {"occ"}
 
 
@@ -47,7 +48,7 @@ def test_metrics_ring_wraparound_keeps_last_k():
 
     m = init_metrics_state(1, ring=4, n_windows=1)
     for k in range(7):
-        m = record_row(m, jnp.array([k, 0, 0, 0, 0, 0, 0, k], jnp.int32))
+        m = record_row(m, jnp.array([k, 0, 0, 0, 0, 0, 0, 0, k], jnp.int32))
     rows = drain(m)
     assert len(rows) == 4, "ring keeps the last K waves only"
     assert [r["seq"] for r in rows] == [3, 4, 5, 6]
