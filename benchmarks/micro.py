@@ -92,6 +92,16 @@ committed ``BENCH_BASELINE.json`` floors (CI fails a >25% regression):
     PYTHONPATH=src python -m benchmarks.micro --pr9 [path] [--quick]
     PYTHONPATH=src python -m benchmarks.gate BENCH_PR9.json
 
+**PR 10 (the runtime seam).**  ``BENCH_PR10.json`` prices the pluggable
+mesh-runtime layer: a LocalRuntime parity section (the runtime-built
+wave path asserted BIT-identical to the bare-mesh PR 9 path), a
+SimRuntime latency sweep (steady-state waves/sec and the migration-wave
+cost under modeled per-collective costs of 0 us / 100 us / 1 ms), and
+the same measurement over a REAL wire — 2 ``jax.distributed`` processes
+on localhost TCP via ``repro.runtime.launch_localhost``:
+
+    PYTHONPATH=src python -m benchmarks.micro --pr10 [path] [--quick]
+
 ``--all [--quick]`` runs EVERY emitter above (the CI bench-smoke entry
 point: one invocation emits every BENCH_PR*.json, and any emitter crash
 fails the run — future PRs add an emitter here instead of editing the
@@ -1342,6 +1352,194 @@ def emit_bench_pr9(path: str = "BENCH_PR9.json", n_dev: int = 8,
     return data
 
 
+PR10_WIRE_MARK = "PR10-WIRE-JSON "
+
+_PR10_WIRE_CHILD = r"""
+import json
+import time
+
+import numpy as np
+
+from repro.runtime import DistributedRuntime
+
+rt = DistributedRuntime.from_env()      # BEFORE any jax computation
+
+from repro.dqueue import ElasticDeviceQueue
+
+q = ElasticDeviceQueue(6, cap=64, payload_width=2, ops_per_shard=8,
+                       runtime=rt)
+K, reps = %(K)d, %(reps)d
+n = q.n_shards * q.L
+zb = np.zeros((K, n), bool)
+zi = np.zeros((K, n, 2), np.int32)
+q.run_waves(zb, zb, zi)                    # compile + warm the socket path
+rt.sync()
+t = time.perf_counter()
+for _ in range(reps):
+    q.run_waves(zb, zb, zi)
+rt.sync()
+steady_s = time.perf_counter() - t
+ones = np.ones(n, bool)
+fill = np.arange(n * 2, dtype=np.int32).reshape(n, 2)
+for _ in range(4):
+    q.step(ones, ones, fill)
+rt.sync()
+t = time.perf_counter()
+q.grow(2)
+grow_s = time.perf_counter() - t
+t = time.perf_counter()
+q.shrink([6, 7])
+shrink_s = time.perf_counter() - t
+out = {
+    "n_procs": rt.process_role.count,
+    "n_shards": 6,
+    "waves": K * reps,
+    "real_waves_per_sec": (K * reps) / steady_s,
+    "migration": {
+        "grow_us": grow_s * 1e6,
+        "grow_bytes_moved": int(q.migrations[-2]["bytes_moved"]),
+        "shrink_us": shrink_s * 1e6,
+        "shrink_bytes_moved": int(q.migrations[-1]["bytes_moved"]),
+    },
+}
+if rt.process_role.coordinator:
+    print("%(mark)s" + json.dumps(out))
+"""
+
+
+def _measure_pr10_parity(n_dev: int, waves: int) -> dict:
+    """Assert the runtime seam is behavior-preserving: the same op stream
+    through a bare-mesh DeviceQueue (the PR 9 path) and a
+    LocalRuntime-built one must be BIT-identical, state and outputs."""
+    from repro.dqueue import DeviceQueue
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.runtime import LocalRuntime
+
+    mesh = make_elastic_mesh(n_dev)
+    n = n_dev * 8
+    rng = np.random.default_rng(17)
+    ops = [(rng.random(n) < 0.5, rng.random(n) < 0.85,
+            rng.integers(0, 1 << 20, (n, 2)).astype(np.int32))
+           for _ in range(waves)]
+
+    def drive(q):
+        st = q.init_state()
+        outs = []
+        for e, v, pw in ops:
+            st, *rest = q.step(st, e, v, pw)
+            outs.append([np.asarray(x) for x in rest])
+        return outs, [np.asarray(x) for x in jax.tree.leaves(st)]
+
+    a, sa = drive(DeviceQueue(mesh, "data", cap=64, payload_width=2,
+                              ops_per_shard=8))
+    b, sb = drive(DeviceQueue(
+        LocalRuntime(devices=list(mesh.devices.flat)), cap=64,
+        payload_width=2, ops_per_shard=8))
+    for xa, xb in zip(a, b):
+        for ya, yb in zip(xa, xb):
+            assert (ya == yb).all(), "runtime path diverged from mesh path"
+    for la, lb in zip(sa, sb):
+        assert (la == lb).all(), "runtime path diverged in final state"
+    return {"bit_identical": True, "waves": waves, "n_shards": n_dev}
+
+
+def _measure_pr10_sim_sweep(n_dev: int, K: int, quick: bool) -> dict:
+    """Steady-state waves/sec and migration-wave cost under the SimRuntime
+    latency points {0us, 100us, 1ms} (base per-collective cost; 8 us/MiB
+    on the wire everywhere)."""
+    from repro.dqueue import ElasticDeviceQueue
+    from repro.runtime import LatencyModel, SimRuntime
+
+    reps = 3 if quick else 10
+    P0 = n_dev - 2
+    out = {}
+    for base_us in (0.0, 100.0, 1000.0):
+        sim = SimRuntime(latency=LatencyModel(base_us=base_us,
+                                              per_mib_us=8.0))
+        q = ElasticDeviceQueue(P0, cap=64, payload_width=2,
+                               ops_per_shard=8, runtime=sim)
+        n = q.n_shards * q.L
+        zb = np.zeros((K, n), bool)
+        zi = np.zeros((K, n, 2), np.int32)
+        q.run_waves(zb, zb, zi)            # compile
+        wire0 = sim.sim_time_s
+        t = time.perf_counter()
+        for _ in range(reps):
+            q.run_waves(zb, zb, zi)
+        real_s = time.perf_counter() - t
+        n_waves = K * reps
+        wire_s = sim.sim_time_s - wire0
+        # fill before migrating so the packed-migration wave carries a
+        # real payload (an empty queue moves zero bytes)
+        ones = np.ones(n, bool)
+        fill = np.arange(n * 2, dtype=np.int32).reshape(n, 2)
+        for _ in range(4):
+            q.step(ones, ones, fill)
+        q.grow(2)
+        grow = dict(q.migrations[-1])
+        q.shrink([P0, P0 + 1])
+        shrink = dict(q.migrations[-1])
+        # modeled waves/sec = compute-bound rate slowed by the modeled
+        # wire (serial launches); the 3-point sweep prices the pipelined
+        # K+1 schedule under LAN/WAN regimes
+        modeled = n_waves / (real_s + wire_s)
+        out[f"{base_us:g}us"] = {
+            "real_waves_per_sec": n_waves / real_s,
+            "sim_wire_us_per_wave": wire_s / n_waves * 1e6,
+            "modeled_waves_per_sec": modeled,
+            "migration": {
+                "grow_bytes_moved": int(grow["bytes_moved"]),
+                "grow_sim_us": float(grow["sim_s"]) * 1e6,
+                "shrink_bytes_moved": int(shrink["bytes_moved"]),
+                "shrink_sim_us": float(shrink["sim_s"]) * 1e6,
+            },
+        }
+    return out
+
+
+def _measure_pr10_wire(K: int, quick: bool) -> dict:
+    """The same steady-state + migration measurement on the REAL wire: 2
+    jax.distributed processes over localhost TCP (gloo collectives)."""
+    from repro.runtime import launch_localhost
+
+    reps = 2 if quick else 5
+    code = _PR10_WIRE_CHILD % {"K": K, "reps": reps,
+                               "mark": PR10_WIRE_MARK}
+    results = launch_localhost(code=code, n_procs=2, devs_per_proc=4,
+                               timeout=420.0)
+    for line in results[0].stdout.splitlines():
+        if line.startswith(PR10_WIRE_MARK):
+            return json.loads(line[len(PR10_WIRE_MARK):])
+    raise RuntimeError(
+        f"2-process wire child emitted no result:\n{results[0].stdout}\n"
+        f"{results[0].stderr}")
+
+
+def emit_bench_pr10(path: str = "BENCH_PR10.json", n_dev: int = 8,
+                    K: int = 16, quick: bool = False) -> dict:
+    """Price the runtime seam (PR 10): LocalRuntime parity (asserted
+    bit-identical vs the bare-mesh path), migration-wave cost and
+    steady-state waves/sec under SimRuntime latency points
+    {0us, 100us, 1ms}, and the same on a real 2-process localhost wire.
+    Writes JSON (re-execs on a forced ``n_dev``-device CPU mesh)."""
+    if not os.path.isabs(path):
+        path = os.path.join(_REPO_ROOT, path)
+    child = _reexec_on_mesh(
+        "PR10", path, n_dev,
+        ["--pr10", path, "--n-dev", str(n_dev), "--waves", str(K)]
+        + (["--quick"] if quick else []))
+    if child is not None:
+        return child
+    data = {
+        "parity": _measure_pr10_parity(n_dev, waves=4 if quick else 12),
+        "sim_sweep": _measure_pr10_sim_sweep(n_dev, K=K, quick=quick),
+        "wire_2proc": _measure_pr10_wire(K=max(4, K // 4), quick=quick),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
+
+
 # PR numbers that deliberately ship NO benchmark emitter.  emit_all
 # prints one explicit skip line per entry so a missing BENCH_PRn.json in
 # the CI artifact is documented output, not a silent gap (PR 8 satellite
@@ -1373,6 +1571,8 @@ def emit_all(quick: bool = False, n_dev: int = 8) -> dict:
                 ("BENCH_PR8.json", lambda p: emit_bench_pr8(
                      p, n_dev=n_dev, quick=quick)),
                 ("BENCH_PR9.json", lambda p: emit_bench_pr9(
+                     p, n_dev=n_dev, quick=quick)),
+                ("BENCH_PR10.json", lambda p: emit_bench_pr10(
                      p, n_dev=n_dev, quick=quick))]
     for path, why in sorted(_NO_BENCH.items()):
         print(f"bench: skipping {path} ({why})")
@@ -1451,6 +1651,11 @@ if __name__ == "__main__":
     ap.add_argument("--pr9", nargs="?", const="BENCH_PR9.json", default=None,
                     help="measure occupancy-adaptive compact waves vs the "
                          "full envelope and write BENCH_PR9.json")
+    ap.add_argument("--pr10", nargs="?", const="BENCH_PR10.json",
+                    default=None,
+                    help="measure the runtime seam: LocalRuntime parity, "
+                         "SimRuntime latency sweep, and the 2-process "
+                         "localhost wire; write BENCH_PR10.json")
     ap.add_argument("--all", action="store_true",
                     help="run every BENCH_PR*.json emitter (CI bench smoke)")
     ap.add_argument("--quick", action="store_true",
@@ -1489,6 +1694,10 @@ if __name__ == "__main__":
     elif cli.pr9:
         out = emit_bench_pr9(cli.pr9, n_dev=cli.n_dev, K=cli.waves,
                              quick=cli.quick)
+        print(json.dumps(out, indent=2))
+    elif cli.pr10:
+        out = emit_bench_pr10(cli.pr10, n_dev=cli.n_dev, K=cli.waves,
+                              quick=cli.quick)
         print(json.dumps(out, indent=2))
     else:
         for row in run_all():

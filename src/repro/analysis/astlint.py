@@ -21,6 +21,19 @@ Three structural rules over the device-path modules (``dqueue/*``,
   an unbudgeted device→host sync per wave.  Telemetry reads device state
   ONLY via the sanctioned Wavescope drain (``repro.obs.device.drain`` /
   ``WaveEngine.drain_metrics`` at burst boundaries), which is exempt.
+
+PR 10 adds a fifth rule with its own (wider) module scope:
+
+* ``no-direct-mesh`` — ``jax.devices()`` / ``jax.sharding.Mesh(...)`` /
+  ``make_mesh`` and friends anywhere in ``dqueue/``, ``serve/``,
+  ``fault/``, or ``obs/``.  Device topology is owned by the
+  :class:`repro.runtime.Runtime` seam — a layer that constructs its own
+  mesh pins the stack to the one-process XLA world and breaks the
+  distributed/simulated runtimes.  ``repro.runtime`` itself and
+  ``launch/mesh.py`` (the seam and its public helper) are the only
+  places allowed to touch global device state.  This rule is NOT in
+  :data:`DEFAULT_RULES` (``lint_source`` behavior is unchanged);
+  ``lint_paths`` applies it over :data:`MESH_SCOPE_MODULES`.
 """
 from __future__ import annotations
 
@@ -58,6 +71,30 @@ DEFAULT_MODULES = (
     "src/repro/core/scan_queue.py",
     "src/repro/serve/engine.py",
 )
+
+# the four original structural rules; lint_source runs exactly these
+# unless told otherwise, so PR <10 callers see identical behavior
+DEFAULT_RULES = frozenset({
+    "no-bare-assert", "no-traced-cast", "no-block-in-burst",
+    "no-host-callback-in-wave",
+})
+
+# where the no-direct-mesh rule applies: every layer above the runtime
+# seam (the acceptance surface of the PR 10 refactor)
+MESH_SCOPE_MODULES = (
+    "src/repro/dqueue",
+    "src/repro/serve",
+    "src/repro/fault",
+    "src/repro/obs",
+)
+
+# direct device-topology constructions the runtime seam owns: the
+# builders ("Mesh", "make_mesh", launch helpers) and the global device
+# enumerations ("devices" catches jax.devices / jax.local_devices)
+_MESH_CALLS = frozenset({
+    "Mesh", "make_mesh", "make_elastic_mesh", "make_host_mesh",
+    "make_production_mesh", "devices", "local_devices", "device_count",
+})
 
 
 def _callee_tail(func: ast.expr) -> str:
@@ -98,8 +135,10 @@ class _DeviceScopeFinder(ast.NodeVisitor):
 
 
 class _ModuleLinter(ast.NodeVisitor):
-    def __init__(self, path: str, tree: ast.Module) -> None:
+    def __init__(self, path: str, tree: ast.Module,
+                 rules: "Iterable[str] | None" = None) -> None:
         self.path = path
+        self.rules = frozenset(DEFAULT_RULES if rules is None else rules)
         self.violations: List[Violation] = []
         finder = _DeviceScopeFinder()
         finder.visit(tree)
@@ -126,6 +165,9 @@ class _ModuleLinter(ast.NodeVisitor):
 
     # ------------------------------------------------------------ rules ---
     def visit_Assert(self, node: ast.Assert) -> None:
+        if "no-bare-assert" not in self.rules:
+            self.generic_visit(node)
+            return
         self.violations.append(Violation(
             "repo_ast", f"{self.path}:{node.lineno}",
             "bare assert in a device-path module — raise a structured "
@@ -135,7 +177,18 @@ class _ModuleLinter(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call) -> None:
         tail = _callee_tail(node.func)
-        if tail in _CASTS and self._in_device_scope() \
+        if tail in _MESH_CALLS and "no-direct-mesh" in self.rules:
+            self.violations.append(Violation(
+                "repo_ast", f"{self.path}:{node.lineno}",
+                f"direct device-topology call '{tail}(...)' above the "
+                "runtime seam — meshes and device pools are owned by "
+                "repro.runtime.Runtime (mesh()/pool()/reshard_devices); "
+                "constructing them here pins the layer to the "
+                "one-process XLA world",
+                {"check": "no-direct-mesh", "line": node.lineno,
+                 "callee": tail}))
+        if "no-traced-cast" in self.rules and tail in _CASTS \
+                and self._in_device_scope() \
                 and isinstance(node.func, ast.Name):
             fn = ".".join(n for n, _ in self._scope)
             self.violations.append(Violation(
@@ -144,7 +197,8 @@ class _ModuleLinter(ast.NodeVisitor):
                 f"'{fn}' — concretizes the trace / syncs the host",
                 {"check": "no-traced-cast", "line": node.lineno,
                  "scope": fn}))
-        if tail in _HOST_CALLBACKS and self._in_device_scope() \
+        if "no-host-callback-in-wave" in self.rules \
+                and tail in _HOST_CALLBACKS and self._in_device_scope() \
                 and self._scope[-1][0] not in _OBS_DRAIN_API:
             fn = ".".join(n for n, _ in self._scope)
             self.violations.append(Violation(
@@ -155,7 +209,8 @@ class _ModuleLinter(ast.NodeVisitor):
                 "burst boundaries (repro.obs.device.drain)",
                 {"check": "no-host-callback-in-wave", "line": node.lineno,
                  "scope": fn}))
-        if tail == "block_until_ready" and self._loops > 0:
+        if "no-block-in-burst" in self.rules \
+                and tail == "block_until_ready" and self._loops > 0:
             self.violations.append(Violation(
                 "repo_ast", f"{self.path}:{node.lineno}",
                 ".block_until_ready() inside a burst loop serializes "
@@ -174,9 +229,10 @@ class _ModuleLinter(ast.NodeVisitor):
         self._loops -= 1
 
 
-def lint_source(src: str, path: str = "<string>") -> List[Violation]:
+def lint_source(src: str, path: str = "<string>",
+                rules: "Iterable[str] | None" = None) -> List[Violation]:
     tree = ast.parse(src)
-    linter = _ModuleLinter(path, tree)
+    linter = _ModuleLinter(path, tree, rules=rules)
     linter.visit(tree)
     return linter.violations
 
@@ -203,13 +259,24 @@ def _repo_root() -> str:
 def lint_paths(modules: Sequence[str] = DEFAULT_MODULES,
                root: "str | None" = None
                ) -> "tuple[List[Violation], Dict[str, object]]":
+    """Lint the wave-path modules.
+
+    Files under ``modules`` get :data:`DEFAULT_RULES`; files under
+    :data:`MESH_SCOPE_MODULES` additionally get ``no-direct-mesh``
+    (rule sets union where the scopes overlap), so the whole layer
+    above the runtime seam is checked for direct topology access even
+    though only the device-path subset runs the structural rules."""
     root = root or _repo_root()
-    files = _expand(root, modules)
+    per_file: Dict[str, Set[str]] = {}
+    for f in _expand(root, modules):
+        per_file.setdefault(f, set()).update(DEFAULT_RULES)
+    for f in _expand(root, MESH_SCOPE_MODULES):
+        per_file.setdefault(f, set()).add("no-direct-mesh")
     violations: List[Violation] = []
-    for f in files:
+    for f in sorted(per_file):
         with open(f, "r", encoding="utf-8") as fh:
             src = fh.read()
         rel = os.path.relpath(f, root)
-        violations.extend(lint_source(src, rel))
+        violations.extend(lint_source(src, rel, rules=per_file[f]))
     return violations, {"files_checked": [os.path.relpath(f, root)
-                                          for f in files]}
+                                          for f in sorted(per_file)]}

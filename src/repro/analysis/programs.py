@@ -184,6 +184,29 @@ def build_programs(mesh, *, L: int = 2, K: int = 3, cap: int = 16,
         wave_args(legacy, "queue", burst=False), LEGACY_QUEUE_STEP,
         donated_leaves=_n_leaves(legacy.init_state()),
         meta={"discipline": "queue", "legacy": True}))
+    # runtime-constructed twins (PR 10): the SAME entry points built
+    # through a Runtime handle instead of a bare mesh, pinned against
+    # IDENTICAL budgets — the runtime seam must add zero collectives and
+    # leave the donation contract untouched
+    from ..runtime import LocalRuntime
+    rt = LocalRuntime(devices=list(mesh.devices.flat))
+    rt_seq = DeviceQueue(rt, cap=cap, payload_width=W, ops_per_shard=L,
+                         pipelined=False)
+    rt_pipe = DeviceQueue(rt, cap=cap, payload_width=W, ops_per_shard=L,
+                          pipelined=True)
+    rt_leaves = _n_leaves(rt_seq.init_state())
+    specs.append(ProgramSpec(
+        "queue.step[runtime]", rt_seq._step,
+        wave_args(rt_seq, "queue", burst=False),
+        _wave_budget("queue", p, pipelined=False, burst=False),
+        donated_leaves=rt_leaves,
+        meta={"discipline": "queue", "runtime": True}))
+    specs.append(ProgramSpec(
+        "queue.run_waves[pipe,runtime]", rt_pipe._run_waves,
+        wave_args(rt_pipe, "queue", burst=True),
+        _wave_budget("queue", p, pipelined=True, burst=True),
+        donated_leaves=rt_leaves,
+        meta={"discipline": "queue", "runtime": True}))
     return specs
 
 
@@ -192,12 +215,11 @@ def build_migration_programs(*, cap: int = 16, W: int = 2, L: int = 2,
                              ) -> List[ProgramSpec]:
     """The elastic migration wave for all four disciplines, lowered on
     the current elastic mesh as a shrink-shaped reshard (P -> P-2)."""
-    import jax
-
     from ..dqueue import (ElasticDevicePriorityQueue, ElasticDeviceQueue,
                           ElasticDeviceSeapQueue, ElasticDeviceStack)
+    from ..runtime import LocalRuntime
 
-    n_dev = len(jax.devices())
+    n_dev = LocalRuntime().pool_size
     P0 = min(4, n_dev)
     if P0 < 3:
         return []

@@ -149,7 +149,11 @@ class DeviceQueue:
     def __init__(self, mesh, axis_name: str = "data", cap: int = 1024,
                  payload_width: int = 4, ops_per_shard: int = 64,
                  fused: bool = True, pipelined: bool = True,
-                 metrics: bool = False, metrics_ring: int = 64):
+                 metrics: bool = False, metrics_ring: int = 64,
+                 runtime=None):
+        from ..runtime import as_runtime
+        self.runtime, mesh, axis_name = as_runtime(mesh, axis_name,
+                                                   runtime=runtime)
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -166,7 +170,7 @@ class DeviceQueue:
                 mesh, axis_name,
                 FifoDiscipline(axis_name, self.n_shards, cap, payload_width),
                 pipelined=pipelined, metrics=metrics,
-                metrics_ring=metrics_ring)
+                metrics_ring=metrics_ring, runtime=self.runtime)
             self._step = self.engine._step
             self._run_waves = self.engine._run_waves
         else:
@@ -178,17 +182,17 @@ class DeviceQueue:
             self._run_waves = self._build_legacy_run_waves()
 
     def init_state(self) -> DeviceQueueState:
-        """Freshly sharded empty state on this structure's mesh."""
+        """Freshly sharded empty state on this structure's mesh (placed
+        through the runtime handle's data plane)."""
         n, cap, W = self.n_shards, self.cap, self.W
+        put = self.runtime.put
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         rep = jax.sharding.NamedSharding(self.mesh, P())
         return DeviceQueueState(
-            first=jax.device_put(jnp.int32(0), rep),
-            last=jax.device_put(jnp.int32(-1), rep),
-            store_vals=jax.device_put(
-                jnp.zeros((n, cap + 1, W), jnp.int32), sharding),
-            store_full=jax.device_put(
-                jnp.zeros((n, cap + 1), bool), sharding),
+            first=put(jnp.int32(0), rep),
+            last=put(jnp.int32(-1), rep),
+            store_vals=put(jnp.zeros((n, cap + 1, W), jnp.int32), sharding),
+            store_full=put(jnp.zeros((n, cap + 1), bool), sharding),
         )
 
     # ------------------------------------------------------------ step -----
@@ -465,7 +469,10 @@ class DeviceStack:
                  payload_width: int = 4, ops_per_shard: int = 64,
                  slot_depth: int = 4, pipelined: bool = True,
                  metrics: bool = False, metrics_ring: int = 64,
-                 fused_dispatch: bool | None = None):
+                 fused_dispatch: bool | None = None, runtime=None):
+        from ..runtime import as_runtime
+        self.runtime, mesh, axis_name = as_runtime(mesh, axis_name,
+                                                   runtime=runtime)
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -479,22 +486,23 @@ class DeviceStack:
             mesh, axis_name,
             LifoDiscipline(axis_name, self.n_shards, cap, payload_width,
                            slot_depth, fused_dispatch=fused_dispatch),
-            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
+            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring,
+            runtime=self.runtime)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves
 
     def init_state(self):
-        """Freshly sharded empty state on this structure's mesh."""
+        """Freshly sharded empty state on this structure's mesh (placed
+        through the runtime handle's data plane)."""
         n, cap, W, D = self.n_shards, self.cap, self.W, self.D
+        put = self.runtime.put
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         rep = jax.sharding.NamedSharding(self.mesh, P())
         return {
-            "last": jax.device_put(jnp.int32(0), rep),
-            "ticket": jax.device_put(jnp.int32(0), rep),
-            "vals": jax.device_put(jnp.zeros((n, cap + 1, D, W), jnp.int32),
-                                   sharding),
-            "ticks": jax.device_put(jnp.full((n, cap + 1, D), -1, jnp.int32),
-                                    sharding),
+            "last": put(jnp.int32(0), rep),
+            "ticket": put(jnp.int32(0), rep),
+            "vals": put(jnp.zeros((n, cap + 1, D, W), jnp.int32), sharding),
+            "ticks": put(jnp.full((n, cap + 1, D), -1, jnp.int32), sharding),
         }
 
     def step(self, state, is_push, valid, payload):

@@ -93,14 +93,23 @@ class _ElasticBase:
 
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
-                 ops_per_shard: int = 64, devices=None,
+                 ops_per_shard: int = 64, devices=None, runtime=None,
                  hlo_stats: bool = False, pipelined: bool = True,
                  metrics: bool = False, metrics_ring: int = 64,
                  flight_k: int = 16):
-        self._pool = list(devices) if devices is not None else list(jax.devices())
-        if not 1 <= n_shards <= len(self._pool):
+        from ..runtime import LocalRuntime
+        if runtime is not None:
+            if devices is not None:
+                raise ValueError("pass devices= OR runtime=, not both "
+                                 "(the runtime owns the device pool)")
+            self.runtime = runtime
+            axis_name = runtime.axis_name
+        else:
+            self.runtime = LocalRuntime(devices=devices,
+                                        axis_name=axis_name)
+        if not 1 <= n_shards <= self.runtime.pool_size:
             raise ValueError(f"n_shards={n_shards} outside the device pool "
-                             f"of {len(self._pool)}")
+                             f"of {self.runtime.pool_size}")
         self.axis = axis_name
         self.cap = cap
         self.W = payload_width
@@ -110,7 +119,7 @@ class _ElasticBase:
         self.metrics_ring = int(metrics_ring)
         self.recorder = FlightRecorder(flight_k)
         self._hlo_stats = hlo_stats
-        self._active = list(self._pool[:n_shards])
+        self._active = list(self.runtime.pool()[:n_shards])
         self._mesh_cache: Dict[tuple, jax.sharding.Mesh] = {}
         self._inner_cache: Dict[tuple, object] = {}
         self._mig_cache: Dict[tuple, list] = {}
@@ -120,11 +129,11 @@ class _ElasticBase:
 
     # ------------------------------------------------------------ caches ---
     def _mesh_for(self, devices) -> jax.sharding.Mesh:
+        # the runtime is the one mesh builder; the local mirror keeps the
+        # cache inspectable (the wavecheck recompile guard asserts on it)
         key = _mesh_key(devices)
         if key not in self._mesh_cache:
-            from ..launch.mesh import make_elastic_mesh
-            self._mesh_cache[key] = make_elastic_mesh(
-                len(devices), self.axis, devices)
+            self._mesh_cache[key] = self.runtime.mesh(list(devices))
         return self._mesh_cache[key]
 
     def _get_inner(self, mesh):
@@ -274,9 +283,22 @@ class _ElasticBase:
         return pick_bucket_width(self.L, self.n_shards, n_ops)
 
     def _burst_span(self, K: int):
-        """Span wrapping one multi-wave burst dispatch."""
+        """Span wrapping one multi-wave burst dispatch.  Also the
+        runtime's burst-boundary latency hook (SimRuntime charges the
+        modeled K+1 pipelined / 2K sequential all_to_all launches;
+        no-op everywhere else)."""
+        self.runtime.on_burst(self._kind, int(K), self.n_shards,
+                              width=self.L, payload_width=self.W,
+                              pipelined=self.pipelined)
         return span(f"{self._kind}:burst", cat="wave", K=int(K),
                     n_shards=self.n_shards)
+
+    def _place(self, x, lead: int = 0):
+        """Stage one op array onto the active mesh via the runtime
+        (``jnp.asarray`` under LocalRuntime — bit-identical to the
+        pre-runtime path; an explicit global device_put under
+        DistributedRuntime)."""
+        return self.runtime.place(x, self.mesh, lead)
 
     def _check_overflow(self, ovf) -> None:
         """Drain telemetry, then host-raise the wave's replicated
@@ -287,7 +309,7 @@ class _ElasticBase:
         (``run_waves``); this runs once per step/burst, so the recorder
         sees every wave even when nothing overflowed."""
         self._drain_telemetry()
-        o = np.asarray(ovf)
+        o = self.runtime.to_host(ovf)   # replicated scalar/[K] — cheap
         if not bool(o.any()):
             return
         wave = int(np.flatnonzero(o)[0]) if o.ndim >= 1 else None
@@ -303,10 +325,16 @@ class _ElasticBase:
         return len(self._active)
 
     @property
+    def _pool(self) -> list:
+        """The runtime's live device pool (failed devices excluded)."""
+        return self.runtime.pool()
+
+    @property
     def pool_size(self) -> int:
-        """Total devices available to this queue (active + spare); the
-        hard upper bound :meth:`grow` can reach."""
-        return len(self._pool)
+        """Total live devices available to this queue (active + spare);
+        the hard upper bound :meth:`grow` can reach.  Quarantined
+        (failed) devices do not count."""
+        return self.runtime.pool_size
 
     @property
     def mesh(self):
@@ -318,12 +346,24 @@ class _ElasticBase:
         """The active shard devices, in shard-index order."""
         return list(self._active)
 
+    @property
+    def device_ids(self) -> list:
+        """Stable device ids of the active shards, in shard-index order
+        — the membership key failure attribution uses (mesh indices are
+        only stable while membership never changes)."""
+        return [d.id for d in self._active]
+
     def grow(self, k: int = 1) -> dict:
-        """JOIN: add ``k`` shards from the device pool (P → P + k)."""
+        """JOIN: add ``k`` shards from the device pool (P → P + k).
+
+        Spares come from the runtime's *live* pool, so a device the
+        fault layer quarantined (``shrink_devices(..., quarantine=
+        True)``) is never handed back out — a LEAVE of a dead shard
+        followed by a regrow cannot resurrect state on it."""
         if k < 1:
             raise ValueError("grow(k) needs k >= 1")
-        active_keys = {_mesh_key([d]) for d in self._active}
-        spare = [d for d in self._pool if _mesh_key([d]) not in active_keys]
+        active_ids = set(self.device_ids)
+        spare = [d for d in self.runtime.pool() if d.id not in active_ids]
         if len(spare) < k:
             raise ValueError(f"cannot grow by {k}: only {len(spare)} spare "
                              f"devices in the pool")
@@ -346,6 +386,34 @@ class _ElasticBase:
             raise ValueError("cannot shrink to zero shards")
         survivors = [d for i, d in enumerate(self._active) if i not in ids]
         return self._rematerialize(survivors, kind="shrink")
+
+    def shrink_devices(self, dev_ids: Sequence[int], *,
+                       quarantine: bool = False) -> dict:
+        """Graceful LEAVE keyed by **stable device id** instead of mesh
+        index (the PR 10 failure-rekey surface).
+
+        Args:
+          dev_ids: stable ids of the leaving devices (must be active).
+          quarantine: additionally mark them failed in the runtime, so
+            a later :meth:`grow` can never pick them again — the fault
+            layer sets this for failure-LEAVEs (a dead device must not
+            rejoin), and leaves it False for capacity scaling (the
+            autoscaler may legitimately re-JOIN a healthy device).
+
+        Returns:
+          The migration stats dict, like :meth:`shrink`.
+        """
+        ids = [int(i) for i in dev_ids]
+        mine = self.device_ids
+        missing = [i for i in ids if i not in mine]
+        if missing:
+            raise ValueError(f"device id(s) {missing} are not active "
+                             f"shards (active ids: {mine})")
+        stats = self.shrink([mine.index(i) for i in ids])
+        if quarantine:
+            for i in ids:
+                self.runtime.mark_failed(i)
+        return stats
 
     def resize(self, n_new: int) -> dict:
         """Reshape to ``n_new`` shards (grow or shrink as needed)."""
@@ -374,21 +442,25 @@ class _ElasticBase:
         t_total = time.perf_counter()
         a, b, X, Y = self._unpack(self.state)
 
+        rt = self.runtime
         if P_new > P_old:
-            # grow: pad empty shards, route on the NEW mesh
+            # grow: pad empty shards, route on the NEW mesh.  Crossing
+            # between meshes of different device sets is host-staged
+            # through the runtime (np.asarray locally; a process_allgather
+            # + global device_put under DistributedRuntime).
             mig_mesh = self._mesh_for(new_active)
             shard = NamedSharding(mig_mesh, P(self.axis))
             rep = NamedSharding(mig_mesh, P())
             fx, fy = self._pad_fill
-            Xh, Yh = np.asarray(X), np.asarray(Y)
+            Xh, Yh = rt.to_host(X), rt.to_host(Y)
             pad = P_new - P_old
             Xh = np.concatenate(
                 [Xh, np.full((pad,) + Xh.shape[1:], fx, Xh.dtype)])
             Yh = np.concatenate(
                 [Yh, np.full((pad,) + Yh.shape[1:], fy, Yh.dtype)])
-            a = jax.device_put(np.asarray(a), rep)
-            b = jax.device_put(np.asarray(b), rep)
-            X, Y = jax.device_put(Xh, shard), jax.device_put(Yh, shard)
+            a = rt.put(rt.to_host(a), rep)
+            b = rt.put(rt.to_host(b), rep)
+            X, Y = rt.put(Xh, shard), rt.put(Yh, shard)
         else:
             # shrink: route on the OLD mesh (owners are surviving shards)
             mig_mesh = self.mesh
@@ -400,7 +472,7 @@ class _ElasticBase:
         a, b, X, Y, moved, lost = entry[0](a, b, X, Y)
         jax.block_until_ready(Y)
         t_wave = time.perf_counter() - t_wave
-        if bool(np.asarray(lost)):
+        if bool(rt.to_host(lost)):
             raise RuntimeError("migration fanout overflow — internal bound "
                                "violated, elements would have been dropped")
 
@@ -409,18 +481,19 @@ class _ElasticBase:
             new_mesh = self._mesh_for(new_active)
             shard = NamedSharding(new_mesh, P(self.axis))
             rep = NamedSharding(new_mesh, P())
-            a = jax.device_put(np.asarray(a), rep)
-            b = jax.device_put(np.asarray(b), rep)
-            X = jax.device_put(np.asarray(X)[:P_new], shard)
-            Y = jax.device_put(np.asarray(Y)[:P_new], shard)
+            a = rt.put(rt.to_host(a), rep)
+            b = rt.put(rt.to_host(b), rep)
+            X = rt.put(rt.to_host(X)[:P_new], shard)
+            Y = rt.put(rt.to_host(Y)[:P_new], shard)
 
         self.state = self._pack(a, b, X, Y)
         self._active = list(new_active)
         self.inner = self._get_inner(self._mesh_for(new_active))
+        n_moved = int(rt.to_host(moved))
         stats = {
             "kind": kind, "P_from": P_old, "P_to": P_new,
-            "moved": int(np.asarray(moved)),
-            "bytes_moved": int(np.asarray(moved)) * self._entry_bytes,
+            "moved": n_moved,
+            "bytes_moved": n_moved * self._entry_bytes,
             "wave_s": t_wave,
             "total_s": time.perf_counter() - t_total,
             "collectives": entry[1],
@@ -428,6 +501,7 @@ class _ElasticBase:
         hb = self._hash_balance(P_new)
         if hb is not None:
             stats["hash_balance"] = hb
+        rt.on_migration(stats)   # SimRuntime charges the wire model here
         self.migrations.append(stats)
         return stats
 
@@ -472,13 +546,16 @@ class _ElasticBase:
 
     @classmethod
     def restore(cls, ckpt_dir, step: Optional[int] = None, *,
-                n_shards: Optional[int] = None, devices=None, **kw):
+                n_shards: Optional[int] = None, devices=None,
+                runtime=None, **kw):
         """Cold-start analogue of the live migration: rebuild from a
         checkpoint written under a possibly different shard count, via
         ``checkpoint.restore_sharded`` + one migration wave.
 
         Requires ``max(saved, target)`` shards' worth of devices (the
-        migration mesh is the larger of the two layouts)."""
+        migration mesh is the larger of the two layouts).  ``runtime``
+        selects the mesh runtime the restored queue lives on (mutually
+        exclusive with ``devices``, like the constructor)."""
         from ..checkpoint import latest_step, restore_sharded
         if step is None:
             step = latest_step(ckpt_dir)
@@ -488,7 +565,7 @@ class _ElasticBase:
         if lay["kind"] != cls._kind:
             raise ValueError(f"checkpoint holds a {lay['kind']}, "
                              f"not a {cls._kind}")
-        inst = cls(lay["n_shards"], devices=devices,
+        inst = cls(lay["n_shards"], devices=devices, runtime=runtime,
                    **cls._layout_kwargs(lay), **kw)
         shard = NamedSharding(inst.mesh, P(inst.axis))
         rep = NamedSharding(inst.mesh, P())
@@ -636,13 +713,14 @@ class ElasticDeviceQueue(_ElasticBase):
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, fused: bool = True,
-                 devices=None, hlo_stats: bool = False,
+                 devices=None, runtime=None, hlo_stats: bool = False,
                  pipelined: bool = True, metrics: bool = False,
                  metrics_ring: int = 64, flight_k: int = 16):
         self.fused = fused
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
+                         runtime=runtime,
                          hlo_stats=hlo_stats, pipelined=pipelined,
                          metrics=metrics, metrics_ring=metrics_ring,
                          flight_k=flight_k)
@@ -652,7 +730,8 @@ class ElasticDeviceQueue(_ElasticBase):
                            payload_width=self.W, ops_per_shard=self.L,
                            fused=self.fused, pipelined=self.pipelined,
                            metrics=self.metrics and self.fused,
-                           metrics_ring=self.metrics_ring)
+                           metrics_ring=self.metrics_ring,
+                           runtime=self.runtime)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, payload):
@@ -661,19 +740,19 @@ class ElasticDeviceQueue(_ElasticBase):
         :class:`~.errors.QueueOverflowError` when the wave overflowed."""
         with self._burst_span(1):
             self.state, pos, m, dv, dok, ovf = self.inner.step(
-                self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-                jnp.asarray(payload))
+                self.state, self._place(is_enq), self._place(valid),
+                self._place(payload))
         self._check_overflow(ovf)
         return pos, m, dv, dok, ovf
 
     def run_waves(self, is_enq, valid, payload):
         """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
         Raises :class:`~.errors.QueueOverflowError` on overflow."""
-        is_enq = jnp.asarray(is_enq)
+        is_enq = self._place(is_enq, lead=1)
         with self._burst_span(is_enq.shape[0]):
             self.state, pos, m, dv, dok, ovf = self.inner.run_waves(
-                self.state, is_enq, jnp.asarray(valid),
-                jnp.asarray(payload))
+                self.state, is_enq, self._place(valid, lead=1),
+                self._place(payload, lead=1))
         self._check_overflow(ovf)
         return pos, m, dv, dok, ovf
 
@@ -753,13 +832,14 @@ class ElasticDeviceStack(_ElasticBase):
     def __init__(self, n_shards: int, *, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
                  ops_per_shard: int = 64, slot_depth: int = 4,
-                 devices=None, hlo_stats: bool = False,
+                 devices=None, runtime=None, hlo_stats: bool = False,
                  pipelined: bool = True, metrics: bool = False,
                  metrics_ring: int = 64, flight_k: int = 16):
         self.D = slot_depth
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
+                         runtime=runtime,
                          hlo_stats=hlo_stats, pipelined=pipelined,
                          metrics=metrics, metrics_ring=metrics_ring,
                          flight_k=flight_k)
@@ -769,7 +849,8 @@ class ElasticDeviceStack(_ElasticBase):
                            payload_width=self.W, ops_per_shard=self.L,
                            slot_depth=self.D, pipelined=self.pipelined,
                            metrics=self.metrics,
-                           metrics_ring=self.metrics_ring)
+                           metrics_ring=self.metrics_ring,
+                           runtime=self.runtime)
 
     _overflow_detail = ("a store slot's depth-D ticket set was exhausted "
                         "at commit time")
@@ -784,19 +865,19 @@ class ElasticDeviceStack(_ElasticBase):
         :class:`~.errors.QueueOverflowError` when the wave overflowed."""
         with self._burst_span(1):
             self.state, pos, m, pv, pok, ovf = self.inner.step(
-                self.state, jnp.asarray(is_push), jnp.asarray(valid),
-                jnp.asarray(payload))
+                self.state, self._place(is_push), self._place(valid),
+                self._place(payload))
         self._check_overflow(ovf)
         return pos, m, pv, pok, ovf
 
     def run_waves(self, is_push, valid, payload):
         """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
         Raises :class:`~.errors.QueueOverflowError` on overflow."""
-        is_push = jnp.asarray(is_push)
+        is_push = self._place(is_push, lead=1)
         with self._burst_span(is_push.shape[0]):
             self.state, pos, m, pv, pok, ovf = self.inner.run_waves(
-                self.state, is_push, jnp.asarray(valid),
-                jnp.asarray(payload))
+                self.state, is_push, self._place(valid, lead=1),
+                self._place(payload, lead=1))
         self._check_overflow(ovf)
         return pos, m, pv, pok, ovf
 

@@ -183,9 +183,12 @@ class DevicePriorityQueue:
                  ops_per_shard: int = 64, relaxation: int = 0,
                  pipelined: bool = True, metrics: bool = False,
                  metrics_ring: int = 64,
-                 fused_dispatch: bool | None = None):
+                 fused_dispatch: bool | None = None, runtime=None):
         if n_prios < 1:
             raise ValueError("need at least one priority tier")
+        from ..runtime import as_runtime
+        self.runtime, mesh, axis_name = as_runtime(mesh, axis_name,
+                                                   runtime=runtime)
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -201,7 +204,8 @@ class DevicePriorityQueue:
             PriorityDiscipline(axis_name, self.n_shards, n_prios, cap,
                                payload_width, relaxation,
                                fused_dispatch=fused_dispatch),
-            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
+            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring,
+            runtime=self.runtime)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves
 
@@ -210,12 +214,13 @@ class DevicePriorityQueue:
         n, cap, W, P_ = self.n_shards, self.cap, self.W, self.n_prios
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         rep = jax.sharding.NamedSharding(self.mesh, P())
+        put = self.runtime.put
         return PriorityQueueState(
-            firsts=jax.device_put(jnp.zeros((P_,), jnp.int32), rep),
-            lasts=jax.device_put(jnp.full((P_,), -1, jnp.int32), rep),
-            store_vals=jax.device_put(
+            firsts=put(jnp.zeros((P_,), jnp.int32), rep),
+            lasts=put(jnp.full((P_,), -1, jnp.int32), rep),
+            store_vals=put(
                 jnp.zeros((n, P_ * cap + 1, W), jnp.int32), sharding),
-            store_full=jax.device_put(
+            store_full=put(
                 jnp.zeros((n, P_ * cap + 1), bool), sharding),
         )
 
@@ -263,7 +268,7 @@ class ElasticDevicePriorityQueue(_MultiWindowElastic):
     def __init__(self, n_shards: int, *, n_prios: int = 2,
                  relaxation: int = 0, axis_name: str = "data",
                  cap: int = 1024, payload_width: int = 4,
-                 ops_per_shard: int = 64, devices=None,
+                 ops_per_shard: int = 64, devices=None, runtime=None,
                  hlo_stats: bool = False, pipelined: bool = True,
                  metrics: bool = False, metrics_ring: int = 64,
                  flight_k: int = 16):
@@ -272,6 +277,7 @@ class ElasticDevicePriorityQueue(_MultiWindowElastic):
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
+                         runtime=runtime,
                          hlo_stats=hlo_stats, pipelined=pipelined,
                          metrics=metrics, metrics_ring=metrics_ring,
                          flight_k=flight_k)
@@ -283,7 +289,8 @@ class ElasticDevicePriorityQueue(_MultiWindowElastic):
                                    relaxation=self.relaxation,
                                    pipelined=self.pipelined,
                                    metrics=self.metrics,
-                                   metrics_ring=self.metrics_ring)
+                                   metrics_ring=self.metrics_ring,
+                                   runtime=self.runtime)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, prio, payload):
@@ -293,19 +300,19 @@ class ElasticDevicePriorityQueue(_MultiWindowElastic):
         wave overflowed a tier window."""
         with self._burst_span(1):
             self.state, *out = self.inner.step(
-                self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-                jnp.asarray(prio), jnp.asarray(payload))
+                self.state, self._place(is_enq), self._place(valid),
+                self._place(prio), self._place(payload))
         self._check_overflow(out[5])
         return tuple(out)
 
     def run_waves(self, is_enq, valid, prio, payload):
         """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
         Raises :class:`~.errors.QueueOverflowError` on tier overflow."""
-        is_enq = jnp.asarray(is_enq)
+        is_enq = self._place(is_enq, lead=1)
         with self._burst_span(is_enq.shape[0]):
             self.state, *out = self.inner.run_waves(
-                self.state, is_enq, jnp.asarray(valid),
-                jnp.asarray(prio), jnp.asarray(payload))
+                self.state, is_enq, self._place(valid, lead=1),
+                self._place(prio, lead=1), self._place(payload, lead=1))
         self._check_overflow(out[5])
         return tuple(out)
 

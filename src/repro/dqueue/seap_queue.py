@@ -209,9 +209,12 @@ class DeviceSeapQueue:
                  split_occupancy: Optional[int] = None,
                  seed_bounds=None, pipelined: bool = True,
                  metrics: bool = False, metrics_ring: int = 64,
-                 fused_dispatch: bool | None = None):
+                 fused_dispatch: bool | None = None, runtime=None):
         if n_buckets < 1:
             raise ValueError("need at least one bucket")
+        from ..runtime import as_runtime
+        self.runtime, mesh, axis_name = as_runtime(mesh, axis_name,
+                                                   runtime=runtime)
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -232,7 +235,8 @@ class DeviceSeapQueue:
             SeapDiscipline(axis_name, self.n_shards, n_buckets, cap,
                            payload_width, split_occupancy,
                            fused_dispatch=fused_dispatch),
-            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring)
+            pipelined=pipelined, metrics=metrics, metrics_ring=metrics_ring,
+            runtime=self.runtime)
         self._step = self.engine._step
         self._run_waves = self.engine._run_waves
 
@@ -248,16 +252,17 @@ class DeviceSeapQueue:
         ns = len(self.seed_bounds)
         lo[1:1 + ns] = self.seed_bounds
         active[1:1 + ns] = True
+        put = self.runtime.put
         return SeapQueueState(
-            firsts=jax.device_put(jnp.zeros((B,), jnp.int32), rep),
-            lasts=jax.device_put(jnp.full((B,), -1, jnp.int32), rep),
-            lo=jax.device_put(jnp.asarray(lo), rep),
-            active=jax.device_put(jnp.asarray(active), rep),
-            key_lo=jax.device_put(jnp.int32(INT32_MAX), rep),
-            key_hi=jax.device_put(jnp.int32(INT32_MIN), rep),
-            store_vals=jax.device_put(
+            firsts=put(jnp.zeros((B,), jnp.int32), rep),
+            lasts=put(jnp.full((B,), -1, jnp.int32), rep),
+            lo=put(jnp.asarray(lo), rep),
+            active=put(jnp.asarray(active), rep),
+            key_lo=put(jnp.int32(INT32_MAX), rep),
+            key_hi=put(jnp.int32(INT32_MIN), rep),
+            store_vals=put(
                 jnp.zeros((n, B * cap + 1, W), jnp.int32), sharding),
-            store_full=jax.device_put(
+            store_full=put(
                 jnp.zeros((n, B * cap + 1), bool), sharding),
         )
 
@@ -307,7 +312,7 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
                  split_occupancy: Optional[int] = None,
                  seed_bounds=None, axis_name: str = "data", cap: int = 1024,
                  payload_width: int = 4, ops_per_shard: int = 64,
-                 devices=None, hlo_stats: bool = False,
+                 devices=None, runtime=None, hlo_stats: bool = False,
                  pipelined: bool = True, metrics: bool = False,
                  metrics_ring: int = 64, flight_k: int = 16):
         self.n_buckets = n_buckets
@@ -318,6 +323,7 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
         super().__init__(n_shards, axis_name=axis_name, cap=cap,
                          payload_width=payload_width,
                          ops_per_shard=ops_per_shard, devices=devices,
+                         runtime=runtime,
                          hlo_stats=hlo_stats, pipelined=pipelined,
                          metrics=metrics, metrics_ring=metrics_ring,
                          flight_k=flight_k)
@@ -330,7 +336,8 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
                                seed_bounds=self.seed_bounds,
                                pipelined=self.pipelined,
                                metrics=self.metrics,
-                               metrics_ring=self.metrics_ring)
+                               metrics_ring=self.metrics_ring,
+                               runtime=self.runtime)
 
     # ------------------------------------------------------------ waves ----
     def step(self, is_enq, valid, key, payload):
@@ -340,19 +347,19 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
         wave overflowed a bucket window."""
         with self._burst_span(1):
             self.state, *out = self.inner.step(
-                self.state, jnp.asarray(is_enq), jnp.asarray(valid),
-                jnp.asarray(key), jnp.asarray(payload))
+                self.state, self._place(is_enq), self._place(valid),
+                self._place(key), self._place(payload))
         self._check_overflow(out[5])
         return tuple(out)
 
     def run_waves(self, is_enq, valid, key, payload):
         """K pre-staged waves in one dispatch (shapes [K, n_shards * L]).
         Raises :class:`~.errors.QueueOverflowError` on bucket overflow."""
-        is_enq = jnp.asarray(is_enq)
+        is_enq = self._place(is_enq, lead=1)
         with self._burst_span(is_enq.shape[0]):
             self.state, *out = self.inner.run_waves(
-                self.state, is_enq, jnp.asarray(valid),
-                jnp.asarray(key), jnp.asarray(payload))
+                self.state, is_enq, self._place(valid, lead=1),
+                self._place(key, lead=1), self._place(payload, lead=1))
         self._check_overflow(out[5])
         return tuple(out)
 
@@ -374,13 +381,13 @@ class ElasticDeviceSeapQueue(_MultiWindowElastic):
         # is not touched by the migration wave; stash it and re-attach on
         # the destination mesh in _pack
         self._mig_directory = tuple(
-            np.asarray(x) for x in (state.lo, state.active,
-                                    state.key_lo, state.key_hi))
+            self.runtime.to_host(x) for x in (state.lo, state.active,
+                                              state.key_lo, state.key_hi))
         return state.firsts, state.lasts, state.store_vals, state.store_full
 
     def _pack(self, a, b, X, Y):
         rep = a.sharding                      # replicated on the final mesh
-        lo_h, act_h, klo_h, khi_h = (jax.device_put(x, rep)
+        lo_h, act_h, klo_h, khi_h = (self.runtime.put(x, rep)
                                      for x in self._mig_directory)
         return SeapQueueState(a, b, lo_h, act_h, klo_h, khi_h, X, Y)
 

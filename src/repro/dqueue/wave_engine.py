@@ -258,7 +258,13 @@ class WaveEngine:
 
     def __init__(self, mesh, axis_name: str, discipline: Discipline, *,
                  pipelined: bool = True, metrics: bool = False,
-                 metrics_ring: int = 64):
+                 metrics_ring: int = 64, runtime=None):
+        if runtime is None:
+            # mesh may be a Runtime (PR 10) or a bare Mesh (adopted into
+            # a transparent LocalRuntime — same object, same jit keys)
+            from ..runtime import as_runtime
+            runtime, mesh, axis_name = as_runtime(mesh, axis_name)
+        self.runtime = runtime
         self.mesh = mesh
         self.axis = axis_name
         self.n_shards = mesh.shape[axis_name]
@@ -487,9 +493,11 @@ class WaveEngine:
 
     # ----------------------------------------------------- metrics drain ---
     def init_metrics_state(self) -> MetricsState:
-        """A zeroed Wavescope ring placed on this engine's mesh."""
+        """A zeroed Wavescope ring placed on this engine's mesh (the
+        placement itself rides the runtime handle)."""
         return init_metrics_state(self.n_shards, self.metrics_ring,
-                                  self.disc.n_windows, self.mesh, self.axis)
+                                  self.disc.n_windows, self.mesh, self.axis,
+                                  runtime=self.runtime)
 
     def drain_metrics(self, *, reset: bool = False) -> list:
         """Drain the telemetry ring to host wave-summary dicts (oldest

@@ -34,25 +34,43 @@ class SimulatedFailure(RuntimeError):
 
 class ShardFailure(SimulatedFailure):
     """A failure attributable to one shard — eligible for LEAVE instead of
-    restart when an :class:`ElasticPolicy` is installed."""
+    restart when an :class:`ElasticPolicy` is installed.
 
-    def __init__(self, shard: int, step: int):
-        super().__init__(f"injected failure of shard {shard} at step {step}")
+    ``shard`` is a MESH INDEX — only stable while the membership never
+    changes, which is exactly the assumption elasticity breaks.  Failures
+    attributed by hardware (a dead process, a SimRuntime schedule) carry
+    ``device_id`` instead: the stable runtime identity (PR 10), immune to
+    the index shift a prior LEAVE causes."""
+
+    def __init__(self, shard: Optional[int], step: int,
+                 device_id: Optional[int] = None):
+        who = (f"device id {device_id}" if device_id is not None
+               else f"shard {shard}")
+        super().__init__(f"injected failure of {who} at step {step}")
         self.shard = shard
         self.step = step
+        self.device_id = device_id
 
 
 @dataclasses.dataclass
 class FailureInjector:
     """Raises at chosen steps: ``fail_at_steps`` raise plain
     :class:`SimulatedFailure` (whole-job crash); ``shard_fail_at`` maps
-    step -> shard id and raises :class:`ShardFailure` (attributable)."""
+    step -> shard MESH INDEX and ``device_fail_at`` maps step -> stable
+    DEVICE ID, both raising :class:`ShardFailure` (attributable).  Prefer
+    ``device_fail_at`` whenever more than one failure can occur: mesh
+    indices shift after every LEAVE, device ids never do."""
 
     fail_at_steps: tuple = ()
     shard_fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    device_fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
     fired: set = dataclasses.field(default_factory=set)
 
     def maybe_fail(self, step: int):
+        if step in self.device_fail_at and ("dev", step) not in self.fired:
+            self.fired.add(("dev", step))
+            raise ShardFailure(None, step,
+                               device_id=self.device_fail_at[step])
         if step in self.shard_fail_at and ("shard", step) not in self.fired:
             self.fired.add(("shard", step))
             raise ShardFailure(self.shard_fail_at[step], step)
@@ -70,11 +88,17 @@ class ElasticPolicy:
     carrier decides what that means — for an ``ElasticDeviceQueue``-backed
     state it is ``queue.shrink([dead_shard])``).  ``regrow(state) -> state``
     JOINs one replacement shard; it fires after ``regrow_after`` consecutive
-    healthy steps while capacity is degraded (0 disables regrowing)."""
+    healthy steps while capacity is degraded (0 disables regrowing).
+
+    ``shrink_by_device(state, device_id) -> state`` is the PR 10 stable-id
+    LEAVE: it receives the runtime device id from a
+    :class:`ShardFailure` carrying one, and should quarantine the device
+    so a later regrow-JOIN cannot resurrect state onto dead hardware."""
 
     shrink: Callable[[object, int], object]
     regrow: Optional[Callable[[object], object]] = None
     regrow_after: int = 0
+    shrink_by_device: Optional[Callable[[object, int], object]] = None
 
 
 def elastic_queue_policy(queue, regrow_after: int = 0,
@@ -105,10 +129,18 @@ def elastic_queue_policy(queue, regrow_after: int = 0,
         if controller is not None:
             controller.notify_resize(queue.n_shards, external=True)
 
-    def _shrink(state, shard):
-        queue.shrink([shard])
+    def _shrink_dev(state, device_id):
+        # stable-id LEAVE (PR 10): quarantine the dead device in the
+        # queue's runtime so the regrow-JOIN below can never resurrect
+        # state onto it — the pre-PR 10 resurrection bug
+        queue.shrink_devices([device_id], quarantine=True)
         _notify()
         return state
+
+    def _shrink(state, shard):
+        # a bare mesh index is resolved to the CURRENT shard->device map
+        # before the LEAVE mutates it, then handled on the stable-id path
+        return _shrink_dev(state, queue.device_ids[shard])
 
     def _regrow(state):
         queue.grow(1)
@@ -118,7 +150,8 @@ def elastic_queue_policy(queue, regrow_after: int = 0,
     return ElasticPolicy(
         shrink=_shrink,
         regrow=_regrow if regrow_after > 0 else None,
-        regrow_after=regrow_after)
+        regrow_after=regrow_after,
+        shrink_by_device=_shrink_dev)
 
 
 def run_with_restarts(*, init_state: Callable[[], tuple],
@@ -164,9 +197,20 @@ def run_with_restarts(*, init_state: Callable[[], tuple],
                     if elastic is None:
                         raise
                     log(f"[fault] {e}; LEAVE instead of restart")
+                    dev = getattr(e, "device_id", None)
                     with span("fault:leave", cat="membership",
-                              shard=e.shard, step=step):
-                        state = elastic.shrink(state, e.shard)
+                              shard=e.shard, device=dev, step=step):
+                        if dev is not None \
+                                and elastic.shrink_by_device is not None:
+                            state = elastic.shrink_by_device(state, dev)
+                        elif dev is not None:
+                            raise ValueError(
+                                f"ShardFailure carries device_id={dev} but "
+                                "the ElasticPolicy has no shrink_by_device "
+                                "hook — use fault.elastic_queue_policy or "
+                                "supply one") from e
+                        else:
+                            state = elastic.shrink(state, e.shard)
                     metrics["leaves"] += 1
                     degraded += 1
                     healthy = 0

@@ -25,21 +25,27 @@ def make_host_mesh(n_data: int = 1, n_model: int = 1):
     return make_mesh((n_data, n_model), ("data", "model"))
 
 
-def make_elastic_mesh(n_shards: int, axis_name: str = "data", devices=None):
+def make_elastic_mesh(n_shards: int, axis_name: str = "data", devices=None,
+                      exclude=()):
     """One-axis mesh over an explicit device subset.
 
     The elastic JOIN/LEAVE path (``dqueue.elastic``) re-materializes queue
     state across meshes of *different* sizes, so unlike ``jax.make_mesh``
     this helper must be able to build a mesh over fewer devices than the
     process owns — and over a caller-chosen subset, so a LEAVE can exclude
-    the precise device that failed."""
-    import numpy as np
+    the precise device that failed.
+
+    ``exclude`` (device objects or bare device ids) is dropped *before*
+    the ``n_shards`` prefix is taken, so callers no longer have to
+    pre-filter the pool to dodge a failed device; when the exclusion
+    makes ``n_shards`` unsatisfiable the error names the offending
+    device ids instead of a bare count mismatch.
+
+    Since PR 10 the implementation lives in :mod:`repro.runtime` (the
+    subset logic in ``select_devices``, construction in ``build_mesh``);
+    this wrapper survives for callers outside the runtime-managed wave
+    stack."""
+    from ..runtime import build_mesh, select_devices
 
     devs = list(devices) if devices is not None else list(jax.devices())
-    if not 1 <= n_shards <= len(devs):
-        raise ValueError(
-            f"cannot build a {n_shards}-shard mesh from {len(devs)} devices")
-    arr = np.empty((n_shards,), dtype=object)
-    for i, d in enumerate(devs[:n_shards]):
-        arr[i] = d
-    return jax.sharding.Mesh(arr, (axis_name,))
+    return build_mesh(select_devices(devs, n_shards, exclude), axis_name)

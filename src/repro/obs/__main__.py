@@ -36,7 +36,7 @@ def _smoke(n_devices: int, waves: int) -> dict:
 
     from ..analysis import count_all_to_all
     from ..dqueue import DeviceQueue, ElasticDeviceQueue
-    from ..launch.mesh import make_host_mesh
+    from ..runtime import LocalRuntime
     from .export import to_prometheus
     from .trace import span, tracer
 
@@ -55,7 +55,7 @@ def _smoke(n_devices: int, waves: int) -> dict:
     ok = bool(rows) and [r["seq"] for r in rows] == sorted(
         {r["seq"] for r in rows})
     # telemetry must not add collectives: lower both flavors and count
-    mesh = make_host_mesh(n_data=q.n_shards)
+    mesh = LocalRuntime().mesh(n_shards=q.n_shards)
     args_np = (np.zeros(n, bool), np.zeros(n, bool),
                np.zeros((n, 2), np.int32))
     c = {}

@@ -73,16 +73,19 @@ def row_width(n_windows: int) -> int:
 
 
 def init_metrics_state(n_shards: int, ring: int, n_windows: int,
-                       mesh=None, axis_name: str | None = None):
+                       mesh=None, axis_name: str | None = None,
+                       runtime=None):
     """A zeroed ring.  With ``mesh``/``axis_name`` the buffers are placed
     explicitly (count replicated, rows sharded) so donation works from
-    the first burst."""
+    the first burst; with ``runtime`` (PR 10) the placement goes through
+    the runtime handle's data plane instead of a raw ``device_put``."""
     count = jnp.int32(0)
     rows = jnp.zeros((n_shards, ring, row_width(n_windows)), jnp.int32)
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec as P
-        count = jax.device_put(count, NamedSharding(mesh, P()))
-        rows = jax.device_put(rows, NamedSharding(mesh, P(axis_name)))
+        put = runtime.put if runtime is not None else jax.device_put
+        count = put(count, NamedSharding(mesh, P()))
+        rows = put(rows, NamedSharding(mesh, P(axis_name)))
     return MetricsState(count, rows)
 
 

@@ -1,0 +1,16 @@
+"""The pluggable mesh-runtime layer (PR 10): one seam between the wave
+stack and physical devices.  See :mod:`repro.runtime.base` for the
+contract and docs/RUNTIME.md for launch recipes."""
+from .base import (ProcessRole, Runtime, as_runtime, build_mesh,
+                   select_devices)
+from .distributed import DistributedRuntime
+from .launcher import ProcResult, find_free_port, launch_localhost
+from .local import LocalRuntime
+from .sim import LatencyModel, SimRuntime
+
+__all__ = [
+    "Runtime", "ProcessRole", "as_runtime", "build_mesh",
+    "select_devices", "LocalRuntime", "SimRuntime", "LatencyModel",
+    "DistributedRuntime", "launch_localhost", "find_free_port",
+    "ProcResult",
+]

@@ -1,0 +1,268 @@
+"""The Runtime contract: who owns devices, meshes, and the wire.
+
+Before PR 10 every layer of the wave stack touched jax device state
+directly — ``jax.devices()`` in the elastic wrappers, ``jax.sharding.
+Mesh`` construction in ``launch/mesh.py``, ad-hoc ``device_put`` staging
+in the migration path — so the protocol could only ever run on the
+one-process XLA mesh it was developed on, while the paper defines it for
+the *asynchronous message-passing model* (processes that join, leave,
+and exchange messages over a wire).  :class:`Runtime` is the one seam
+between the two: everything above it (``WaveEngine``, the disciplines,
+the elastic wrappers, ``ServeEngine``, the fault layer, Wavescope)
+speaks in *stable device ids* and runtime-built meshes, and the three
+implementations decide what a shard physically is:
+
+* :class:`~repro.runtime.local.LocalRuntime` — today's single-process
+  path (absorbs ``launch/mesh.make_elastic_mesh``); host staging is
+  ``np.asarray``, placement is a no-op, ``sync`` is a no-op.
+* :class:`~repro.runtime.distributed.DistributedRuntime` — a
+  ``jax.distributed.initialize`` multi-controller over localhost TCP:
+  a shard is a *process*, LEAVE means a process dropping out of the
+  live set, and the packed-migration wave is a real cross-process
+  reshard.  Host staging is a ``process_allgather``; op placement is an
+  explicit global ``device_put``.
+* :class:`~repro.runtime.sim.SimRuntime` — LocalRuntime plus a
+  declarative per-collective latency model and scheduled
+  ``ShardFailure`` injection, so migration/backpressure cost models can
+  be measured under microseconds-to-milliseconds wire regimes without
+  hardware.
+
+Stable identity
+---------------
+A device's ``.id`` is its stable identity for the lifetime of the
+runtime (for ``DistributedRuntime`` it is the global jax device id, so
+it also encodes the owning process).  Every membership operation above
+the runtime — failure attribution, quarantine, reshard — is keyed by
+these ids, never by mesh index: a mesh index is only stable while the
+membership never changes, which is exactly the assumption elasticity
+breaks (the PR 10 failure-rekey bugfix).
+
+Failure quarantine
+------------------
+``mark_failed(device_id)`` removes a device from :meth:`Runtime.pool`
+permanently.  The elastic wrappers draw JOIN capacity from ``pool()``,
+so a quarantined device can never be handed back out by a later
+``grow`` — the regression the resurrection test pins down.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+
+class ProcessRole(NamedTuple):
+    """This process's place in the runtime: ``index`` of ``count``
+    processes; ``coordinator`` is True exactly for process 0 (the one
+    that should write artifacts / drive single-writer side effects)."""
+    index: int
+    count: int
+    coordinator: bool
+
+
+def select_devices(devs: Sequence, n_shards: int, exclude=()) -> list:
+    """Subset selection for a one-axis elastic mesh: drop ``exclude``,
+    then take the first ``n_shards`` of what survives.
+
+    ``exclude`` entries may be device objects or bare device ids.
+    Raises with the offending device named when the exclusion makes
+    ``n_shards`` unsatisfiable — the caller excluded a *specific* failed
+    device, so the error must say which exclusion broke the build
+    instead of a bare count mismatch.
+    """
+    devs = list(devs)
+    excl_ids = {d if isinstance(d, int) else d.id for d in exclude}
+    live = [d for d in devs if d.id not in excl_ids]
+    if not 1 <= n_shards <= len(live):
+        hit = sorted(i for i in excl_ids if any(d.id == i for d in devs))
+        if hit:
+            raise ValueError(
+                f"cannot build a {n_shards}-shard mesh: excluding "
+                f"device id(s) {hit} leaves only {len(live)} of "
+                f"{len(devs)} devices")
+        raise ValueError(
+            f"cannot build a {n_shards}-shard mesh from {len(live)} "
+            f"devices")
+    return live[:n_shards]
+
+
+def build_mesh(devices: Sequence, axis_name: str):
+    """A one-axis ``jax.sharding.Mesh`` over an explicit device list
+    (unlike ``jax.make_mesh`` this never consults global device state,
+    so it can build over fewer devices than the process owns)."""
+    arr = np.empty((len(devices),), dtype=object)
+    for i, d in enumerate(devices):
+        arr[i] = d
+    return jax.sharding.Mesh(arr, (axis_name,))
+
+
+class Runtime:
+    """Base contract + shared machinery (mesh cache, id bookkeeping,
+    failure quarantine).  Subclasses supply the device pool and the
+    host/wire data plane."""
+
+    kind: str = "base"
+
+    def __init__(self, axis_name: str = "data"):
+        self.axis_name = axis_name
+        self._failed: set = set()
+        self._mesh_cache: Dict[tuple, object] = {}
+
+    # ------------------------------------------------------- topology ------
+    def all_devices(self) -> list:
+        """Every device this runtime was built over, failed included,
+        in stable order.  Subclasses must implement."""
+        raise NotImplementedError
+
+    def pool(self) -> list:
+        """Live (non-quarantined) devices, in stable order.  JOIN
+        capacity is drawn from here — a device marked failed never
+        reappears."""
+        return [d for d in self.all_devices() if d.id not in self._failed]
+
+    @property
+    def pool_size(self) -> int:
+        """Number of live devices (the hard upper bound on shards)."""
+        return len(self.pool())
+
+    @property
+    def n_shards(self) -> int:
+        """Default shard count: one shard per live device."""
+        return self.pool_size
+
+    @property
+    def process_role(self) -> ProcessRole:
+        """This process's (index, count, coordinator) role."""
+        return ProcessRole(0, 1, True)
+
+    def device_ids(self, devices=None) -> List[int]:
+        """Stable ids for ``devices`` (default: the live pool)."""
+        return [d.id for d in (self.pool() if devices is None else devices)]
+
+    def reshard_devices(self, live_ids: Sequence[int]) -> list:
+        """Map stable device ids back to device objects, in the given
+        order — the id->device half of a reshard.  Raises when an id is
+        unknown or quarantined (resharding onto a failed device is the
+        resurrection bug this layer exists to prevent)."""
+        by_id = {d.id: d for d in self.all_devices()}
+        out = []
+        for i in live_ids:
+            i = int(i)
+            if i not in by_id:
+                raise ValueError(f"unknown device id {i} (known: "
+                                 f"{sorted(by_id)})")
+            if i in self._failed:
+                raise ValueError(f"device id {i} is quarantined (failed) "
+                                 f"— cannot reshard onto it")
+            out.append(by_id[i])
+        return out
+
+    def mesh(self, devices=None, *, n_shards: Optional[int] = None,
+             exclude=()):
+        """A cached one-axis mesh.
+
+        With ``devices`` the mesh spans exactly that list (the elastic
+        wrappers pass their active set).  Otherwise the subset is
+        selected from the live pool: ``exclude`` first, then the first
+        ``n_shards`` survivors (default: all).  Identical device sets
+        return the identical Mesh object, so jit executable caches keyed
+        on the mesh stay warm across membership bounces."""
+        if devices is None:
+            pool = self.pool()
+            devices = select_devices(
+                pool, len(pool) if n_shards is None else n_shards, exclude)
+        key = tuple(d.id for d in devices)
+        if key not in self._mesh_cache:
+            self._mesh_cache[key] = build_mesh(devices, self.axis_name)
+        return self._mesh_cache[key]
+
+    # ------------------------------------------------------- liveness ------
+    def mark_failed(self, device_id: int) -> None:
+        """Quarantine a device by stable id: it leaves :meth:`pool`
+        permanently, so JOIN can never resurrect state onto it."""
+        self._failed.add(int(device_id))
+
+    @property
+    def failed_ids(self) -> frozenset:
+        """Stable ids of every quarantined device."""
+        return frozenset(self._failed)
+
+    # ----------------------------------------------------- data plane ------
+    def to_host(self, x) -> np.ndarray:
+        """Materialize a (possibly sharded) global array on this host.
+        Subclasses override when local addressability is partial."""
+        return np.asarray(x)
+
+    def put(self, x, sharding):
+        """Place a host array under an explicit sharding."""
+        return jax.device_put(x, sharding)
+
+    def place(self, x, mesh, lead: int = 0):
+        """Stage one wave-op array onto ``mesh`` (sharded on
+        ``axis_name`` after ``lead`` unsharded leading dims).  The local
+        runtimes keep this a zero-cost ``jnp.asarray`` so the
+        single-process wave path is bit-identical to the pre-runtime
+        code; the distributed runtime must build a global array."""
+        import jax.numpy as jnp
+        return jnp.asarray(x)
+
+    def sync(self) -> None:
+        """Barrier across every process in the runtime (no-op when
+        there is only one)."""
+
+    # ------------------------------------------------ injection hooks ------
+    def collective_latency(self, kind: str, nbytes: int = 0) -> float:
+        """Modeled seconds one ``kind`` collective of ``nbytes`` costs
+        (0 everywhere except SimRuntime)."""
+        return 0.0
+
+    def on_burst(self, kind: str, n_waves: int, n_shards: int, *,
+                 width: int, payload_width: int,
+                 pipelined: bool = True) -> None:
+        """Burst-boundary notification from the elastic drivers: a
+        K-wave burst was dispatched.  No-op except under SimRuntime,
+        which charges the modeled all_to_all launches."""
+
+    def on_migration(self, stats: dict) -> None:
+        """Migration-wave notification (the PR 2 reshard); SimRuntime
+        charges the wire model and annotates ``stats`` in place."""
+
+    def maybe_fail(self, step: int) -> None:
+        """Scheduled-failure hook (SimRuntime raises ``ShardFailure``
+        here); the fault layer calls it once per step."""
+
+    def snapshot(self) -> dict:
+        """Metrics-ready description of this runtime."""
+        role = self.process_role
+        return {"kind": self.kind, "axis_name": self.axis_name,
+                "pool_size": self.pool_size,
+                "failed_ids": sorted(self._failed),
+                "process_index": role.index,
+                "process_count": role.count}
+
+
+def as_runtime(mesh_or_runtime, axis_name: str = "data", runtime=None):
+    """Normalize a constructor's mesh-or-runtime first argument.
+
+    Returns ``(runtime, mesh, axis_name)``.  A Runtime yields its own
+    default mesh; a bare Mesh is adopted into a fresh LocalRuntime over
+    exactly its devices — the SAME Mesh object is returned, so jit
+    caches keyed on mesh identity are unaffected by the wrapping.  An
+    explicit ``runtime`` pins the owning runtime while keeping the
+    caller's mesh (the elastic wrappers hand their subset mesh down to
+    the fixed-mesh inner queues this way)."""
+    from .local import LocalRuntime
+    if runtime is not None:
+        mesh = mesh_or_runtime
+        if mesh is None or isinstance(mesh, Runtime):
+            mesh = runtime.mesh()
+        return runtime, mesh, runtime.axis_name
+    if isinstance(mesh_or_runtime, Runtime):
+        rt = mesh_or_runtime
+        return rt, rt.mesh(), rt.axis_name
+    mesh = mesh_or_runtime
+    rt = LocalRuntime(devices=list(mesh.devices.flat), axis_name=axis_name)
+    rt.adopt_mesh(mesh)
+    return rt, mesh, axis_name

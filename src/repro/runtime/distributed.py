@@ -1,0 +1,134 @@
+"""DistributedRuntime: multi-controller jax over localhost TCP.
+
+``jax.distributed.initialize`` turns N CPU processes into one jax
+runtime: every process sees the *global* device list, collectives run
+over a real socket (the gloo CPU collectives implementation), and a
+``shard_map`` program over a cross-process mesh is a genuine
+message-passing execution of the paper's protocol — a shard is a
+process, LEAVE is a process dropping out of the live mesh, and the
+PR 2 packed-migration wave is a real cross-process reshard.
+
+What changes relative to LocalRuntime (and is encapsulated here so the
+wave stack above does not care):
+
+* **op staging** — a host numpy array is only *locally* addressable;
+  :meth:`place` builds the global array with an explicit ``device_put``
+  under the wave's NamedSharding (every process passes the same host
+  values, which the single-controller-per-process model requires);
+* **host reads** — ``np.asarray`` works only on fully-replicated
+  arrays; :meth:`to_host` falls back to a tiled ``process_allgather``
+  for sharded ones (the migration path's store staging);
+* **barriers** — :meth:`sync` is a real cross-process barrier
+  (``multihost_utils.sync_global_devices``).
+
+Launch recipe (see also :mod:`repro.runtime.launcher` and
+docs/RUNTIME.md): every process must force the same per-process device
+count *before* jax initializes, then::
+
+    rt = DistributedRuntime.initialize(
+        coordinator="127.0.0.1:9911", num_processes=2, process_id=pid)
+
+or export ``REPRO_RT_COORD`` / ``REPRO_RT_NPROCS`` / ``REPRO_RT_PID``
+and call :meth:`DistributedRuntime.from_env`.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax
+
+from .base import ProcessRole, Runtime
+
+ENV_COORD = "REPRO_RT_COORD"
+ENV_NPROCS = "REPRO_RT_NPROCS"
+ENV_PID = "REPRO_RT_PID"
+
+
+class DistributedRuntime(Runtime):
+    """Runtime over an already-initialized ``jax.distributed`` world:
+    the pool is the *global* device list (every process's devices), and
+    the data plane is cross-process."""
+
+    kind = "distributed"
+
+    def __init__(self, axis_name: str = "data"):
+        super().__init__(axis_name)
+        if jax.process_count() < 2:
+            raise RuntimeError(
+                "DistributedRuntime needs an initialized multi-process "
+                "jax world (jax.process_count() >= 2) — call "
+                "DistributedRuntime.initialize(...) first, or use "
+                "LocalRuntime for the single-process path")
+        self._devices = list(jax.devices())
+
+    # ---------------------------------------------------------- launch -----
+    @classmethod
+    def initialize(cls, coordinator: str, num_processes: int,
+                   process_id: int, axis_name: str = "data"
+                   ) -> "DistributedRuntime":
+        """Join the multi-controller world and build the runtime.
+
+        Selects the gloo CPU collectives implementation (the only one
+        that works over plain TCP sockets on CPU), then blocks in
+        ``jax.distributed.initialize`` until all ``num_processes``
+        processes have connected to ``coordinator`` (``host:port``;
+        process 0 hosts it).  Must run before any other jax device use
+        in the process."""
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+        return cls(axis_name=axis_name)
+
+    @classmethod
+    def from_env(cls, axis_name: str = "data") -> "DistributedRuntime":
+        """:meth:`initialize` from the launcher's environment variables
+        (``REPRO_RT_COORD`` / ``REPRO_RT_NPROCS`` / ``REPRO_RT_PID``)."""
+        try:
+            coord = os.environ[ENV_COORD]
+            nprocs = int(os.environ[ENV_NPROCS])
+            pid = int(os.environ[ENV_PID])
+        except KeyError as e:
+            raise RuntimeError(
+                f"DistributedRuntime.from_env: {e.args[0]} is not set — "
+                "launch via repro.runtime.launcher or export "
+                f"{ENV_COORD}/{ENV_NPROCS}/{ENV_PID}") from None
+        return cls.initialize(coord, nprocs, pid, axis_name=axis_name)
+
+    # -------------------------------------------------------- topology -----
+    def all_devices(self) -> list:
+        return list(self._devices)
+
+    @property
+    def process_role(self) -> ProcessRole:
+        idx = jax.process_index()
+        return ProcessRole(idx, jax.process_count(), idx == 0)
+
+    def local_devices(self) -> list:
+        """The devices THIS process owns (addressable subset of the
+        pool)."""
+        return [d for d in self._devices
+                if d.process_index == jax.process_index()]
+
+    # ------------------------------------------------------ data plane -----
+    def to_host(self, x) -> np.ndarray:
+        if getattr(x, "is_fully_replicated", True):
+            return np.asarray(x)
+        from jax.experimental import multihost_utils
+        return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+
+    def put(self, x, sharding):
+        # a committed single-device jax array cannot be re-placed onto a
+        # sharding spanning other processes — stage through host numpy
+        return jax.device_put(np.asarray(x), sharding)
+
+    def place(self, x, mesh, lead: int = 0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = P(*((None,) * lead + (self.axis_name,)))
+        return jax.device_put(np.asarray(x), NamedSharding(mesh, spec))
+
+    def sync(self) -> None:
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices("repro.runtime.sync")

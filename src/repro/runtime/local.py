@@ -1,0 +1,40 @@
+"""LocalRuntime: the single-process mesh runtime (the pre-PR 10 path).
+
+One process owns every device; a shard is a device.  This runtime is
+deliberately *transparent*: ``place`` is a plain ``jnp.asarray``,
+``to_host`` is ``np.asarray``, ``sync`` is a no-op — so the wave stack
+running over a LocalRuntime executes the exact same operations as the
+pre-runtime code, and the existing differential oracles, HLO budgets,
+and recompile guards pass unchanged (the behavior-preservation proof
+the PR 10 refactor rests on).
+"""
+from __future__ import annotations
+
+import jax
+
+from .base import Runtime
+
+
+class LocalRuntime(Runtime):
+    """Single-process runtime over an explicit device pool (default:
+    every device the process owns)."""
+
+    kind = "local"
+
+    def __init__(self, devices=None, axis_name: str = "data"):
+        super().__init__(axis_name)
+        self._devices = (list(devices) if devices is not None
+                         else list(jax.devices()))
+        if not self._devices:
+            raise ValueError("LocalRuntime needs at least one device")
+
+    def all_devices(self) -> list:
+        return list(self._devices)
+
+    def adopt_mesh(self, mesh) -> None:
+        """Seed the mesh cache with a caller-built Mesh object so code
+        that already holds a mesh (the fixed-mesh structures' back-compat
+        constructors) keeps its exact object identity — jit executable
+        caches key on it."""
+        devs = list(mesh.devices.flat)
+        self._mesh_cache[tuple(d.id for d in devs)] = mesh

@@ -74,13 +74,22 @@ class HysteresisController:
     Args:
       config: a :class:`ControllerConfig`; keyword overrides may be
         passed directly instead (``HysteresisController(cooldown=8)``).
+      runtime: an optional :class:`~repro.runtime.Runtime` (PR 10).  When
+        given and ``max_shards`` is unset, the ceiling defaults to the
+        runtime's LIVE pool size — quarantined (failed) devices do not
+        count, so the controller never decides to grow onto dead
+        hardware.  The controller stays pure host arithmetic: the
+        runtime is consulted once here, never on the observe path.
 
     Raises:
       ValueError: watermarks out of order or patience/cooldown negative.
     """
 
-    def __init__(self, config: Optional[ControllerConfig] = None, **kw):
+    def __init__(self, config: Optional[ControllerConfig] = None, *,
+                 runtime=None, **kw):
         self.cfg = config or ControllerConfig(**kw)
+        if runtime is not None and self.cfg.max_shards is None:
+            self.cfg.max_shards = runtime.pool_size
         c = self.cfg
         if not 0.0 <= c.low_watermark < c.high_watermark:
             raise ValueError(

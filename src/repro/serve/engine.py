@@ -153,6 +153,12 @@ class ServeEngine:
       autoscale: a :class:`~repro.serve.HysteresisController` driving
         :meth:`resize` from sustained pressure (PR 8); its
         ``max_shards`` defaults to the queue's device-pool size.
+      runtime: a :class:`~repro.runtime.Runtime` handle (PR 10).  The
+        queue's shard pool, placement, and host staging all go through
+        it; when omitted, one is derived from ``mesh`` (a bare Mesh is
+        adopted into a transparent ``LocalRuntime``).  ``mesh`` itself
+        may also BE a runtime, in which case the engine's mesh is the
+        runtime's current mesh.
 
     Raises:
       ValueError: incompatible discipline flags or unknown policy name.
@@ -165,7 +171,15 @@ class ServeEngine:
                  deadline_horizon: int = 64, pipelined: bool = True,
                  telemetry: bool = False, flight_k: int = 16,
                  admission=None, spill_cap: int = 64,
-                 autoscale=None):
+                 autoscale=None, runtime=None):
+        from ..runtime import Runtime
+        if runtime is None and isinstance(mesh, Runtime):
+            runtime, mesh = mesh, None
+        if runtime is not None and mesh is None:
+            mesh = runtime.mesh()
+        self.runtime = runtime
+        n_shards = (runtime.n_shards if runtime is not None
+                    else mesh.shape["data"])
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -187,25 +201,26 @@ class ServeEngine:
             # at roughly one refill's worth of waiting requests.
             grid = max(1, deadline_horizon // n_buckets)
             self.queue = ElasticDeviceSeapQueue(
-                mesh.shape["data"], n_buckets=n_buckets, cap=queue_cap,
+                n_shards, n_buckets=n_buckets, cap=queue_cap,
                 payload_width=2, ops_per_shard=max(8, 2 * max_slots),
                 split_occupancy=max(1, 2 * max_slots),
                 seed_bounds=[i * grid for i in range(1, n_buckets)],
                 pipelined=pipelined, metrics=telemetry,
-                flight_k=flight_k)
+                flight_k=flight_k, runtime=runtime)
         elif priorities > 1:
             self.queue = ElasticDevicePriorityQueue(
-                mesh.shape["data"], n_prios=priorities,
+                n_shards, n_prios=priorities,
                 relaxation=relaxation, cap=queue_cap, payload_width=2,
                 ops_per_shard=max(8, 2 * max_slots), pipelined=pipelined,
-                metrics=telemetry, flight_k=flight_k)
+                metrics=telemetry, flight_k=flight_k, runtime=runtime)
         else:
-            self.queue = ElasticDeviceQueue(mesh.shape["data"],
+            self.queue = ElasticDeviceQueue(n_shards,
                                             cap=queue_cap, payload_width=2,
                                             ops_per_shard=max(8, 2 * max_slots),
                                             pipelined=pipelined,
                                             metrics=telemetry,
-                                            flight_k=flight_k)
+                                            flight_k=flight_k,
+                                            runtime=runtime)
         self.requests: Dict[int, Request] = {}
         self.slots: List[Optional[int]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)
@@ -466,8 +481,9 @@ class ServeEngine:
         else:
             _, _, dv, dok, _ = self.queue.run_waves(
                 jnp.array(is_enq), jnp.array(valid), jnp.array(payload))
-        dv = np.asarray(dv).reshape(n_waves * n, 2)
-        dok = np.asarray(dok).reshape(n_waves * n)
+        to_host = self.queue.runtime.to_host
+        dv = to_host(dv).reshape(n_waves * n, 2)
+        dok = to_host(dok).reshape(n_waves * n)
         got = [int(dv[j, 0]) for j in range(n_waves * n) if dok[j]]
         self._host_qsize += len(enq_rids) - len(got)
         return got

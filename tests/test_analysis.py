@@ -30,8 +30,9 @@ def test_run_all_zero_violations_8dev():
     # every discipline x schedule is present: 4x3 wave programs + legacy
     # step + 4 migrations + 4x2 telemetry-on [obs] twins (PR 7) + 4x2
     # occupancy-bucket [compact] twins at the narrow ladder width (PR 9,
-    # L=2 so the ladder is {1, 2} and w=1 is the one narrow rung) = 33
-    assert len(report["programs"]) == 33, sorted(report["programs"])
+    # L=2 so the ladder is {1, 2} and w=1 is the one narrow rung) plus
+    # the 2 runtime-constructed queue twins (PR 10) = 35
+    assert len(report["programs"]) == 35, sorted(report["programs"])
     # the [obs] twins lower against the SAME budgets as their off twins
     obs = [n for n in report["programs"] if "[obs]" in n or ",obs]" in n]
     assert len(obs) == 8, sorted(report["programs"])

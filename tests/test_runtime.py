@@ -1,0 +1,468 @@
+"""PR 10: the runtime seam — mesh invariants, subset/exclusion selection,
+zero-recompile membership bounces, SimRuntime wire arithmetic, the
+stable-id failure rekey (no resurrection onto dead devices), LocalRuntime
+parity with the pre-runtime mesh path, and the real 2-process
+DistributedRuntime differential over localhost TCP."""
+import numpy as np
+import pytest
+
+from multidev import run_multidev
+
+
+# ---------------------------------------------------------------------------
+# pure-host pieces: selection, exclusion, latency arithmetic (no devices)
+# ---------------------------------------------------------------------------
+
+class _FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+    def __repr__(self):
+        return f"dev{self.id}"
+
+
+def test_select_devices_subset_and_exclusion():
+    from repro.runtime import select_devices
+    devs = [_FakeDev(i) for i in range(8)]
+    assert [d.id for d in select_devices(devs, 3)] == [0, 1, 2]
+    # exclusion by device object and by bare id, subset from survivors
+    assert [d.id for d in select_devices(devs, 3, exclude=(devs[0],))] \
+        == [1, 2, 3]
+    assert [d.id for d in select_devices(devs, 3, exclude=(0, 2))] \
+        == [1, 3, 4]
+    # full-width with an exclusion
+    assert [d.id for d in select_devices(devs, 7, exclude=(5,))] \
+        == [0, 1, 2, 3, 4, 6, 7]
+
+
+def test_select_devices_exclusion_error_names_offender():
+    from repro.runtime import select_devices
+    devs = [_FakeDev(i) for i in range(4)]
+    with pytest.raises(ValueError) as ei:
+        select_devices(devs, 4, exclude=(2,))
+    msg = str(ei.value)
+    # the error must name the exclusion that broke the build, not just
+    # report a count mismatch
+    assert "device id(s) [2]" in msg and "3 of 4" in msg
+    # unknown exclusions don't get blamed for a plain shortage
+    with pytest.raises(ValueError) as ei:
+        select_devices(devs, 5)
+    assert "device id" not in str(ei.value)
+
+
+def test_latency_model_arithmetic():
+    from repro.runtime import LatencyModel
+    m = LatencyModel(base_us=100.0, per_mib_us=8.0,
+                     per_collective={"all_reduce": {"base_us": 40.0}})
+    # base + per-MiB, in seconds
+    assert m.latency_s("all_to_all", 0) == pytest.approx(100e-6)
+    assert m.latency_s("all_to_all", 1 << 20) == pytest.approx(108e-6)
+    # per-kind base override inherits the default per_mib_us
+    assert m.latency_s("all_reduce", 1 << 19) == pytest.approx(44e-6)
+    # free wire by default
+    assert LatencyModel().latency_s("all_to_all", 1 << 30) == 0.0
+
+
+def test_sim_burst_and_envelope_rules():
+    from repro.runtime import SimRuntime
+    # K-wave burst: K+1 launches pipelined, 2K sequential
+    assert SimRuntime.burst_launches(4, True) == 5
+    assert SimRuntime.burst_launches(4, False) == 8
+    assert SimRuntime.burst_launches(1, True) == 2
+    # envelope: n_shards*width op rows of (slot ‖ tag ‖ payload) int32
+    assert SimRuntime.wave_envelope_bytes(8, 2, 2) == 8 * 2 * 4 * 4
+    assert SimRuntime.wave_envelope_bytes(4, 16, 4) == 4 * 16 * 4 * 6
+
+
+# ---------------------------------------------------------------------------
+# mesh invariants + the elastic stack on a runtime (multidev subprocess)
+# ---------------------------------------------------------------------------
+
+MESH_INVARIANTS = r"""
+import jax
+from repro.runtime import LocalRuntime, SimRuntime, build_mesh
+from repro.launch.mesh import make_elastic_mesh
+
+rt = LocalRuntime(axis_name="data")
+assert rt.pool_size == 8 and rt.n_shards == 8
+assert rt.process_role == (0, 1, True)
+
+# mesh shape/axis invariants at every subset width
+for n in (1, 3, 8):
+    m = rt.mesh(n_shards=n)
+    assert m.shape == {"data": n}, m.shape
+    assert m.axis_names == ("data",)
+    assert [d.id for d in m.devices.flat] == list(range(n))
+    # identical device sets -> the identical Mesh OBJECT (jit cache key)
+    assert rt.mesh(n_shards=n) is m
+
+# exclusion shifts the subset; the excluded id never appears
+m = rt.mesh(n_shards=4, exclude=(1,))
+assert [d.id for d in m.devices.flat] == [0, 2, 3, 4]
+
+# make_elastic_mesh delegates to the same selection rules (satellite 1)
+m2 = make_elastic_mesh(4, exclude=(1,))
+assert [d.id for d in m2.devices.flat] == [0, 2, 3, 4]
+try:
+    make_elastic_mesh(8, exclude=(3,))
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "device id(s) [3]" in str(e), e
+
+# reshard_devices: id -> device, order-preserving, quarantine-checked
+devs = rt.reshard_devices([5, 2, 0])
+assert [d.id for d in devs] == [5, 2, 0]
+rt.mark_failed(5)
+assert rt.pool_size == 7 and 5 in rt.failed_ids
+try:
+    rt.reshard_devices([5])
+    raise SystemExit("expected quarantine error")
+except ValueError as e:
+    assert "quarantined" in str(e), e
+try:
+    rt.reshard_devices([99])
+    raise SystemExit("expected unknown-id error")
+except ValueError as e:
+    assert "unknown device id 99" in str(e), e
+
+# adopt_mesh preserves object identity through as_runtime
+from repro.runtime import as_runtime
+mesh = build_mesh(list(jax.devices())[:4], "data")
+rt2, mesh2, ax = as_runtime(mesh, "data")
+assert mesh2 is mesh and ax == "data" and rt2.kind == "local"
+assert rt2.mesh(list(mesh.devices.flat)) is mesh
+# explicit runtime pin keeps the caller's mesh (the elastic handoff)
+rt3, mesh3, _ = as_runtime(mesh, "data", runtime=rt)
+assert rt3 is rt and mesh3 is mesh
+
+# SimRuntime is a LocalRuntime topologically
+sim = SimRuntime()
+assert sim.pool_size == 8 and sim.kind == "sim"
+print("MESH-INVARIANTS-OK")
+"""
+
+
+def test_mesh_invariants_multidev():
+    out = run_multidev(MESH_INVARIANTS)
+    assert "MESH-INVARIANTS-OK" in out
+
+
+BOUNCE = r"""
+from repro.analysis.recompile import CompilationTracker, _bounce
+from repro.dqueue import ElasticDeviceQueue
+from repro.runtime import LocalRuntime
+
+# the wavecheck recompile guard's bounce, but on a runtime-constructed
+# queue: after the warm-up bounce, the identical membership/burst/width
+# bounce must hit only cached executables
+rt = LocalRuntime()
+eq = ElasticDeviceQueue(4, cap=16, payload_width=2, ops_per_shard=2,
+                        runtime=rt)
+with CompilationTracker() as warm:
+    _bounce(eq, K_a=2, K_b=3, grow_by=2)
+with CompilationTracker() as second:
+    _bounce(eq, K_a=2, K_b=3, grow_by=2)
+assert warm.count > 0, "tracker saw no compilation at all"
+assert second.count == 0, (
+    f"runtime-built elastic queue recompiled {second.count}x on a "
+    f"repeated membership bounce")
+# the runtime's mesh cache is the elastic wrapper's mesh cache
+assert eq._mesh_cache and rt._mesh_cache
+for key, mesh in eq._mesh_cache.items():
+    assert rt._mesh_cache[key] is mesh
+print("BOUNCE-OK", warm.count)
+"""
+
+
+def test_zero_recompile_bounce_on_runtime():
+    out = run_multidev(BOUNCE)
+    assert "BOUNCE-OK" in out
+
+
+SIM_CHARGING = r"""
+import numpy as np
+from repro.dqueue import ElasticDeviceQueue
+from repro.runtime import LatencyModel, SimRuntime
+
+lat = LatencyModel(base_us=100.0, per_mib_us=8.0)
+sim = SimRuntime(latency=lat)
+q = ElasticDeviceQueue(4, cap=16, payload_width=2, ops_per_shard=4,
+                       runtime=sim)
+n = q.n_shards * q.L
+
+# one step = a 1-wave burst = 2 all_to_all launches
+q.step(np.zeros(n, bool), np.zeros(n, bool), np.zeros((n, 2), np.int32))
+env = SimRuntime.wave_envelope_bytes(q.n_shards, q.L, q.W)
+assert sim.counts == {"all_to_all": 2}, sim.counts
+assert sim.bytes_by_kind == {"all_to_all": 2 * env}
+expect = 2 * lat.latency_s("all_to_all", env)
+assert abs(sim.sim_time_s - expect) < 1e-12, (sim.sim_time_s, expect)
+
+# a K=4 pipelined burst adds K+1 = 5 launches
+K = 4
+q.run_waves(np.zeros((K, n), bool), np.zeros((K, n), bool),
+            np.zeros((K, n, 2), np.int32))
+assert sim.counts == {"all_to_all": 7}, sim.counts
+expect += 5 * lat.latency_s("all_to_all", env)
+assert abs(sim.sim_time_s - expect) < 1e-12
+
+# a migration wave: 1 a2a of bytes_moved + 2 scalar all_reduce, and the
+# stats dict gains the charged sim_s
+q.grow(2)
+mig = q.migrations[-1]
+assert "sim_s" in mig and mig["sim_s"] > 0
+assert sim.counts["all_reduce"] == 2
+expect_mig = (lat.latency_s("all_to_all", int(mig["bytes_moved"]))
+              + 2 * lat.latency_s("all_reduce", 4))
+assert abs(mig["sim_s"] - expect_mig) < 1e-12
+assert sim.snapshot()["sim_time_s"] == sim.sim_time_s
+print("SIM-CHARGING-OK")
+"""
+
+
+def test_sim_runtime_charges_the_wave_stack():
+    out = run_multidev(SIM_CHARGING)
+    assert "SIM-CHARGING-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: LEAVE keyed by stable device id — no resurrection
+# ---------------------------------------------------------------------------
+
+NO_RESURRECTION = r"""
+import numpy as np
+import tempfile
+from repro.dqueue import ElasticDeviceQueue
+from repro.fault import (FailureInjector, elastic_queue_policy,
+                         run_with_restarts)
+
+q = ElasticDeviceQueue(4, cap=64, payload_width=2, ops_per_shard=4)
+dead = q.device_ids[3]              # stable id of mesh-index-3's device
+got = []
+
+def step_fn(state, step):
+    n = q.n_shards * q.L
+    e = np.zeros(n, bool); v = np.zeros(n, bool)
+    pw = np.zeros((n, 2), np.int32)
+    e[:4] = v[:4] = True
+    pw[:4, 0] = np.arange(step * 4, step * 4 + 4)
+    v[4:6] = True
+    _, _, dv, dok, _ = q.step(e, v, pw)
+    dv, dok = np.asarray(dv), np.asarray(dok)
+    got.extend(int(dv[i, 0]) for i in range(n) if dok[i])
+    return {"done": np.int64(step + 1)}
+
+# the failure is keyed by DEVICE id (satellite 2): after the LEAVE the
+# regrow-JOIN must draw a replacement from the live pool, never the dead
+# device — pre-PR 10 the spare list was recomputed from jax.devices() so
+# the dead device was the first spare and state resurrected onto it
+inj = FailureInjector(device_fail_at={2: dead})
+with tempfile.TemporaryDirectory() as d:
+    _, metrics = run_with_restarts(
+        init_state=lambda: {"done": np.int64(0)},
+        step_fn=step_fn, n_steps=8, ckpt_dir=d, ckpt_every=100,
+        injector=inj, elastic=elastic_queue_policy(q, regrow_after=2),
+        log=lambda *a: None)
+assert metrics["leaves"] == 1 and metrics["joins"] == 1, metrics
+assert metrics["restarts"] == 0 and metrics["steps_run"] == 8, metrics
+assert q.n_shards == 4
+assert dead not in q.device_ids, (dead, q.device_ids)
+assert dead in q.runtime.failed_ids
+# the dead device stays quarantined against FUTURE growth too
+q.grow(2); q.shrink([4, 5])
+assert dead not in q.device_ids
+
+# FIFO stream intact across LEAVE + JOIN
+while q.size > 0:
+    n = q.n_shards * q.L
+    _, _, dv, dok, _ = q.step(np.zeros(n, bool), np.ones(n, bool),
+                              np.zeros((n, 2), np.int32))
+    dv, dok = np.asarray(dv), np.asarray(dok)
+    got.extend(int(dv[i, 0]) for i in range(n) if dok[i])
+assert got == list(range(32)), got
+print("NO-RESURRECTION-OK")
+"""
+
+
+def test_leave_regrow_never_resurrects_dead_device():
+    out = run_multidev(NO_RESURRECTION)
+    assert "NO-RESURRECTION-OK" in out
+
+
+SIM_FAILURE = r"""
+import numpy as np
+import tempfile
+from repro.dqueue import ElasticDeviceQueue
+from repro.fault import elastic_queue_policy, run_with_restarts
+from repro.runtime import SimRuntime
+
+# SimRuntime doubles as the injector: its maybe_fail raises the
+# device-id-keyed ShardFailure on schedule
+sim = SimRuntime(fail_at={1: 2})
+q = ElasticDeviceQueue(4, cap=64, payload_width=2, ops_per_shard=4,
+                       runtime=sim)
+
+def step_fn(state, step):
+    n = q.n_shards * q.L
+    q.step(np.zeros(n, bool), np.zeros(n, bool),
+           np.zeros((n, 2), np.int32))
+    return state
+
+with tempfile.TemporaryDirectory() as d:
+    _, metrics = run_with_restarts(
+        init_state=lambda: {}, step_fn=step_fn, n_steps=4, ckpt_dir=d,
+        ckpt_every=100, injector=sim,
+        elastic=elastic_queue_policy(q), log=lambda *a: None)
+assert metrics["leaves"] == 1 and metrics["restarts"] == 0, metrics
+assert 2 not in q.device_ids and 2 in sim.failed_ids
+print("SIM-FAILURE-OK")
+"""
+
+
+def test_sim_runtime_scheduled_failure_drives_leave():
+    out = run_multidev(SIM_FAILURE)
+    assert "SIM-FAILURE-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# LocalRuntime parity: the runtime path is bit-identical to the mesh path
+# ---------------------------------------------------------------------------
+
+PARITY = r"""
+import numpy as np
+import jax
+from repro.dqueue import DeviceQueue
+from repro.launch.mesh import make_elastic_mesh
+from repro.runtime import LocalRuntime
+
+mesh = make_elastic_mesh(4)
+rng = np.random.default_rng(7)
+n = 4 * 4
+args = []
+for k in range(6):
+    e = rng.random(n) < 0.5
+    v = rng.random(n) < 0.8
+    pw = rng.integers(0, 1 << 20, (n, 2)).astype(np.int32)
+    args.append((e, v, pw))
+
+def drive(q):
+    st = q.init_state()
+    outs = []
+    for e, v, pw in args:
+        st, pos, matched, dv, dok, ovf = q.step(st, e, v, pw)
+        outs.append((np.asarray(pos), np.asarray(matched),
+                     np.asarray(dv), np.asarray(dok)))
+    return outs, jax.tree.leaves(st)
+
+a, sa = drive(DeviceQueue(mesh, "data", cap=16, payload_width=2,
+                          ops_per_shard=4))
+b, sb = drive(DeviceQueue(LocalRuntime(devices=list(mesh.devices.flat)),
+                          cap=16, payload_width=2, ops_per_shard=4))
+for (xa, xb) in zip(a, b):
+    for ya, yb in zip(xa, xb):
+        assert (ya == yb).all()
+for la, lb in zip(sa, sb):
+    assert (np.asarray(la) == np.asarray(lb)).all()
+print("PARITY-OK")
+"""
+
+
+def test_local_runtime_parity_with_mesh_path():
+    out = run_multidev(PARITY)
+    assert "PARITY-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# DistributedRuntime: 2 real processes over localhost TCP
+# ---------------------------------------------------------------------------
+
+DIST_CHILD = r"""
+import collections
+import numpy as np
+from repro.runtime import DistributedRuntime
+
+rt = DistributedRuntime.from_env()
+role = rt.process_role
+assert role.count == 2 and rt.pool_size == 8
+assert len(rt.local_devices()) == 4
+
+# ---------------- FIFO queue differential under a grow/shrink schedule -
+from repro.dqueue import ElasticDeviceQueue
+
+q = ElasticDeviceQueue(6, cap=16, payload_width=2, ops_per_shard=4,
+                       runtime=rt)
+oracle = collections.deque()
+got, want = [], []
+rng = np.random.default_rng(42)   # same seed in BOTH processes
+
+def wave():
+    n = q.n_shards * q.L
+    e = rng.random(n) < 0.6
+    v = rng.random(n) < 0.9
+    pw = np.zeros((n, 2), np.int32)
+    pw[:, 0] = rng.integers(0, 1 << 20, n)
+    _, _, dv, dok, _ = q.step(e, v, pw)
+    dv = rt.to_host(dv); dok = rt.to_host(dok)
+    for i in range(n):
+        if e[i] and v[i]:
+            oracle.append(int(pw[i, 0]))
+    for i in range(n):
+        if dok[i]:
+            got.append(int(dv[i, 0]))
+            want.append(oracle.popleft())
+
+wave(); wave()
+q.grow(2)                       # JOIN: 6 -> 8 shards, cross-process reshard
+assert q.n_shards == 8
+wave()
+q.shrink([6, 7])                # LEAVE back to 6
+assert q.n_shards == 6
+wave()
+# drain
+while q.size > 0:
+    n = q.n_shards * q.L
+    _, _, dv, dok, _ = q.step(np.zeros(n, bool), np.ones(n, bool),
+                              np.zeros((n, 2), np.int32))
+    dv = rt.to_host(dv); dok = rt.to_host(dok)
+    for i in range(n):
+        if dok[i]:
+            got.append(int(dv[i, 0]))
+            want.append(oracle.popleft())
+assert got == want and not oracle, (len(got), len(want), len(oracle))
+
+# ---------------- LIFO stack: conservation across a membership bounce --
+from repro.dqueue import ElasticDeviceStack
+
+s = ElasticDeviceStack(6, cap=16, payload_width=2, ops_per_shard=4,
+                       runtime=rt)
+n = s.n_shards * s.L
+pw = np.zeros((n, 2), np.int32)
+pw[:, 0] = np.arange(1, n + 1)
+s.step(np.ones(n, bool), np.ones(n, bool), pw)
+s.grow(1); s.shrink([6])
+popped = []
+while s.size > 0:
+    m = s.n_shards * s.L
+    _, _, dv, dok, _ = s.step(np.zeros(m, bool), np.ones(m, bool),
+                              np.zeros((m, 2), np.int32))
+    dv = rt.to_host(dv); dok = rt.to_host(dok)
+    popped.extend(int(dv[i, 0]) for i in range(m) if dok[i])
+assert sorted(popped) == list(range(1, n + 1)), popped
+
+rt.sync()
+print(f"DIST-OK proc={role.index} served={len(got)} mig="
+      f"{len(q.migrations)}")
+"""
+
+
+def test_distributed_two_process_differential():
+    from repro.runtime import launch_localhost
+    results = launch_localhost(code=DIST_CHILD, n_procs=2, devs_per_proc=4,
+                               timeout=420.0)
+    assert len(results) == 2
+    for r in results:
+        assert r.returncode == 0
+        assert f"DIST-OK proc={r.process_id}" in r.stdout, r.stdout
+    # both processes served the same (replicated) stream
+    served = {r.stdout.split("served=")[1].split()[0] for r in results}
+    assert len(served) == 1, served
